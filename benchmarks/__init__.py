@@ -1,0 +1,11 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+  * attention_softmax — §3's synchronized-update overhead (paper: 18.8 %)
+  * decode_engine     — decode-phase engine comparison (Fig. 1/10/12/13)
+  * prefill_engine    — prefill-phase comparison (Fig. 11)
+  * flat_gemm_sweep   — flat-GEMM B_N trade-off (Fig. 7, Eq. 5)
+  * dispatch_table    — heuristic-dataflow inflection points (Fig. 9)
+  * roofline_report   — §Roofline terms from the dry-run artifacts
+
+``python -m benchmarks.run`` executes all of them.
+"""

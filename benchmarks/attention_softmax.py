@@ -1,0 +1,73 @@
+"""Paper §3 — cost of the synchronized partial-softmax update.
+
+The paper profiles 18.8 % attention overhead from the synchronized update
+on an A100. This container has no TPU, so we report the claim through two
+channels:
+
+  1. **wall-clock (CPU, XLA)** — jitted decode attention, unified-max vs
+     synchronized (online-max) scheme, across KV lengths. Directional only.
+  2. **structural** — (a) HLO op counts: the sync scheme's extra max/rescale
+     chain is visible as `maximum`/`multiply`-chain ops that the async
+     scheme simply does not emit; (b) the per-chunk serial-dependency count
+     of the Pallas kernels (ops on the carried accumulator per KV chunk):
+     sync = 5 (max-merge, 2 rescale-multiplies, 2 adds),
+     async = 2 (2 adds) — order-independent, pipelinable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, hlo_op_counts, time_jitted
+from repro.kernels import ref
+
+
+def run(quick: bool = False) -> list[dict]:
+    b, hq, hk, d = 4, 8, 2, 64
+    rows = []
+    kvs = (1024, 4096) if quick else (1024, 4096, 16384)
+    print("\n== attention_softmax: sync vs unified-max decode (paper §3) ==")
+    print(fmt_row("kv_len", "sync_us", "async_us", "sync_overhead",
+                  widths=[10, 12, 12, 14]))
+    for kv in kvs:
+        ks = jax.random.split(jax.random.PRNGKey(kv), 3)
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, kv, hk, d), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, kv, hk, d), jnp.float32)
+        lengths = jnp.full((b,), kv, jnp.int32)
+
+        sync = jax.jit(lambda q, k, v, l: ref.attention_decode_ref(q, k, v, l))
+        asyn = jax.jit(lambda q, k, v, l: ref.attention_decode_unified_max_ref(
+            q, k, v, l, phi=0.0)[0])
+        t_sync = time_jitted(sync, q, kc, vc, lengths)
+        t_async = time_jitted(asyn, q, kc, vc, lengths)
+        over = (t_sync - t_async) / t_sync * 100
+        print(fmt_row(kv, f"{t_sync*1e6:.0f}", f"{t_async*1e6:.0f}",
+                      f"{over:+.1f}%", widths=[10, 12, 12, 14]))
+        rows.append(dict(kv=kv, sync_us=t_sync * 1e6,
+                         async_us=t_async * 1e6, overhead_pct=over))
+
+    # structural channel: op counts in the compiled HLO
+    kv = kvs[0]
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, kv, hk, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, kv, hk, d), jnp.float32)
+    lengths = jnp.full((b,), kv, jnp.int32)
+    c_sync, _ = hlo_op_counts(
+        lambda q, k, v, l: ref.attention_decode_ref(q, k, v, l),
+        q, kc, vc, lengths)
+    c_async, _ = hlo_op_counts(
+        lambda q, k, v, l: ref.attention_decode_unified_max_ref(
+            q, k, v, l, phi=0.0)[0],
+        q, kc, vc, lengths)
+    print(f"  HLO ops  sync={c_sync}  async={c_async}")
+    print("  per-KV-chunk serial accumulator ops (Pallas kernels): "
+          "sync=5 (max-merge + 2 rescales + 2 adds), async=2 (2 adds)")
+    rows.append(dict(hlo_sync=c_sync, hlo_async=c_async,
+                     chunk_ops_sync=5, chunk_ops_async=2))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

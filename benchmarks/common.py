@@ -1,0 +1,34 @@
+"""Shared timing/measurement helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_jitted(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call of an already-jitted fn (CPU)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def hlo_op_counts(fn, *args, ops=("exponential", "maximum", "divide")):
+    """Count occurrences of HLO opcodes in the compiled module text —
+    the structural (hardware-independent) comparison channel."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    text = compiled.as_text()
+    return {op: text.count(f" {op}(") for op in ops}, compiled
+
+
+def fmt_row(*cols, widths=None) -> str:
+    widths = widths or [16] * len(cols)
+    return "".join(str(c).ljust(w) for c, w in zip(cols, widths))

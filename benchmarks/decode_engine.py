@@ -1,0 +1,74 @@
+"""Decode-phase engine benchmark (paper Fig. 1 / 10 / 12 / 13).
+
+End-to-end ``serve_step`` per-token latency on the smoke-scale model, with
+the paper's three techniques toggled:
+
+  * baseline       — synchronized softmax (T1 off), static XLA matmuls
+  * +T1            — unified-max softmax (async decode attention)
+  * +T1+T3         — heuristic dataflow table routing matmuls (interpret-
+                     mode Pallas kernels are *not* timed here — they run
+                     Python per element; the T2 kernel's effect is measured
+                     structurally in flat_gemm_sweep)
+
+CPU wall numbers are directional; the cross-engine claims in the paper map
+to the roofline report on TPU terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, time_jitted
+from repro import configs
+from repro.config import SoftmaxPhiConfig
+from repro.models.api import get_model
+from repro.models.layers import LayerCtx
+
+
+def _serve_fn(cfg, api, ctx):
+    def step(params, toks, cache, lengths):
+        return api.decode_step(ctx, params, toks, cache, lengths)
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def run(quick: bool = False) -> list[dict]:
+    print("\n== decode_engine: per-token serve_step latency ==")
+    rows = []
+    archs = ["qwen2-0.5b"] if quick else ["qwen2-0.5b", "rwkv6-1.6b",
+                                          "dbrx-132b"]
+    print(fmt_row("arch", "batch", "baseline_us", "+T1_us", "speedup",
+                  widths=[14, 7, 13, 12, 9]))
+    for arch in archs:
+        cfg = configs.smoke(configs.get(arch))
+        api = get_model(cfg)
+        params = api.init_params(jax.random.PRNGKey(0))
+        b, s = 8, 1024
+        toks = jnp.arange(b, dtype=jnp.int32) + 1
+        lengths = jnp.full((b,), s - 1, jnp.int32)
+
+        def bench(phi_active):
+            phi_cfg = (SoftmaxPhiConfig(phi=0.0)
+                       if phi_active else SoftmaxPhiConfig(enabled=False))
+            c = dataclasses.replace(cfg, softmax_phi=phi_cfg)
+            api_c = get_model(c)
+            ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
+            fn = _serve_fn(c, api_c, ctx)
+            cache = api_c.init_cache(b, s)
+            t = time_jitted(
+                lambda p, tk, le: fn(p, tk, api_c.init_cache(b, s), le),
+                params, toks, lengths, warmup=1, iters=5)
+            return t
+
+        t_base = bench(False)
+        t_t1 = bench(True)
+        print(fmt_row(arch, b, f"{t_base*1e6:.0f}", f"{t_t1*1e6:.0f}",
+                      f"{t_base/t_t1:.2f}x", widths=[14, 7, 13, 12, 9]))
+        rows.append(dict(arch=arch, baseline_us=t_base * 1e6,
+                         t1_us=t_t1 * 1e6, speedup=t_base / t_t1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Heuristic-dataflow inflection points (paper Fig. 9).
+
+Builds the offline dispatch table for Llama2-7B (the paper's example: four
+[K, N] shapes) and for each assigned architecture, printing M1 (ImplA->
+ImplB) and M2 (ImplB->ImplC) per [K, N] from the v5e analytical backend
+(the real-TPU wallclock backend plugs into the same decision flow)."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_row
+from repro import configs
+from repro.core import dispatch as dsp
+
+
+def run(quick: bool = False) -> list[dict]:
+    print("\n== dispatch_table: T3 inflection points (Fig. 9) ==")
+    rows = []
+    archs = ["llama2-7b"] if quick else [
+        "llama2-7b", "qwen2-0.5b", "dbrx-132b", "rwkv6-1.6b"]
+    for arch in archs:
+        cfg = configs.get(arch)
+        table = dsp.tune_table(cfg)
+        print(f"  {arch}:")
+        print(fmt_row("    workload", "[K, N]", "M1(A->B)", "M2(B->C)",
+                      widths=[18, 18, 10, 10]))
+        seen = set()
+        for gs in dsp.model_gemm_shapes(cfg):
+            if (gs.k, gs.n) in seen:
+                continue
+            seen.add((gs.k, gs.n))
+            e = table.entries[(gs.k, gs.n)]
+            print(fmt_row(f"    {gs.name}", f"[{gs.k}, {gs.n}]", e.m1, e.m2,
+                          widths=[18, 18, 10, 10]))
+            rows.append(dict(arch=arch, name=gs.name, k=gs.k, n=gs.n,
+                             m1=e.m1, m2=e.m2))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Prefill-phase benchmark (paper Fig. 11): time-to-first-token of the
+``prefill`` step with T1 on/off, across prompt lengths."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, time_jitted
+from repro import configs
+from repro.config import SoftmaxPhiConfig
+from repro.models.api import get_model
+from repro.models.layers import LayerCtx
+
+
+def run(quick: bool = False) -> list[dict]:
+    print("\n== prefill_engine: time-to-first-token ==")
+    rows = []
+    cfg0 = configs.smoke(configs.get("qwen2-0.5b"))
+    lens = (256,) if quick else (256, 1024)
+    print(fmt_row("arch", "prompt", "baseline_ms", "+T1_ms", "speedup",
+                  widths=[14, 8, 13, 10, 9]))
+    for plen in lens:
+        b = 4
+
+        def bench(phi_active):
+            phi_cfg = (SoftmaxPhiConfig(phi=0.0)
+                       if phi_active else SoftmaxPhiConfig(enabled=False))
+            c = dataclasses.replace(cfg0, softmax_phi=phi_cfg)
+            api = get_model(c)
+            params = api.init_params(jax.random.PRNGKey(0))
+            ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
+            toks = jnp.ones((b, plen), jnp.int32)
+            lengths = jnp.full((b,), plen, jnp.int32)
+            cache = api.init_cache(b, plen)
+
+            fn = jax.jit(lambda p, t, l, c_: api.prefill(ctx, p, t, l, c_))
+            return time_jitted(fn, params, toks, lengths, cache,
+                               warmup=1, iters=5)
+
+        t_base = bench(False)
+        t_t1 = bench(True)
+        print(fmt_row("qwen2-0.5b", plen, f"{t_base*1e3:.1f}",
+                      f"{t_t1*1e3:.1f}", f"{t_base/t_t1:.2f}x",
+                      widths=[14, 8, 13, 10, 9]))
+        rows.append(dict(prompt=plen, baseline_ms=t_base * 1e3,
+                         t1_ms=t_t1 * 1e3, speedup=t_base / t_t1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

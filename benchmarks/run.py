@@ -1,0 +1,47 @@
+"""Run every benchmark: ``PYTHONPATH=src python -m benchmarks.run``.
+
+``--quick`` trims sweep sizes (used by CI-style smoke checks).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="artifacts/bench_results.json")
+    args = ap.parse_args()
+
+    from benchmarks import (attention_softmax, decode_engine, dispatch_table,
+                            flat_gemm_sweep, prefill_engine, roofline_report)
+
+    results = {}
+    for name, mod in [
+        ("attention_softmax", attention_softmax),
+        ("flat_gemm_sweep", flat_gemm_sweep),
+        ("dispatch_table", dispatch_table),
+        ("decode_engine", decode_engine),
+        ("prefill_engine", prefill_engine),
+        ("roofline_report", roofline_report),
+    ]:
+        t0 = time.time()
+        try:
+            results[name] = mod.run(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"[FAIL] {name}: {e!r}")
+            results[name] = {"error": repr(e)}
+        print(f"  [{name} done in {time.time()-t0:.1f}s]")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print(f"\nall benchmarks done -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

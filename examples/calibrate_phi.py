@@ -1,0 +1,57 @@
+"""φ calibration workflow (paper Fig. 5): collect attention-logit
+statistics over calibration batches, derive the unified max value + safe
+band, and show the OPT-style disable path for wide-ranged models.
+
+    PYTHONPATH=src python examples/calibrate_phi.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import phi as phi_mod
+from repro.models import layers as L
+from repro.models.api import get_model, make_synthetic_batch
+from repro.models.layers import LayerCtx
+from repro.config import ShapeConfig
+
+
+def main():
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    ctx = LayerCtx(cfg=cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    # run a few calibration batches through layer-0 QK to collect stats
+    stats = phi_mod.LogitStats()
+    for i in range(4):
+        batch = make_synthetic_batch(
+            cfg, ShapeConfig("cal", 128, 2, "train"), jax.random.PRNGKey(i))
+        x = L.embed(ctx, params, batch["tokens"])
+        p0 = jax.tree.map(lambda a: a[0], params["layers"])
+        h = L.norm(cfg, p0["attn_norm"], x)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        q, k, _ = L.attention_qkv(ctx, p0["attn"], h, positions)
+        stats = phi_mod.collect_attention_logit_stats(q, k, stats=stats)
+
+    print(f"logit stats over {stats.count} samples: "
+          f"mean={stats.mean:+.3f} std={stats.std:.3f} "
+          f"range=[{stats.minimum:+.2f}, {stats.maximum:+.2f}]")
+    cal = phi_mod.calibrate(stats)
+    print(f"calibrated: phi={cal.phi:+.3f} band=({cal.band[0]:+.1f}, "
+          f"{cal.band[1]:+.1f}) active={cal.active}")
+
+    # wire it into the model config — every attention op now runs async
+    cfg_t1 = dataclasses.replace(cfg, softmax_phi=cal)
+    print(f"model '{cfg_t1.name}' now runs T1 with phi={cal.phi:+.3f}")
+
+    # the OPT case: a model whose logits are too wide -> T1 disabled
+    wide = phi_mod.LogitStats().update(jnp.asarray([-400.0, 0.0, 390.0]))
+    opt_cal = phi_mod.calibrate(wide)
+    print(f"wide-range model (OPT case): active={opt_cal.active} "
+          "-> engine uses the synchronized scheme everywhere")
+
+
+if __name__ == "__main__":
+    main()

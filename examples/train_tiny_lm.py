@@ -1,0 +1,61 @@
+"""End-to-end driver: train a small (~6M-param) qwen2-family model for a few
+hundred steps on CPU with the full production substrate — deterministic
+data pipeline, AdamW, async checkpoints, preemption-safe loop.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+
+Interrupt it (Ctrl-C) and run again: it resumes from the last checkpoint
+and the loss curve continues exactly where it left off.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.config import RunConfig, ShapeConfig
+from repro.models.api import get_model
+from repro.models.layers import LayerCtx
+from repro.training.loop import train_loop
+from repro.training.train_state import TrainState, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    # ~25M params: deepen the smoke config a bit for a real-ish curve
+    cfg = dataclasses.replace(
+        configs.smoke(configs.get("qwen2-0.5b")),
+        num_layers=4, d_model=256, d_ff=1024, vocab_size=8192,
+        num_heads=8, num_kv_heads=2, head_dim=32,
+    )
+    print(f"model: {cfg.name}  params ~{cfg.param_count()/1e6:.1f}M")
+    shape = ShapeConfig("tiny_train", seq_len=256, global_batch=8,
+                        kind="train")
+    run = RunConfig(
+        learning_rate=3e-3, warmup_steps=20, total_steps=args.steps,
+        checkpoint_every=100,
+        checkpoint_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ex_"),
+    )
+    api = get_model(cfg)
+    ctx = LayerCtx(cfg=cfg, use_pallas=False)
+    step = jax.jit(make_train_step(api, ctx, run), donate_argnums=(0,))
+
+    res = train_loop(
+        model_cfg=cfg, shape=shape, run=run, train_step=step,
+        init_state=lambda: TrainState.create(
+            api.init_params(jax.random.PRNGKey(0))),
+        log_every=25,
+    )
+    print(f"\nloss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} over "
+          f"{len(res.losses)} steps "
+          f"(resumed from {res.restored_from})")
+    assert res.losses[-1] < res.losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Dry-run artifact analysis: HLO collective parsing + roofline terms."""
+from repro.analysis import hlo, roofline  # noqa: F401

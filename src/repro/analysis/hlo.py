@@ -1,0 +1,106 @@
+"""Parse compiled HLO text for the roofline's collective term.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we sum the
+result-shape bytes of every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` op in the HLO
+text, per computation — callers that lower ``lax.scan``-based programs supply
+trip-count multipliers for while-body computations (XLA reports a loop body
+once; see EXPERIMENTS.md §Methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = f32[1,2,3]{2,1,0} all-reduce(` — possibly tuple-typed
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[[^\]=]*\](?:\{[^}]*\})?"
+    r"(?:,\s*[a-z0-9]+\[[^\]=]*\](?:\{[^}]*\})?)*\)?)\s+"
+    r"(?P<kind>" + "|".join(COLLECTIVE_KINDS) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z0-9]+)\[(?P<dims>[^\]=]*)\]")
+_COMP_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$"
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dtype")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims").strip()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                d = d.strip()
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Bytes per collective kind, per computation."""
+
+    by_comp: Dict[str, Dict[str, int]]
+    counts: Dict[str, int]
+
+    def total_bytes(self, multipliers: Dict[str, int] | None = None) -> int:
+        """Total collective bytes; ``multipliers`` maps a substring of a
+        computation name (e.g. ``"while"``) to its trip count."""
+        multipliers = multipliers or {}
+        total = 0
+        for comp, kinds in self.by_comp.items():
+            mult = 1
+            for key, m in multipliers.items():
+                if key in comp:
+                    mult = m
+                    break
+            total += mult * sum(kinds.values())
+        return total
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for kinds in self.by_comp.values():
+            for kind, b in kinds.items():
+                out[kind] += b
+        return dict(out)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    by_comp: Dict[str, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
+    counts: Dict[str, int] = defaultdict(int)
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            comp = cm.group("name")
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        if kind + "-done(" in line:
+            continue  # avoid double counting async pairs: count -start only
+        by_comp[comp][kind] += _shape_bytes(m.group("type"))
+        counts[kind] += 1
+    return CollectiveStats(
+        by_comp={k: dict(v) for k, v in by_comp.items()},
+        counts=dict(counts),
+    )

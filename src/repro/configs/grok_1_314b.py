@@ -1,0 +1,17 @@
+"""Grok-1 314B — MoE, 8 experts top-2. [hf:xai-org/grok-1; unverified]"""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    head_dim=128,
+    activation="gelu",
+    moe=MoEConfig(num_experts=8, num_experts_per_tok=2),
+    source="hf:xai-org/grok-1",
+)

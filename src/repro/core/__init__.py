@@ -1,0 +1,9 @@
+"""The paper's contributions as composable features.
+
+  * T1 — :mod:`repro.core.softmax` (unified-max partial softmax + combines)
+          and :mod:`repro.core.phi` (phi calibration / per-arch registry).
+  * T2 — surfaced through :mod:`repro.kernels.flat_gemm`.
+  * T3 — :mod:`repro.core.dispatch` (heuristic dataflow lookup table).
+  * :mod:`repro.core.attention` — the attention front door the model zoo uses.
+"""
+from repro.core import dispatch, phi, softmax  # noqa: F401

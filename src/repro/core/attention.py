@@ -1,0 +1,123 @@
+"""Distributed decode attention — T1's pod-scale payoff, explicitly.
+
+``decode_attention_sharded`` runs split-KV decode attention under
+``shard_map``: each ``model``-axis shard owns a contiguous S/TP slice of
+the KV cache, computes its partial ``(num, den)`` with the unified max
+value φ, and the cross-shard combine is
+
+  * **async (T1)** — ``psum(num), psum(den)``: one additive reduction
+    (the two psums fuse into a single variadic all-reduce in XLA). No max
+    exchange, no rescale — Eq. 4's outer accumulation as a collective.
+  * **sync (baseline)** — ``pmax(m)`` then rescale then psum: the
+    synchronized update of Eq. 2 as a collective; one extra all-reduce
+    plus a rescale multiply on every shard, every token, every layer.
+
+The per-shard math runs the Pallas decode kernel on TPU
+(``use_pallas=True``) or the jnp oracle on CPU. The GSPMD-automatic path
+(ops.attention_decode + sharding constraints) compiles to the same
+schedule; this explicit version is the auditable artifact and the unit
+of the attention hillclimb in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import SoftmaxPhiConfig
+from repro.core import softmax as smx
+
+
+def _local_partial_async(q, k_loc, v_loc, start, lengths, phi, scale):
+    """One shard's (num, den, max_centered) over its KV slice.
+
+    q: (B, HQ, D); k_loc/v_loc: (B, S_loc, HK, D); start: scalar global
+    offset of this shard's slice; lengths: (B,).
+    """
+    b, hq, d = q.shape
+    s_loc, hk = k_loc.shape[1], k_loc.shape[2]
+    groups = hq // hk
+    kf = jnp.repeat(k_loc, groups, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_loc, groups, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kf)
+    pos = start + jnp.arange(s_loc)
+    valid = pos[None, None, :] < lengths[:, None, None]
+    return smx.async_partial(
+        s, vf.swapaxes(1, 2), phi, valid=valid)
+
+
+def _local_partial_sync(q, k_loc, v_loc, start, lengths, scale):
+    b, hq, d = q.shape
+    s_loc, hk = k_loc.shape[1], k_loc.shape[2]
+    groups = hq // hk
+    kf = jnp.repeat(k_loc, groups, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_loc, groups, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bhd,bkhd->bhk", qf, kf)
+    pos = start + jnp.arange(s_loc)
+    valid = pos[None, None, :] < lengths[:, None, None]
+    return smx.sync_partial(s, vf.swapaxes(1, 2), valid=valid)
+
+
+def decode_attention_sharded(
+    mesh: Mesh,
+    q: jax.Array,          # (B, HQ, D)
+    k_cache: jax.Array,    # (B, S, HK, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,    # (B,)
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    scale: Optional[float] = None,
+    model_axis: str = "model",
+    batch_axes: tuple = ("data",),
+) -> jax.Array:
+    """Split-KV decode attention over the ``model`` mesh axis."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s_global = k_cache.shape[1]
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis]
+    assert s_global % tp == 0, (s_global, tp)
+    s_loc = s_global // tp
+
+    use_async = phi_cfg.active
+
+    def body(q_l, k_l, v_l, len_l):
+        idx = jax.lax.axis_index(model_axis)
+        start = idx * s_loc
+        if use_async:
+            part = _local_partial_async(
+                q_l, k_l, v_l, start, len_l, phi_cfg.phi, scale)
+            out, _mc = smx.combine_async_collective(part, model_axis)
+        else:
+            part = _local_partial_sync(q_l, k_l, v_l, start, len_l, scale)
+            out = smx.combine_sync_collective(part, model_axis)
+        return out.astype(q_l.dtype)
+
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),
+            P(bspec, model_axis, None, None),
+            P(bspec, model_axis, None, None),
+            P(bspec),
+        ),
+        out_specs=P(bspec, None, None),
+        axis_names={model_axis, *batch_axes},
+    )
+    return fn(q, k_cache, v_cache, lengths)
+
+
+def make_decode_attention_fn(mesh, rules, phi_cfg):
+    """Adapter producing a ``LayerCtx.decode_attention_fn``."""
+    return functools.partial(
+        decode_attention_sharded, mesh,
+        phi_cfg=phi_cfg,
+        model_axis=rules.model_axis,
+        batch_axes=tuple(rules.act_batch_axes),
+    )

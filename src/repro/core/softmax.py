@@ -1,0 +1,118 @@
+"""T1 math — unified-max partial softmax and the two combine schemes.
+
+The distributed decode path (sequence-split attention across the ``model``
+mesh axis) uses these helpers inside ``shard_map``: each shard produces a
+partial ``(num, den)`` from its KV slice, and the combine is
+
+  * async (T1):  ``psum(num), psum(den)`` — one additive reduction, because a
+    unified φ makes partials directly addable (Eq. 4).
+  * sync (baseline): ``pmax(m)`` first, then rescale each shard's partial by
+    ``exp(m_local − m_global)``, then ``psum`` — the synchronized update of
+    Eq. 2, which costs an extra collective plus a rescale on every shard.
+
+The removal of that max-collective is the pod-scale payoff of T1 and is
+visible in the dry-run's HLO collective schedule.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AsyncPartial(NamedTuple):
+    """Order-independent softmax partial (Eq. 4 inner accumulations)."""
+
+    num: jax.Array    # Σ e^{s−φ} · v   — (..., d)
+    den: jax.Array    # Σ e^{s−φ}       — (...,)
+    max_centered: jax.Array  # max(s−φ)  — (...,) overflow statistic
+
+
+class SyncPartial(NamedTuple):
+    """Max-carrying partial (Eq. 2) — needs synchronized combination."""
+
+    num: jax.Array
+    den: jax.Array
+    m: jax.Array      # local max
+
+
+def async_partial(
+    s: jax.Array,          # (..., kv) pre-softmax logits
+    v: jax.Array,          # (..., kv, d)
+    phi: float,
+    valid: jax.Array | None = None,
+) -> AsyncPartial:
+    centered = s - phi
+    if valid is not None:
+        e = jnp.where(valid, jnp.exp(centered), 0.0)
+        mc = jnp.max(jnp.where(valid, centered, -jnp.inf), axis=-1)
+    else:
+        e = jnp.exp(centered)
+        mc = jnp.max(centered, axis=-1)
+    num = jnp.einsum("...k,...kd->...d", e, v)
+    den = jnp.sum(e, axis=-1)
+    return AsyncPartial(num, den, mc)
+
+
+def sync_partial(
+    s: jax.Array,
+    v: jax.Array,
+    valid: jax.Array | None = None,
+) -> SyncPartial:
+    if valid is not None:
+        s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(s - safe_m[..., None])
+    e = jnp.where(jnp.isfinite(s), e, 0.0)
+    num = jnp.einsum("...k,...kd->...d", e, v)
+    den = jnp.sum(e, axis=-1)
+    return SyncPartial(num, den, m)
+
+
+# -- single-host combines (tree-reduction over a list of partials) -----------
+
+
+def combine_async(partials: list[AsyncPartial]) -> tuple[jax.Array, jax.Array]:
+    """Additive combine: returns (out, max_centered)."""
+    num = sum(p.num for p in partials)
+    den = sum(p.den for p in partials)
+    mc = jnp.stack([p.max_centered for p in partials]).max(0)
+    return num / den[..., None], mc
+
+
+def combine_sync(partials: list[SyncPartial]) -> jax.Array:
+    """Synchronized combine: global max, rescale every partial, then add."""
+    m = jnp.stack([p.m for p in partials]).max(0)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    num = sum(p.num * jnp.exp(jnp.where(jnp.isfinite(p.m), p.m, -jnp.inf)
+                              - safe_m)[..., None] for p in partials)
+    den = sum(p.den * jnp.exp(jnp.where(jnp.isfinite(p.m), p.m, -jnp.inf)
+                              - safe_m) for p in partials)
+    den = jnp.where(den == 0.0, 1.0, den)
+    return num / den[..., None]
+
+
+# -- collective combines (inside shard_map, over a named mesh axis) ----------
+
+
+def combine_async_collective(
+    p: AsyncPartial, axis: str
+) -> tuple[jax.Array, jax.Array]:
+    """T1 cross-shard combine: a single additive psum pair."""
+    num = jax.lax.psum(p.num, axis)
+    den = jax.lax.psum(p.den, axis)
+    mc = jax.lax.pmax(p.max_centered, axis)
+    return num / den[..., None], mc
+
+
+def combine_sync_collective(p: SyncPartial, axis: str) -> jax.Array:
+    """Baseline cross-shard combine: pmax + rescale + psum (Eq. 2)."""
+    m = jax.lax.pmax(p.m, axis)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    scale = jnp.exp(jnp.where(jnp.isfinite(p.m), p.m, -jnp.inf) - safe_m)
+    num = jax.lax.psum(p.num * scale[..., None], axis)
+    den = jax.lax.psum(p.den * scale, axis)
+    den = jnp.where(den == 0.0, 1.0, den)
+    return num / den[..., None]

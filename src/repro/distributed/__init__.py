@@ -1,0 +1,15 @@
+"""Distribution layer: named-axis sharding rules, compressed collectives,
+and the optional pipeline-parallel schedule.
+
+The mesh contract (DESIGN.md §5):
+  * single pod:  (data=16, model=16)
+  * multi-pod:   (pod=2, data=16, model=16)
+
+``pod`` + ``data`` together form the batch/FSDP axes; ``model`` is the
+tensor-parallel axis (and the sequence-split axis for T1 decode attention).
+"""
+from repro.distributed.sharding import (  # noqa: F401
+    Rules,
+    make_rules,
+    make_shard_fn,
+)

@@ -1,0 +1,176 @@
+"""Compressed cross-pod gradient reduction (int8 + error feedback).
+
+At (pod=2, data=16, model=16) the slowest collective in the training step is
+the cross-pod gradient all-reduce: it crosses the inter-pod links (DCI),
+which are far scarcer than intra-pod ICI. We compress that hop 2x (bf16 ->
+int8) with per-leaf scale factors and an **error-feedback** accumulator
+(Seide et al. / 1-bit-SGD lineage): the quantization residual is added back
+into the next step's gradient, so the *time-averaged* gradient is unbiased
+and SGD-style convergence is preserved.
+
+Integration: gradients are computed pod-locally (batch sharded over
+``pod``+``data``; params replicated over ``pod``), then
+:func:`crosspod_allreduce_int8` reconciles pods inside a ``shard_map`` that
+is *manual over the pod axis only* (``axis_names`` leaves data/model to
+GSPMD). The intra-pod reduce-scatter stays uncompressed bf16/f32 — ICI has
+16x the bandwidth, and compressing it would put the quantizer inside the
+FSDP reduce-scatter path for no roofline win.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# int8 quantizer with per-leaf scale
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (any float) -> (int8 codes, f32 scale). scale = amax/127."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_quantize_leaf(
+    g: jax.Array, err: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback quantize one leaf.
+
+    Returns (codes, scale, new_err) with new_err = (g + err) - deq(codes).
+    """
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    new_err = corrected - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def _pack_i8(q: jax.Array) -> tuple[jax.Array, int]:
+    """int8 array -> (int32 words, pad count). Byte-identical payload."""
+    flat = q.reshape(-1)
+    pad = (-flat.size) % 4
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return jax.lax.bitcast_convert_type(
+        flat.reshape(-1, 4), jnp.int32), pad
+
+
+def _unpack_i8(words: jax.Array, shape: tuple[int, ...],
+               pad: int) -> jax.Array:
+    flat = jax.lax.bitcast_convert_type(words, jnp.int8).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Cross-pod all-reduce of a gradient pytree
+# ---------------------------------------------------------------------------
+
+
+def zeros_error_state(grads: Any, npods: int) -> Any:
+    """Per-pod f32 error-feedback accumulators (part of TrainState).
+
+    Pod-local state is materialized as a leading pod axis of size
+    ``npods`` sharded over ``pod`` — the SPMD-native encoding of
+    "one private accumulator per pod".
+    """
+    return jax.tree.map(
+        lambda g: jnp.zeros((npods, *g.shape), jnp.float32), grads
+    )
+
+
+def crosspod_psum_int8(grads: Any, err: Any, axis: str = "pod"):
+    """Compressed mean over ``axis`` — call *inside* a shard_map that is
+    manual over ``axis`` (the trainer's grad step; see training/loop.py).
+
+    Each pod quantizes its local gradient (with error feedback); the int8
+    codes travel the cross-pod links via all-gather (1 B/elem vs 2 B for a
+    bf16 all-reduce), and the receive side reconstructs the exact weighted
+    sum Σ_p scale_p · q_p. Returns (mean gradient tree [pod-invariant],
+    new error tree [pod-varying]). Leaves are plain arrays.
+    """
+    npods = jax.lax.psum(1, axis)
+
+    def leaf(g, e):
+        q, scale, new_e = ef_quantize_leaf(g, e)
+        # int8 codes packed 4-per-int32 word for the wire (identical byte
+        # count; sidesteps XLA backends that cannot collective s8 directly)
+        packed, pad = _pack_i8(q)
+        ps = jax.lax.all_gather(packed, axis)               # (P, n/4) i32
+        ss = jax.lax.all_gather(scale, axis)                # (P,) f32
+        qs = jax.vmap(lambda p: _unpack_i8(p, q.shape, pad))(ps)
+        total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+        return (total / npods).astype(g.dtype), new_e
+
+    pairs = jax.tree.map(leaf, grads, err)
+    new_grads = jax.tree.map(
+        lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple)
+    )
+    new_err = jax.tree.map(
+        lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple)
+    )
+    return new_grads, new_err
+
+
+def crosspod_allreduce_int8(
+    mesh: Mesh,
+    grads: Any,
+    err: Any,
+    *,
+    axis: str = "pod",
+):
+    """Standalone jit-composable wrapper around :func:`crosspod_psum_int8`.
+
+    Pod-local values are encoded with a leading ``(npods, ...)`` axis
+    sharded over ``axis`` (the SPMD representation of per-pod state —
+    :func:`zeros_error_state` builds ``err`` this way). Returns
+    (mean grads broadcast back to the pod axis, new error state).
+    Manual collectives run over ``axis`` only; data/model placements ride
+    along under GSPMD (``shard_map(..., axis_names={axis})``).
+    """
+    if axis not in mesh.axis_names:
+        return grads, err
+
+    def body(g_boxed, e_boxed):
+        g = jax.tree.map(lambda a: a[0], g_boxed)
+        e = jax.tree.map(lambda a: a[0], e_boxed)
+        mean_g, new_e = crosspod_psum_int8(g, e, axis=axis)
+        g_out = jax.tree.map(lambda a: a[None], mean_g)
+        e_out = jax.tree.map(lambda a: a[None], new_e)
+        return g_out, e_out
+
+    spec_g = jax.tree.map(lambda _: P(axis), grads)
+    spec_e = jax.tree.map(lambda _: P(axis), err)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_g, spec_e),
+        out_specs=(spec_g, spec_e),
+        axis_names={axis},
+    )
+    return fn(grads, err)
+
+
+# ---------------------------------------------------------------------------
+# Softmax partial combines over a named axis (T1 at pod scale) — re-exported
+# here so the distributed story lives in one package.
+# ---------------------------------------------------------------------------
+
+from repro.core.softmax import (  # noqa: E402,F401
+    combine_async_collective,
+    combine_sync_collective,
+)

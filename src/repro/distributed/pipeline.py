@@ -1,0 +1,118 @@
+"""Optional GPipe-style pipeline parallelism over the ``pod`` axis.
+
+At 1000+-node scale the cross-pod links are the scarcest resource; instead
+of replicating the model across pods (hierarchical DP, the default), the
+``pod`` axis can carry *pipeline stages*: each pod holds a contiguous slice
+of layers, and activations flow pod-to-pod with ``lax.ppermute`` while
+microbatches fill the pipeline (GPipe schedule: all-forward then
+all-backward, bubble fraction (P-1)/(M+P-1)).
+
+Implementation: a ``shard_map`` manual over ``pod``; stage params live only
+on their stage (leading stage axis sharded over ``pod``); the steady-state
+loop runs P + M - 1 ticks, each tick = one stage compute + one boundary
+ppermute. Inside the stage body GSPMD still auto-shards data/model exactly
+as in the non-pipelined path.
+
+This module is deliberately self-contained and schedule-focused: it
+pipelines any ``stage_fn(stage_params, x) -> x``. The trainer uses it when
+``RunConfig.pipeline=True`` (off by default — hierarchical DP + int8-EF
+cross-pod gradients is the better roofline trade at pod=2; the crossover
+analysis is in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def split_stages(layers_params: Any, num_stages: int) -> Any:
+    """Reshape stacked-L layer params (L, ...) -> (P, L/P, ...)."""
+    def leaf(a):
+        l = a.shape[0]
+        assert l % num_stages == 0, (l, num_stages)
+        return a.reshape(num_stages, l // num_stages, *a.shape[1:])
+
+    return jax.tree.map(leaf, layers_params)
+
+
+def merge_stages(staged: Any) -> Any:
+    return jax.tree.map(
+        lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), staged
+    )
+
+
+def pipeline_forward(
+    mesh: Mesh,
+    staged_params: Any,
+    x_microbatches: jax.Array,       # (M, mb, ...) microbatched activations
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    *,
+    axis: str = "pod",
+):
+    """GPipe forward over ``axis``. Returns (M, mb, ...) outputs.
+
+    Differentiable: backward replays the schedule in reverse through the
+    ppermute transpose rules, giving the standard all-back schedule.
+    """
+    num_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def body(params_stage, xs):
+        # params_stage: this pod's slice, leading stage axis of size 1
+        params_stage = jax.tree.map(lambda a: a[0], params_stage)
+        m = xs.shape[0]
+        stage_idx = jax.lax.axis_index(axis)
+        ticks = m + num_stages - 1
+        fwd = functools.partial(_perm_next, axis=axis, n=num_stages)
+
+        buf = jax.lax.pvary(jnp.zeros_like(xs[0]), axis)
+        outs = jax.lax.pvary(jnp.zeros_like(xs), axis)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any left)
+            mb_idx = jnp.clip(t, 0, m - 1)
+            buf = jnp.where(
+                (stage_idx == 0) & (t < m),
+                jax.lax.dynamic_index_in_dim(xs, mb_idx, 0, keepdims=False),
+                buf,
+            )
+            # every stage with a live microbatch computes
+            live = (t >= stage_idx) & (t < m + stage_idx)
+            y = stage_fn(params_stage, buf)
+            buf_out = jnp.where(live, y, buf)
+            # last stage banks its finished microbatch
+            done_idx = jnp.clip(t - (num_stages - 1), 0, m - 1)
+            outs = jnp.where(
+                (stage_idx == num_stages - 1) & live,
+                jax.lax.dynamic_update_index_in_dim(
+                    outs, buf_out[None], done_idx, 0
+                ),
+                outs,
+            )
+            # rotate boundary activations to the next stage
+            buf_next = fwd(buf_out)
+            return buf_next, outs
+
+        buf, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # only stage P-1 banked real outputs; return per-stage boxed values
+        # and let the caller read the last stage's copy.
+        return outs[None]
+
+    stage_spec = jax.tree.map(lambda _: P(axis), staged_params)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(stage_spec, P()),
+        out_specs=P(axis),
+        axis_names={axis},
+    )
+    boxed = fn(staged_params, x_microbatches)   # (num_stages, M, mb, ...)
+    return boxed[-1]
+
+
+def _perm_next(x: jax.Array, *, axis: str, n: int) -> jax.Array:
+    return jax.lax.ppermute(x, axis, [(i, (i + 1) % n) for i in range(n)])

@@ -1,0 +1,311 @@
+"""Named-axis sharding rules (DP/FSDP over ``pod``+``data``, TP over
+``model``, sequence-split KV over ``model`` for decode).
+
+Three rule families:
+
+  * **Activations** — the model zoo calls ``ctx.shard(x, role)`` with a
+    logical role string; :meth:`Rules.act_spec` maps it to a
+    :class:`~jax.sharding.PartitionSpec` adapted to the array's rank
+    (batch on axis 0, TP features on the last axis). Non-divisible dims
+    degrade to replicated *at trace time* (``long_500k`` has batch=1).
+
+  * **Params** — :meth:`Rules.param_spec` walks a param pytree and assigns
+    Megatron-style TP (column/row rules by leaf name + parent context)
+    plus FSDP over the combined ``pod``+``data`` axes on the other matrix
+    dim. This is what makes grok-1-314b *fit*: 628 GB of bf16 params is
+    2.5 GB/chip at (2,16,16) but 39 GB/chip with TP-only sharding.
+
+  * **Inputs / caches** — token batches shard over batch axes; KV caches
+    shard batch over ``data`` and **sequence over ``model``** — the layout
+    under which T1's additive (num, den) combine turns cross-chip decode
+    attention into one psum pair (see DESIGN.md §2-T1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Activation roles: role -> (shard batch on axis 0, shard model on last axis)
+# ---------------------------------------------------------------------------
+
+ACT_ROLES: dict[str, tuple[bool, bool]] = {
+    "act_resid": (True, False),
+    "act_qkv": (True, True),
+    "act_kv": (True, True),
+    "act_attn_out": (True, True),
+    "act_ffn": (True, True),
+    "act_logits": (True, True),
+    "act_moe_grouped": (True, False),
+    "act_moe_slots": (True, False),
+    "act_moe_hidden": (True, True),
+}
+
+# TP orientation by (parent, leaf-name). COL = output dim over model,
+# ROW = input dim over model. Anything absent is replicated (plus FSDP).
+_COL = {
+    "wq", "wk", "wv",            # attention projections (D, out)
+    "w_gate", "w_up",            # mlp up projections (D, F)
+    "w_in",                      # hybrid ssm in-proj (D, inner)
+    "w_r", "w_g",                # rwkv/hybrid square gates (D, D)
+    "w_dt", "w_bc",              # hybrid ssm dt/B/C projections (D, small)
+    "lm_head",
+}
+_ROW = {
+    "wo",                        # attention out (q_dim, D)
+    "w_down",                    # mlp down (F, D)
+    "w_out",                     # ssm out (inner, D)
+}
+# context-sensitive leaves: (parent, name) -> "col" | "row" | "rep"
+_CTX = {
+    ("tm", "w_k"): "col", ("tm", "w_v"): "col", ("tm", "w_o"): "row",
+    ("cm", "w_k"): "col", ("cm", "w_v"): "row", ("cm", "w_r"): "col",
+    ("ssm", "w_gate"): "col",
+    ("moe", "w_gate"): "moe_up", ("moe", "w_up"): "moe_up",
+    ("moe", "w_down"): "moe_down",
+    ("moe", "router"): "rep",
+    ("tm", "decay_A"): "rep", ("tm", "decay_B"): "rep",
+}
+_BIAS_COL = {"bq", "bk", "bv"}   # 1-D, sized like a COL output dim
+
+
+def _divides(dim: int, axes: tuple[str, ...], sizes: dict[str, int]) -> bool:
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return dim % n == 0 and dim >= n
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Sharding rule set bound to one mesh configuration."""
+
+    mesh_cfg: MeshConfig
+    seq_shard_kv: bool = True     # KV-cache sequence over `model` (T1 layout)
+    # False -> params FSDP over `data` only (pod-replicated) — required by
+    # the int8-EF compressed-gradient mode, whose pod hop is manual.
+    fsdp_over_pod: bool = True
+    # False -> activation constraints never mention `pod` (they execute
+    # inside the pod-manual shard_map in compressed-gradient mode, where a
+    # constraint naming a manual axis is illegal). Inputs/caches, which
+    # live outside, keep the full batch axes.
+    act_over_pod: bool = True
+    # False -> params are TP-sharded only (replicated over data) — the
+    # serving layout for models whose TP shard fits HBM: FSDP would
+    # all-gather the full parameter set once per decoded token.
+    fsdp_params: bool = True
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return self.mesh_cfg.data_axes          # ("pod","data") or ("data",)
+
+    @property
+    def act_batch_axes(self) -> tuple[str, ...]:
+        if self.act_over_pod:
+            return self.batch_axes
+        return tuple(a for a in self.batch_axes if a != "pod")
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        if self.fsdp_over_pod:
+            return self.batch_axes
+        return tuple(a for a in self.batch_axes if a != "pod")
+
+    @property
+    def model_axis(self) -> str:
+        return self.mesh_cfg.model_axis
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh_cfg.axis_names, self.mesh_cfg.shape))
+
+    # -- activations --------------------------------------------------------
+
+    def act_spec(self, role: str, shape: tuple[int, ...]) -> P:
+        sizes = self.axis_sizes
+        batch = self.act_batch_axes
+        entries: list[Any] = [None] * len(shape)
+
+        def try_set(i: int, axes) -> None:
+            ax = axes if isinstance(axes, tuple) else (axes,)
+            if len(shape) > i and _divides(shape[i], ax, sizes):
+                entries[i] = axes
+
+        # decode-path roles (T1 split-KV layout): scores/exp partials are
+        # sequence-sharded over `model`; q/k/v of the single new token are
+        # model-replicated; a per-layer cache slice (B, S, H, Dh) keeps the
+        # stored sequence over `model`.
+        if role == "act_scores_decode":          # (B, H, S)
+            try_set(0, batch)
+            if self.seq_shard_kv:
+                try_set(len(shape) - 1, self.model_axis)
+            return P(*entries)
+        if role == "act_decode_rep":             # (B, ...) replicated rest
+            try_set(0, batch)
+            return P(*entries)
+        if role == "act_cache_slice":            # (B, S, H, Dh)
+            try_set(0, batch)
+            if self.seq_shard_kv:
+                try_set(1, self.model_axis)
+            return P(*entries)
+
+        batch0, model_last = ACT_ROLES.get(role, (True, False))
+        if batch0:
+            try_set(0, batch)
+        if model_last and len(shape) >= 2:
+            try_set(len(shape) - 1, self.model_axis)
+        return P(*entries)
+
+    # -- params --------------------------------------------------------------
+
+    def param_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        """TP + FSDP spec for one param leaf.
+
+        ``path`` is the tuple of dict keys from the root; leaves under a
+        ``*layers`` key carry a leading stacked-L axis (never sharded).
+        """
+        sizes = self.axis_sizes
+        name = path[-1]
+        parent = path[-2] if len(path) >= 2 else ""
+        stacked = any("layers" in p for p in path[:-1])
+        lead = 1 if stacked else 0
+        body = shape[lead:]
+
+        kind = _CTX.get((parent, name))
+        if kind is None:
+            if name in _COL:
+                kind = "col"
+            elif name in _ROW:
+                kind = "row"
+            elif name == "embedding":
+                kind = "embed"
+            elif name in _BIAS_COL:
+                kind = "bias_col"
+            else:
+                kind = "rep"
+
+        entries: list[Any] = [None] * len(body)
+        model = self.model_axis
+        batch = self.fsdp_axes if self.fsdp_params else ()
+
+        def set_axis(i: int, axes) -> None:
+            ax = axes if isinstance(axes, tuple) else (axes,)
+            if ax and _divides(body[i], ax, sizes):
+                entries[i] = axes
+
+        if kind == "col" and len(body) == 2:
+            set_axis(1, model)            # output over TP
+            set_axis(0, batch)            # input over FSDP
+        elif kind == "row" and len(body) == 2:
+            set_axis(0, model)
+            set_axis(1, batch)
+        elif kind == "embed" and len(body) == 2:
+            set_axis(0, model)            # vocab over TP
+            set_axis(1, batch)            # d_model over FSDP
+        elif kind == "moe_up" and len(body) == 3:   # (E, D, F)
+            set_axis(2, model)
+            set_axis(1, batch)
+        elif kind == "moe_down" and len(body) == 3:  # (E, F, D)
+            set_axis(1, model)
+            set_axis(2, batch)
+        elif kind == "bias_col" and len(body) == 1:
+            set_axis(0, model)
+        # "rep": all None (norm scales, mus, router, decay loras, …)
+
+        return P(*([None] * lead), *entries)
+
+    def param_spec_tree(self, params: Any) -> Any:
+        """Pytree of PartitionSpec matching ``params`` (arrays or SDS)."""
+        def walk(path, leaf):
+            keys = tuple(
+                k.key if hasattr(k, "key") else str(k) for k in path
+            )
+            return self.param_spec(keys, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(walk, params)
+
+    # -- inputs / caches ----------------------------------------------------
+
+    def batch_spec(self, shape: tuple[int, ...]) -> P:
+        # compressed-grad mode (act_over_pod=False): inputs stay data-sharded
+        # and the pod split happens manually in the grad shard_map — XLA's
+        # gather partitioner crashes when both claim the pod axis.
+        axes = self.act_batch_axes
+        entries: list[Any] = [None] * len(shape)
+        if len(shape) >= 1 and _divides(shape[0], axes, self.axis_sizes):
+            entries[0] = axes
+        return P(*entries)
+
+    def cache_spec(self, shape: tuple[int, ...]) -> P:
+        """KV cache (L, B, S, H, Dh) / SSM state (L, B, H, N, N) / shift
+        state (L, B, D): batch over ``data`` axes; for the 5-D KV cache the
+        *sequence* axis shards over ``model`` (T1's split-KV layout).
+        """
+        sizes = self.axis_sizes
+        entries: list[Any] = [None] * len(shape)
+        if len(shape) >= 2 and _divides(shape[1], self.batch_axes, sizes):
+            entries[1] = self.batch_axes
+        if len(shape) == 5 and self.seq_shard_kv and _divides(
+                shape[2], (self.model_axis,), sizes):
+            entries[2] = self.model_axis
+        return P(*entries)
+
+    def input_specs_tree(self, specs: Any) -> Any:
+        """Shardings for a dry-run input pytree (tokens/labels/cache/...)."""
+        def pick(path, leaf):
+            keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+            if "cache" in keys:
+                return self.cache_spec(leaf.shape)
+            return self.batch_spec(leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(pick, specs)
+
+
+def make_rules(mesh_cfg: MeshConfig, *, seq_shard_kv: bool = True,
+               fsdp_over_pod: bool = True,
+               act_over_pod: bool = True,
+               fsdp_params: bool = True) -> Rules:
+    return Rules(mesh_cfg=mesh_cfg, seq_shard_kv=seq_shard_kv,
+                 fsdp_over_pod=fsdp_over_pod, act_over_pod=act_over_pod,
+                 fsdp_params=fsdp_params)
+
+
+def make_shard_fn(mesh: Optional[Mesh], rules: Optional[Rules]):
+    """Build the ``LayerCtx.shard`` callable: role-based
+    ``with_sharding_constraint`` (identity when mesh is None — single-host
+    smoke paths).
+
+    Values that are *varying over a manual axis* (inside the pod-manual
+    shard_map of the compressed-gradient mode) need the constraint mesh to
+    type those axes Manual — detected per value from ``jax.typeof(x).vma``.
+    """
+    if mesh is None or rules is None:
+        return lambda x, role: x
+
+    def shard(x: jax.Array, role: str) -> jax.Array:
+        vma = frozenset(getattr(jax.typeof(x), "vma", frozenset()))
+        if vma:
+            # Inside a partial-manual shard_map (compressed-grad mode):
+            # explicit constraints on manual-varying values trip an XLA
+            # SPMD-partitioner CHECK (spmd_partitioner_util.cc) as of
+            # XLA/jax 0.8 — let GSPMD propagate from the in_shardings
+            # instead (recorded in DESIGN.md §8).
+            return x
+        spec = rules.act_spec(role, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def named(mesh: Mesh, tree_of_specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,73 @@
+"""Hardware descriptions used by the roofline model and the heuristic dataflow.
+
+The TARGET platform is TPU v5e; this container executes on CPU (kernels are
+validated with ``interpret=True``), so every performance decision in the
+framework is driven by these constants rather than wall-clock measurements.
+A real-hardware timing hook exists in :mod:`repro.core.dispatch` for when the
+framework runs on actual TPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip hardware description.
+
+    Attributes:
+      peak_flops_bf16: peak bf16 FLOP/s of the MXU.
+      peak_flops_vpu_f32: peak f32 FLOP/s of the vector unit (used by the
+        GEMV/ImplA cost model — the VPU path does not touch the MXU).
+      hbm_bw: HBM bandwidth, bytes/s.
+      ici_bw_per_link: per-link ICI bandwidth, bytes/s.
+      ici_links: number of ICI links per chip taking part in a 2D torus.
+      hbm_bytes: HBM capacity per chip.
+      vmem_bytes: VMEM (on-chip vector memory) capacity per core.
+      mxu_dim: systolic array dimension (128 for all current TPUs).
+      lane: vector lane count (last-dim tiling atom).
+      sublane_f32 / sublane_bf16: second-minor tiling atom per dtype.
+    """
+
+    name: str
+    peak_flops_bf16: float
+    peak_flops_vpu_f32: float
+    hbm_bw: float
+    ici_bw_per_link: float
+    ici_links: int
+    hbm_bytes: int
+    vmem_bytes: int
+    mxu_dim: int = 128
+    lane: int = 128
+    sublane_f32: int = 8
+    sublane_bf16: int = 16
+
+    def sublane(self, dtype_bytes: int) -> int:
+        return {4: self.sublane_f32, 2: self.sublane_bf16, 1: 32}.get(dtype_bytes, 8)
+
+
+# Roofline constants mandated by the assignment: 197 TFLOP/s bf16 per chip,
+# 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_vpu_f32=197e12 / 32,  # VPU is ~1/32 of MXU throughput at f32
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,  # 2D torus: 4 links (x+, x-, y+, y-)
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+DEFAULT = TPU_V5E
+
+
+def matmul_flops(m: int, n: int, k: int) -> int:
+    return 2 * m * n * k
+
+
+def bytes_of(shape: tuple[int, ...], dtype_bytes: int = 2) -> int:
+    n = dtype_bytes
+    for s in shape:
+        n *= s
+    return n

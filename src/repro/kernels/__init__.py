@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the FlashDecoding++ hot spots.
+
+Modules:
+  * decode_attention — T1 async-softmax split-KV decode kernel (+ sync baseline)
+  * flash_prefill    — fused causal prefill attention (sync & unified-max)
+  * flat_gemm        — T2 minimal-pad double-buffered flat GEMM
+  * fused_ffn        — T2 extension: fused flat-GEMM SwiGLU FFN-up epilogue
+  * gemv             — ImplA VPU GEMV
+  * ops              — jit wrappers + T3 dispatch entry points
+  * ref              — pure-jnp oracles for all of the above
+"""
+from repro.kernels import ref  # noqa: F401
+from repro.kernels.decode_attention import (  # noqa: F401
+    decode_attention_sync,
+    decode_attention_unified_max,
+)
+from repro.kernels.flash_prefill import flash_prefill  # noqa: F401
+from repro.kernels.flat_gemm import flat_gemm  # noqa: F401
+from repro.kernels.fused_ffn import fused_ffn_up  # noqa: F401
+from repro.kernels.gemv import gemv  # noqa: F401

@@ -1,0 +1,270 @@
+"""T1 — Asynchronized-softmax decode attention (Pallas TPU).
+
+The paper's §3 insight adapted to TPU: each KV chunk contributes
+``num += exp(q·kᵀ − φ)·v`` and ``den += Σ exp(q·kᵀ − φ)`` with a *static*
+scaling constant φ, so grid steps over the KV cache are order-independent —
+no running-max carry, no rescale of the accumulator between chunks (the
+"synchronized partial softmax update" that FlashAttention/FlashDecoding pay
+for on every chunk).
+
+The kernel additionally reports ``max(s − φ)`` per (batch, kv-head) block so
+the wrapper can implement the paper's recomputation fallback: if any logit
+left the safe band, the whole call is recomputed with the synchronized
+(online-max) scheme.
+
+Layout: caches are consumed as (batch, kv_head, seq, head_dim) so a KV chunk
+is a contiguous (block_k, head_dim) VMEM tile; the grouped query heads that
+share one KV head ride along as a (group, head_dim) tile, turning the GQA
+decode attention into two small MXU matmuls per chunk:
+(G,D)x(D,BK) and (G,BK)x(BK,D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(
+    # inputs
+    q_ref,        # (1, 1, G, D)
+    k_ref,        # (1, 1, BK, D)
+    v_ref,        # (1, 1, BK, D)
+    len_ref,      # (1, 1) int32 in SMEM
+    # outputs
+    out_ref,      # (1, 1, G, D)
+    stat_ref,     # (1, 1) f32 : max(s - phi) over valid positions
+    # scratch
+    acc_ref,      # (G, D) f32
+    den_ref,      # (G, 128) f32
+    msc_ref,      # (1, 1) f32  max centered score
+    *,
+    phi: float,
+    scale: float,
+    block_k: int,
+    kv_len: int,
+):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        msc_ref[...] = jnp.full_like(msc_ref, -jnp.inf)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # (G, BK)
+
+    length = len_ref[0, 0]
+    offs = s_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = offs < length
+
+    centered = s - phi
+    msc_ref[0, 0] = jnp.maximum(
+        msc_ref[0, 0], jnp.max(jnp.where(valid, centered, -jnp.inf))
+    )
+    e = jnp.where(valid, jnp.exp(centered), 0.0)         # (G, BK)
+
+    acc_ref[...] += jax.lax.dot_general(
+        e, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den_ref[...] += jnp.broadcast_to(
+        jnp.sum(e, axis=1, keepdims=True), den_ref.shape
+    )
+
+    @pl.when(s_idx == n_s - 1)
+    def _fin():
+        den = den_ref[:, :1]                             # (G, 1)
+        out_ref[0, 0] = (acc_ref[...] / den).astype(out_ref.dtype)
+        stat_ref[0, 0] = msc_ref[0, 0]
+
+
+def decode_attention_unified_max(
+    q: jax.Array,          # (B, HQ, D)
+    k_cache: jax.Array,    # (B, HK, S, D)
+    v_cache: jax.Array,    # (B, HK, S, D)
+    lengths: jax.Array,    # (B,) int32
+    *,
+    phi: float = 0.0,
+    scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Run the async-softmax decode kernel.
+
+    Returns ``(out, stat)`` with ``out: (B, HQ, D)`` and
+    ``stat: (B, HK)`` = max centered logit, for the overflow fallback.
+    """
+    b, hq, d = q.shape
+    _, hk, s_max, _ = k_cache.shape
+    g = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+
+    block_k = min(block_k, s_max)
+    if s_max % block_k:
+        pad = block_k - s_max % block_k
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s_max += pad
+
+    qg = q.reshape(b, hk, g, d)
+    lens = lengths.reshape(b, 1).astype(jnp.int32)
+
+    grid = (b, hk, s_max // block_k)
+    kernel = functools.partial(
+        _decode_kernel,
+        phi=phi,
+        scale=scale,
+        block_k=block_k,
+        kv_len=s_max,
+    )
+    out, stat = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, s_: (b_, h_, s_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, s_: (b_, h_, s_, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b_, h_, s_: (b_, 0), memory_space=pltpu.SMEM
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, h_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hk), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lens)
+    return out.reshape(b, hq, d), stat
+
+
+# ---------------------------------------------------------------------------
+# Synchronized (online-max) fallback kernel — the paper's recomputation path.
+# This is the FlashDecoding-style scheme of Fig. 4(b): every chunk updates the
+# running max and rescales the accumulator. Used (a) as the overflow fallback
+# and (b) as the "paper baseline" in benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel_sync(
+    q_ref, k_ref, v_ref, len_ref,
+    out_ref,
+    acc_ref, den_ref, m_ref,
+    *,
+    scale: float,
+    block_k: int,
+):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    length = len_ref[0, 0]
+    offs = s_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(offs < length, s, -jnp.inf)
+
+    # ---- the synchronized partial-softmax update the paper removes ----
+    m_prev = m_ref[:, :1]                                   # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)               # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    rescale = jnp.exp(m_prev - m_new)                       # (G, 1)
+    e = jnp.exp(s - m_new)                                  # (G, BK)
+    acc_ref[...] = acc_ref[...] * rescale + jax.lax.dot_general(
+        e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    den_ref[...] = den_ref[...] * jnp.broadcast_to(rescale, den_ref.shape) + (
+        jnp.broadcast_to(jnp.sum(e, axis=1, keepdims=True), den_ref.shape)
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(s_idx == n_s - 1)
+    def _fin():
+        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+
+
+def decode_attention_sync(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Online-max (synchronized) decode attention — fallback / baseline."""
+    b, hq, d = q.shape
+    _, hk, s_max, _ = k_cache.shape
+    g = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+
+    block_k = min(block_k, s_max)
+    if s_max % block_k:
+        pad = block_k - s_max % block_k
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s_max += pad
+
+    qg = q.reshape(b, hk, g, d)
+    lens = lengths.reshape(b, 1).astype(jnp.int32)
+    grid = (b, hk, s_max // block_k)
+    kernel = functools.partial(_decode_kernel_sync, scale=scale, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, s_: (b_, h_, s_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, s_: (b_, h_, s_, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b_, h_, s_: (b_, 0), memory_space=pltpu.SMEM
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lens)
+    return out.reshape(b, hq, d)

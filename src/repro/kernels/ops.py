@@ -1,0 +1,210 @@
+"""Jit'd public wrappers around the Pallas kernels, with T3 dispatch.
+
+``matmul`` is the single GEMM entry point used by the model zoo: it routes a
+(M, K) × (K, N) workload to ImplA/ImplB/ImplC per the heuristic dataflow
+table (or an explicit ``impl=``). ``attention_prefill`` / ``attention_decode``
+wrap the fused attention kernels with the T1 overflow fallback.
+
+Every wrapper takes ``use_pallas`` — the CPU container cannot lower Mosaic
+kernels, so the XLA reference path (``ref.py`` math) is used for dry-runs and
+end-to-end CPU runs, while kernels are validated with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SoftmaxPhiConfig
+from repro.core.dispatch import DispatchTable, Impl
+from repro.kernels import ref
+from repro.kernels.decode_attention import (
+    decode_attention_sync,
+    decode_attention_unified_max,
+)
+from repro.kernels.flat_gemm import flat_gemm
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.gemv import gemv
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# GEMM front door (T3)
+# ---------------------------------------------------------------------------
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    table: Optional[DispatchTable] = None,
+    impl: Optional[Impl] = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Dispatch-aware GEMM. x: (..., K), w: (K, N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, k)
+
+    if impl is None:
+        if table is not None:
+            impl = table.pick(m, k, n)
+        else:
+            impl = Impl.GEMV if m <= 2 else (
+                Impl.FLAT_GEMM if m < 128 else Impl.XLA_DOT)
+
+    if not use_pallas or impl is Impl.XLA_DOT:
+        out = ref.flat_gemm_ref(x2, w)
+    elif impl is Impl.GEMV:
+        out = gemv(x2, w, interpret=_INTERPRET)
+    else:
+        out = flat_gemm(x2, w, interpret=_INTERPRET)
+    return out.reshape(*lead, n)
+
+
+def fused_ffn(
+    x: jax.Array,        # (..., K)
+    w_gate: jax.Array,   # (K, N)
+    w_up: jax.Array,     # (K, N)
+    *,
+    activation: str = "swiglu",
+    use_pallas: bool = True,
+) -> jax.Array:
+    """act(x @ w_gate) * (x @ w_up) — fused epilogue kernel on TPU
+    (kernels/fused_ffn.py), oracle math on the XLA path."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_gate.shape[-1]
+    x2 = x.reshape(-1, k)
+    if use_pallas:
+        from repro.kernels.fused_ffn import fused_ffn_up
+        out = fused_ffn_up(x2, w_gate, w_up, activation=activation,
+                           interpret=_INTERPRET)
+    else:
+        out = ref.fused_ffn_up_ref(x2, w_gate, w_up, activation=activation)
+    return out.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Attention front doors (T1)
+# ---------------------------------------------------------------------------
+
+
+# quadratic (B,H,S,S) scores are only materialized below this sequence
+# length on the XLA path; above it the blockwise T1 scheme keeps live
+# memory ≈ (B,H,block_q,S) — mandatory for the 32k dry-run cells.
+CHUNKED_PREFILL_MIN_SEQ = 2048
+
+
+def attention_prefill(
+    q: jax.Array,   # (B, Sq, HQ, D)
+    k: jax.Array,   # (B, Sk, HK, D)
+    v: jax.Array,
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    causal: bool = True,
+    sliding_window: int = 0,
+    use_pallas: bool = True,
+    fallback: bool = True,
+) -> jax.Array:
+    """Prefill attention with T1 + overflow recomputation fallback.
+
+    ``fallback=False`` drops the ``lax.cond`` recompute branch (used by the
+    dry-run so cost_analysis doesn't double-count the attention; the
+    calibrated φ band makes the branch probability ≈ 0 — paper §3).
+    """
+    if not use_pallas:
+        if q.shape[1] * k.shape[1] >= CHUNKED_PREFILL_MIN_SEQ ** 2:
+            return ref.attention_prefill_chunked(
+                q, k, v, causal=causal, sliding_window=sliding_window,
+                phi=phi_cfg.phi if phi_cfg.active else None,
+            )
+        return ref.attention_prefill_ref(
+            q, k, v, causal=causal, sliding_window=sliding_window
+        )
+    if not phi_cfg.active:
+        return flash_prefill(
+            q, k, v, causal=causal, unified_max=False,
+            sliding_window=sliding_window, interpret=_INTERPRET,
+        )
+    out, stat = flash_prefill(
+        q, k, v, causal=causal, unified_max=True, phi=phi_cfg.phi,
+        sliding_window=sliding_window, interpret=_INTERPRET,
+    )
+    if not fallback:
+        return out
+    overflow = jnp.any(stat > phi_cfg.band[1])
+
+    def recompute(_):
+        # paper §3 "Recomputation": rerun with the synchronized scheme
+        return flash_prefill(
+            q, k, v, causal=causal, unified_max=False,
+            sliding_window=sliding_window, interpret=_INTERPRET,
+        )
+
+    return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
+
+
+def attention_decode(
+    q: jax.Array,        # (B, HQ, D) — one new token per sequence
+    k_cache: jax.Array,  # (B, S, HK, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,)
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    block_k: int = 512,
+    use_pallas: bool = True,
+    fallback: bool = True,
+    shard=None,
+) -> jax.Array:
+    """Decode attention with T1 + overflow recomputation fallback.
+
+    ``shard`` (optional, a LayerCtx.shard) pins the split-KV dataflow on
+    the XLA path: scores stay sequence-sharded and GSPMD combines the
+    per-shard (num, den) partials with a single additive all-reduce —
+    the pod-scale payoff of the unified-max softmax.
+    """
+    if not use_pallas:
+        if not phi_cfg.active:
+            return ref.attention_decode_ref(
+                q, k_cache, v_cache, lengths, shard=shard)
+        out, stat = ref.attention_decode_unified_max_ref(
+            q, k_cache, v_cache, lengths, phi=phi_cfg.phi, shard=shard
+        )
+        if not fallback:
+            return out
+        overflow = jnp.any(stat > phi_cfg.band[1])
+        safe = functools.partial(
+            ref.attention_decode_ref, q, k_cache, v_cache, lengths,
+            shard=shard,
+        )
+        return jax.lax.cond(overflow, lambda _: safe(), lambda _: out, None)
+
+    # kernel layout: (B, HK, S, D)
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    if not phi_cfg.active:
+        return decode_attention_sync(
+            q, kt, vt, lengths, block_k=block_k, interpret=_INTERPRET
+        )
+    out, stat = decode_attention_unified_max(
+        q, kt, vt, lengths, phi=phi_cfg.phi, block_k=block_k,
+        interpret=_INTERPRET,
+    )
+    if not fallback:
+        return out
+    overflow = jnp.any(stat > phi_cfg.band[1])
+
+    def recompute(_):
+        return decode_attention_sync(
+            q, kt, vt, lengths, block_k=block_k, interpret=_INTERPRET
+        )
+
+    return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)

@@ -1,0 +1,265 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel tests (``assert_allclose`` against the
+``interpret=True`` kernel execution) and also serve as the XLA execution path
+used by the dry-run (Pallas-for-TPU does not lower on the CPU backend).
+
+Shapes follow the kernel conventions:
+  * prefill attention:  q,k,v = (batch, seq, heads, head_dim)   (kv heads may differ)
+  * decode attention:   q = (batch, q_heads, head_dim),
+                        k,v = (batch, kv_len, kv_heads, head_dim)
+  * flat gemm / gemv:   x = (M, K), w = (K, N)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Softmax schemes (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Fig. 4(a): classic max-stabilized softmax."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def softmax_unified_max(x: jax.Array, phi: float, axis: int = -1) -> jax.Array:
+    """Fig. 4(c): partial-softmax with a unified scaling constant ``phi``.
+
+    Algebraically identical to :func:`softmax_ref` for any finite ``phi``
+    (Eq. 3); numerically safe while ``x - phi`` stays inside the band.
+    """
+    e = jnp.exp(x - phi)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracles
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, KVH*groups, D) by repeating each kv head."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention_prefill_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """Full (quadratic) softmax attention, fp32 internals."""
+    b, sq, hq, d = q.shape
+    _, sk, hk, _ = k.shape
+    groups = hq // hk
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    if causal or sliding_window:
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), dtype=bool)
+        if causal:
+            mask &= qi >= ki
+        if sliding_window:
+            mask &= qi - ki < sliding_window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = softmax_ref(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_decode_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    shard=None,
+) -> jax.Array:
+    """One-new-token attention against a KV cache. Safe (max-stabilized).
+
+    q: (B, HQ, D); k_cache/v_cache: (B, S, HK, D); lengths: (B,) valid KV len.
+    ``shard``: optional role-based constraint fn — keeps the score tensor
+    sequence-sharded (split-KV; the *synchronized* combine: the max and the
+    (num, den) reductions are separate collectives, paper Eq. 2).
+    """
+    b, hq, d = q.shape
+    _, s_max, hk, _ = k_cache.shape
+    groups = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    # GQA via grouped einsum — never materializes a repeated (x groups)
+    # copy of the KV cache, and reads it in its stored dtype (bf16); the
+    # f32 upcast happens per-tile inside the dot (deepseek decode
+    # hillclimb: 8x1.6 TB of repeat+convert traffic removed).
+    qg = q.reshape(b, hk, groups, d)   # native dtype: no extra rounding
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if shard is not None:
+        s = shard(s, "act_scores_decode")
+    valid = jnp.arange(s_max)[None, None, None, :] < lengths[:, None, None,
+                                                            None]
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)          # cross-shard max
+    if shard is not None:
+        m = shard(m[..., 0], "act_decode_rep")[..., None]
+    e = jnp.exp(s - m)
+    den = jnp.sum(e, axis=-1)
+    num = jnp.einsum("bhgk,bkhd->bhgd", e.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    if shard is not None:
+        num = shard(num, "act_decode_rep")
+        den = shard(den, "act_decode_rep")
+    o = (num / den[..., None]).reshape(b, hq, d)
+    return o.astype(q.dtype)
+
+
+def attention_decode_unified_max_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    phi: float,
+    scale: float | None = None,
+    shard=None,
+) -> tuple[jax.Array, jax.Array]:
+    """T1 oracle: async partial-softmax decode with unified max value.
+
+    Returns ``(out, max_abs_centered)`` where the second value is
+    ``max_i |s_i - phi|`` per batch row — the overflow statistic the kernel
+    reports so the wrapper can trigger the paper's recomputation fallback.
+
+    With ``shard`` the scores stay sequence-sharded and the only cross-shard
+    traffic is the additive (num, den) reduction — the asynchronous combine
+    of paper Eq. 4 (contrast the extra max collective in the sync scheme).
+    """
+    b, hq, d = q.shape
+    _, s_max, hk, _ = k_cache.shape
+    groups = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    # grouped GQA einsum straight off the stored-dtype cache (see
+    # attention_decode_ref) — T1 needs no row max, so this is one pass:
+    # exp(s - phi) -> (num, den), order-independent.
+    qg = q.reshape(b, hk, groups, d)   # native dtype: no extra rounding
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if shard is not None:
+        s = shard(s, "act_scores_decode")
+    valid = jnp.arange(s_max)[None, None, None, :] < lengths[:, None, None,
+                                                             None]
+    centered = s - phi
+    e = jnp.where(valid, jnp.exp(centered), 0.0)
+    num = jnp.einsum("bhgk,bkhd->bhgd", e.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(e, axis=-1)
+    stat = jnp.max(jnp.where(valid, jnp.abs(centered), 0.0),
+                   axis=(1, 2, 3))
+    if shard is not None:
+        num = shard(num, "act_decode_rep")
+        den = shard(den, "act_decode_rep")
+        stat = shard(stat, "act_decode_rep")
+    out = (num / den[..., None]).reshape(b, hq, d).astype(q.dtype)
+    return out, stat
+
+
+def attention_prefill_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    sliding_window: int = 0,
+    phi: float | None = 0.0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Flash-style blockwise prefill attention on the XLA path.
+
+    Never materializes the (B, H, S, S) score tensor: a python-unrolled loop
+    over query blocks (flat HLO — exactly countable by ``cost_analysis``,
+    and bounded live memory ≈ (B, H, block_q, S)). With ``phi`` set this is
+    the T1 unified-max scheme — each block's (num, den) needs no running-max
+    rescale; with ``phi=None`` it uses the per-block max (safe baseline).
+
+    Used by the dry-run and any long-context XLA execution; the Pallas
+    kernel covers real-TPU execution.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hk, _ = k.shape
+    groups = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    # grouped GQA einsums off the stored dtype — no repeated KV copy
+    # (at 32k context the repeat costs `groups` x the KV bytes per layer)
+    qf = q.reshape(b, sq, hk, groups, d)   # native dtype; scale on scores
+
+    bq = min(block_q, sq)
+    n_blocks = -(-sq // bq)
+    ki = jnp.arange(sk)[None, :]
+    outs = []
+    for i in range(n_blocks):
+        lo = i * bq
+        cur = min(bq, sq - lo)
+        qb = jax.lax.dynamic_slice_in_dim(qf, lo, cur, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, k,
+                       preferred_element_type=jnp.float32) * scale
+        qi = (lo + jnp.arange(cur))[:, None] + (sk - sq)
+        mask = jnp.ones((cur, sk), dtype=bool)
+        if causal:
+            mask &= qi >= ki
+        if sliding_window:
+            mask &= qi - ki < sliding_window
+        mask4 = mask[None, None, None]
+        if phi is not None:
+            e = jnp.where(mask4, jnp.exp(s - phi), 0.0)
+        else:
+            m = jnp.max(jnp.where(mask4, s, -jnp.inf),
+                        axis=-1, keepdims=True)
+            e = jnp.where(mask4, jnp.exp(s - m), 0.0)
+        den = jnp.sum(e, axis=-1)                      # (B, HK, G, cur)
+        num = jnp.einsum("bhgqk,bkhd->bqhgd", e.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        den_q = den.transpose(0, 3, 1, 2)[..., None]   # (B, cur, HK, G, 1)
+        outs.append((num / den_q).reshape(b, cur, hq, d))
+    o = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM oracles
+# ---------------------------------------------------------------------------
+
+
+def flat_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N), fp32 accumulation, result in x.dtype."""
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def gemv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Same math as flat_gemm_ref; kept separate as the ImplA oracle."""
+    return flat_gemm_ref(x, w)
+
+
+def fused_ffn_up_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                     *, activation: str = "swiglu") -> jax.Array:
+    """Oracle for kernels/fused_ffn.py: act(x@w_gate) * (x@w_up), f32."""
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+    return (act * u).astype(x.dtype)

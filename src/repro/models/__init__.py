@@ -1,0 +1,14 @@
+"""Model zoo: dense GQA / MoE / SSM (RWKV6) / hybrid (Hymba) / enc-dec.
+
+All models are pure functions over explicit param pytrees; layer params are
+stacked on a leading L axis (scan-over-layers). See :mod:`repro.models.api`
+for the uniform entry points and the dry-run ``input_specs``.
+"""
+from repro.models.api import (  # noqa: F401
+    ModelApi,
+    get_model,
+    make_synthetic_batch,
+    serve_decode_input_specs,
+    serve_prefill_input_specs,
+    train_input_specs,
+)

@@ -1,0 +1,132 @@
+"""Uniform model API over all five families, keyed by ``cfg.family``.
+
+Also home of ``input_specs`` — ShapeDtypeStruct stand-ins for every model
+input per (arch × shape) cell, as required by the multi-pod dry-run (no
+device allocation; weak-type-correct; shardable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer
+from repro.models.layers import LayerCtx
+
+N_IMAGE_TOKENS = 256  # vision stub: patch embeddings prepended (internvl2)
+
+
+def n_image_tokens(seq_len: int) -> int:
+    """Vision-prefix length; clamped so reduced smoke shapes stay valid."""
+    return min(N_IMAGE_TOKENS, max(seq_len // 4, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    train_loss: Callable          # (ctx, params, batch, *, unroll, remat)
+    prefill: Callable             # (ctx, params, tokens, lengths, cache, **)
+    decode_step: Callable         # (ctx, params, tokens, cache, lengths, **)
+    init_cache: Callable          # (batch, max_seq)
+    cache_spec: Callable          # (batch, max_seq)
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "vlm"):
+        mod = transformer
+    elif cfg.family == "moe":
+        mod = moe
+    elif cfg.family == "ssm":
+        mod = ssm
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(cfg, key),
+        train_loss=mod.train_loss,
+        prefill=mod.prefill,
+        decode_step=mod.decode_step,
+        init_cache=lambda batch, max_seq: mod.init_cache(cfg, batch, max_seq),
+        cache_spec=lambda batch, max_seq: mod.cache_spec(cfg, batch, max_seq),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins per (arch × shape) cell
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.frontend == "vision":
+        # stub frontend: precomputed patch embeddings prepended; token count
+        # shrinks so the backbone still runs exactly `s` positions.
+        npfx = n_image_tokens(s)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s - npfx), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s - npfx), jnp.int32),
+            "prefix_embeds": jax.ShapeDtypeStruct(
+                (b, npfx, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "encdec":
+        # stub conv frontend: precomputed frame embeddings
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)
+    return batch
+
+
+def serve_decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for one serve_step: current token, cache, lengths."""
+    b, s = shape.global_batch, shape.seq_len
+    api = get_model(cfg)
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": api.cache_spec(b, s),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def serve_prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        npfx = n_image_tokens(s)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - npfx), jnp.int32)
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, npfx, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, encdec.ENC_FRAMES_SERVE, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def make_synthetic_batch(cfg: ModelConfig, shape_or_specs, key) -> dict:
+    """Materialize a random batch matching the spec (for smoke/examples)."""
+    if isinstance(shape_or_specs, ShapeConfig):
+        specs = train_input_specs(cfg, shape_or_specs)
+    else:
+        specs = shape_or_specs
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(
+                sub, spec.shape, 0, cfg.vocab_size, dtype=spec.dtype)
+        else:
+            out[name] = (jax.random.normal(sub, spec.shape) * 0.02).astype(
+                spec.dtype)
+    return out

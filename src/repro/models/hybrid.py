@@ -1,0 +1,346 @@
+"""Hymba — hybrid layers with *parallel* attention + SSM heads.
+
+Each layer runs a sliding-window GQA attention path and a Mamba-style SSM
+path on the same normed input and sums their projections (the Hymba
+parallel-head design). Sub-quadratic end to end: attention cost is O(T·W)
+with a ring-buffer KV cache of W entries, the SSM is O(T) with O(1) state —
+this is why hymba runs the ``long_500k`` cell.
+
+TPU adaptation notes (DESIGN.md §8): the SSM path uses the Mamba-2/SSD
+scalar-per-head decay form (chunked einsums + log-depth associative scan,
+flat HLO) rather than Mamba-1's per-channel selective scan; the short
+depthwise conv of the reference stack is folded into the token-shift lerp.
+T1 applies to the attention heads only (the SSM path has no softmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SoftmaxPhiConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models.layers import LayerCtx, Params
+from repro.core import softmax as smx
+
+CHUNK = 64
+_CLAMP = 30.0
+SSM_HEAD = 64
+
+
+def _ssm_dims(cfg: ModelConfig):
+    inner = cfg.ssm.expand * cfg.d_model if cfg.ssm else 2 * cfg.d_model
+    hm = inner // SSM_HEAD
+    return inner, hm, cfg.ssm.state_size if cfg.ssm else 16
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    inner, hm, n = _ssm_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.norm_params(cfg, d),
+        "attn": L.attention_params(cfg, ks[0]),
+        "ssm": {
+            "w_in": L.dense_init(ks[1], (d, inner), dt),
+            "w_gate": L.dense_init(ks[2], (d, inner), dt),
+            "w_bc": L.dense_init(ks[3], (d, 2 * n), dt),
+            "w_dt": L.dense_init(ks[4], (d, hm), dt),
+            "a_log": jnp.zeros((hm,), jnp.float32),
+            "d_skip": jnp.ones((hm,), jnp.float32),
+            "w_out": L.dense_init(ks[5], (inner, d), dt),
+        },
+        "mlp_norm": L.norm_params(cfg, d),
+        "mlp": L.mlp_params(cfg, ks[6]),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    from repro.models import transformer as tfm
+    return tfm.init_params(cfg, key, layer_params_fn=layer_params)
+
+
+# ---------------------------------------------------------------------------
+# SSD scalar-decay chunked scan
+# ---------------------------------------------------------------------------
+
+
+def ssm_chunked(ctx: LayerCtx, p: Params, x: jax.Array,
+                state0: jax.Array | None = None,
+                *, return_state: bool = False,
+                valid: jax.Array | None = None):
+    """x: (B,T,D) -> (B,T,D). State: (B,HM,P,N).
+
+    ``valid``: (B,T) bool — padding positions have dt=0, which zeroes both
+    their state write *and* their decay (SSD decay is a·dt), so per-row
+    prompt lengths produce exact states. T padded to a CHUNK multiple.
+    """
+    cfg = ctx.cfg
+    inner, hm, n = _ssm_dims(cfg)
+    b, t_in, d = x.shape
+    pad_t = (-t_in) % min(CHUNK, max(t_in, 1))
+    if pad_t:
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+        if valid is None:
+            valid = jnp.arange(t_in + pad_t)[None, :] < t_in
+        else:
+            valid = jnp.pad(valid, ((0, 0), (0, pad_t)))
+    b, t, d = x.shape
+    xi = ctx.matmul(x, p["w_in"])
+    z = ctx.matmul(x, p["w_gate"])
+    bc = ctx.matmul(x, p["w_bc"]).astype(jnp.float32)
+    bmat, cmat = bc[..., :n], bc[..., n:]                    # (B,T,N)
+    dt_ = jax.nn.softplus(
+        ctx.matmul(x, p["w_dt"]).astype(jnp.float32)
+    )                                                        # (B,T,HM)
+    if valid is not None:
+        dt_ = jnp.where(valid[..., None], dt_, 0.0)
+    a = -jnp.exp(p["a_log"])                                 # (HM,) < 0
+    la_step = a[None, None] * dt_                            # (B,T,HM) ≤ 0
+
+    c = min(CHUNK, t)
+    assert t % c == 0
+    nc = t // c
+    xh = xi.reshape(b, nc, c, hm, SSM_HEAD).astype(jnp.float32)
+    bm = bmat.reshape(b, nc, c, n)
+    cm = cmat.reshape(b, nc, c, n)
+    dtc = dt_.reshape(b, nc, c, hm)
+    law = la_step.reshape(b, nc, c, hm)
+
+    la = jnp.cumsum(law, axis=2)                             # (B,NC,C,HM)
+    la_end = la[:, :, -1:]
+
+    # chunk summaries
+    dec = jnp.exp(la_end[:, :, 0])                           # (B,NC,HM)
+    w_in = dtc * jnp.exp(la_end - la)                        # ≤0 exps
+    u_mat = jnp.einsum(
+        "bcthp,bctn,bcth->bchpn",
+        xh, bm, w_in,
+    )                                                        # (B,NC,HM,P,N)
+
+    def combine(p1, p2):
+        d1, u1 = p1
+        d2, u2 = p2
+        return d1 * d2, u2 + d2[..., None, None] * u1
+
+    dec_s, u_s = jax.lax.associative_scan(combine, (dec, u_mat), axis=1)
+    if state0 is None:
+        state0 = jnp.zeros((b, hm, SSM_HEAD, n), jnp.float32)
+    s_end = dec_s[..., None, None] * state0[:, None] + u_s
+    s_start = jnp.concatenate([state0[:, None], s_end[:, :-1]], axis=1)
+
+    # within chunk (inclusive decay: y_t uses S_t)
+    inter = jnp.einsum(
+        "bcth,bchpn,bctn->bcthp", jnp.exp(la), s_start, cm
+    )
+    qk = jnp.einsum("bctn,bcsn->bcts", cm, bm)               # (B,NC,C,C)
+    decay_ts = jnp.exp(
+        jnp.clip(la[:, :, :, None, :] - la[:, :, None, :, :],
+                 -_CLAMP, _CLAMP)
+    )                                                        # (B,NC,C,C,HM)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    scores = qk[..., None] * decay_ts * mask[None, None, :, :, None]
+    intra = jnp.einsum("bctsh,bcsh,bcshp->bcthp", scores, dtc, xh)
+    y = inter + intra + p["d_skip"][None, None, None, :, None] * xh
+
+    y = y.reshape(b, t, inner).astype(x.dtype) * jax.nn.silu(z)
+    out = ctx.matmul(y, p["w_out"])[:, :t_in]
+    if return_state:
+        return out, s_end[:, -1]
+    return out
+
+
+def ssm_step(ctx: LayerCtx, p: Params, x: jax.Array, state: jax.Array):
+    """One token. x: (B,D); state: (B,HM,P,N)."""
+    cfg = ctx.cfg
+    inner, hm, n = _ssm_dims(cfg)
+    b, d = x.shape
+    xi = ctx.matmul(x, p["w_in"]).astype(jnp.float32).reshape(b, hm, SSM_HEAD)
+    z = ctx.matmul(x, p["w_gate"])
+    bc = ctx.matmul(x, p["w_bc"]).astype(jnp.float32)
+    bvec, cvec = bc[..., :n], bc[..., n:]
+    dt_ = jax.nn.softplus(ctx.matmul(x, p["w_dt"]).astype(jnp.float32))
+    dec = jnp.exp(-jnp.exp(p["a_log"])[None] * dt_)          # (B,HM)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xi, bvec, dt_)
+    new_state = dec[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cvec)
+    y = y + p["d_skip"][None, :, None] * xi
+    y = y.reshape(b, inner).astype(x.dtype) * jax.nn.silu(z)
+    return ctx.matmul(y, p["w_out"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer sliding-window attention (decode)
+# ---------------------------------------------------------------------------
+
+
+def ring_decode_attention(
+    ctx: LayerCtx, qd: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+    lengths: jax.Array,
+):
+    """qd: (B,HQ,Dh); cache: (B,W,HK,Dh) ring; lengths AFTER current write."""
+    cfg = ctx.cfg
+    w = cache_k.shape[1]
+    hq = qd.shape[1]
+    hk = cache_k.shape[2]
+    groups = hq // hk
+    kf = jnp.repeat(cache_k, groups, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(cache_v, groups, axis=2).astype(jnp.float32)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bhd,bkhd->bhk", qd.astype(jnp.float32) * scale, kf)
+    slots = jnp.arange(w)[None, None]
+    lens = lengths[:, None, None]
+    valid = (lens >= w) | (slots < lens)
+    phi_cfg = ctx.phi_cfg
+    if phi_cfg.active:
+        part = smx.async_partial(s, vf.swapaxes(1, 2), phi_cfg.phi, valid)
+        out = part.num / part.den[..., None]
+        overflow = jnp.any(part.max_centered > phi_cfg.band[1])
+        sync = smx.sync_partial(s, vf.swapaxes(1, 2), valid)
+        safe = sync.num / jnp.where(sync.den == 0, 1, sync.den)[..., None]
+        out = jax.lax.cond(overflow, lambda: safe, lambda: out)
+    else:
+        part = smx.sync_partial(s, vf.swapaxes(1, 2), valid)
+        out = part.num / jnp.where(part.den == 0, 1, part.den)[..., None]
+    return out.astype(qd.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block(ctx: LayerCtx, p: Params, x: jax.Array, positions: jax.Array):
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["norm"], x)
+    attn_out = L.attention_block(ctx, p["attn"], h, positions)
+    ssm_out = ssm_chunked(ctx, p["ssm"], h)
+    x = ctx.shard(x + attn_out + ssm_out, "act_resid")
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), jnp.zeros((), jnp.float32)
+
+
+def train_loss(ctx: LayerCtx, params: Params, batch: dict, *,
+               unroll: bool = False, remat: bool = True):
+    from repro.models import transformer as tfm
+    return tfm.train_loss(
+        ctx, params, batch, unroll=unroll, remat=remat, block_fn=block
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    inner, hm, n = _ssm_dims(cfg)
+    w = min(cfg.sliding_window or 1024, max_seq)
+    kv = (cfg.num_layers, batch, w, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dtype),
+        "v": jnp.zeros(kv, dtype),
+        "state": jnp.zeros((cfg.num_layers, batch, hm, SSM_HEAD, n),
+                           jnp.float32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype)),
+    )
+
+
+def _ring_from_prefill(k: jax.Array, lengths: jax.Array, w: int):
+    """Per-row ragged ring fill: slot s holds the token at position
+    p(s) = (l-1) - ((l-1-s) mod w) — the unique p in [l-w, l) with
+    p % w == s; slots with p < 0 (prompt shorter than the window) zero.
+    k: (B, T, H, Dh) -> (B, w, H, Dh)."""
+    b, t = k.shape[:2]
+    s = jnp.arange(w)[None, :]
+    l = lengths[:, None]
+    p = (l - 1) - ((l - 1 - s) % w)                     # (B, w)
+    ok = p >= 0
+    idx = jnp.clip(p, 0, t - 1)[..., None, None]
+    out = jnp.take_along_axis(k, idx, axis=1)
+    return jnp.where(ok[..., None, None], out, 0)
+
+
+def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
+            unroll: bool = False, **kw):
+    """Prompt pass; fills ring KV (last W *valid* positions, per-row
+    ragged) + SSM state (padding positions masked out of the recurrence)."""
+    cfg = ctx.cfg
+    w = cache["k"].shape[2]
+    x = L.embed(ctx, params, tokens)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    valid = jnp.arange(t)[None, :] < lengths[:, None]
+
+    def blk(p_i, xx):
+        h = L.norm(cfg, p_i["norm"], xx)
+        q, k, v = L.attention_qkv(ctx, p_i["attn"], h, positions)
+        from repro.kernels import ops
+        o = ops.attention_prefill(
+            q, k, v, phi_cfg=ctx.phi_cfg, causal=True,
+            sliding_window=cfg.sliding_window, use_pallas=ctx.use_pallas,
+            fallback=ctx.fallback,
+        )
+        o = o.reshape(b, t, cfg.q_dim)
+        attn_out = ctx.matmul(o, p_i["attn"]["wo"])
+        ssm_out, s_end = ssm_chunked(ctx, p_i["ssm"], h, return_state=True,
+                                     valid=valid)
+        xx = ctx.shard(xx + attn_out + ssm_out, "act_resid")
+        h2 = L.norm(cfg, p_i["mlp_norm"], xx)
+        xx = xx + L.mlp_block(ctx, p_i["mlp"], h2)
+        return ctx.shard(xx, "act_resid"), {
+            "k": _ring_from_prefill(k, lengths, w).astype(cache["k"].dtype),
+            "v": _ring_from_prefill(v, lengths, w).astype(cache["v"].dtype),
+            "state": s_end,
+        }
+
+    x, entries = stack.run_stack_collect(params["layers"], x, blk,
+                                         unroll=unroll)
+    x = L.norm(cfg, params["final_norm"], x)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None].clip(0), 1)
+    logits = L.lm_logits(ctx, params, last)[:, 0]
+    return logits, entries
+
+
+def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
+                unroll: bool = False):
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens[:, None])  # (B,1,D)
+    b = x.shape[0]
+    w = cache["k"].shape[2]
+
+    def blk(p_i, xx, c_i):
+        h = L.norm(cfg, p_i["norm"], xx)
+        q, k, v = L.attention_qkv(ctx, p_i["attn"], h, lengths[:, None])
+        slot = lengths % w
+        ck = c_i["k"].at[jnp.arange(b), slot].set(
+            k[:, 0].astype(c_i["k"].dtype))
+        cv = c_i["v"].at[jnp.arange(b), slot].set(
+            v[:, 0].astype(c_i["v"].dtype))
+        o = ring_decode_attention(ctx, q[:, 0], ck, cv, lengths + 1)
+        attn_out = ctx.matmul(o.reshape(b, 1, cfg.q_dim), p_i["attn"]["wo"])
+        ssm_out, new_state = ssm_step(ctx, p_i["ssm"], h[:, 0], c_i["state"])
+        xx = xx + attn_out + ssm_out[:, None]
+        h2 = L.norm(cfg, p_i["mlp_norm"], xx)
+        xx = xx + L.mlp_block(ctx, p_i["mlp"], h2)
+        return xx, {"k": ck, "v": cv, "state": new_state}
+
+    x, new_cache = stack.run_stack_cached(params["layers"], x, cache, blk,
+                                          unroll=unroll)
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(ctx, params, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,358 @@
+"""Shared building blocks for the model zoo.
+
+Everything is a pure function over explicit param pytrees (dicts of arrays):
+no framework magic, scan-compatible (layer params are stacked on a leading L
+axis by the model constructors), and shardable with `with_sharding_constraint`
+through the rules in :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SoftmaxPhiConfig
+from repro.core.dispatch import DispatchTable
+from repro.kernels import ops
+
+Params = dict
+ShardFn = Callable[[jax.Array, str], jax.Array]  # (x, logical role) -> x
+
+
+def no_shard(x: jax.Array, role: str) -> jax.Array:  # default: no constraints
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCtx:
+    """Per-call context threaded through every layer."""
+
+    cfg: ModelConfig
+    shard: ShardFn = no_shard
+    table: Optional[DispatchTable] = None
+    use_pallas: bool = False
+    decode_kv_block: int = 512
+    # False drops the lax.cond overflow-recompute branch (dry-run hygiene:
+    # cost_analysis would count both branches; paper treats P(overflow)≈0)
+    fallback: bool = True
+    # MoE routing group count (= data-parallel shard count at scale)
+    moe_groups: int = 1
+    # attention combine override, set by the distributed decode path
+    decode_attention_fn: Optional[Callable] = None
+    # mesh + sharding rules enable the manual (shard_map) dispatch paths
+    # (MoE dispatch locality, split-KV attention); None on single-host
+    mesh: Optional[Any] = None
+    rules: Optional[Any] = None
+
+    @property
+    def phi_cfg(self) -> SoftmaxPhiConfig:
+        return self.cfg.softmax_phi
+
+    def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        return ops.matmul(x, w, table=self.table, use_pallas=self.use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_params(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), _pdt(cfg)),
+                "bias": jnp.zeros((d,), _pdt(cfg))}
+    return {"scale": jnp.ones((d,), _pdt(cfg))}
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _adt(cfg: ModelConfig):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA, RoPE, optional sliding window)
+# ---------------------------------------------------------------------------
+
+
+def attention_params(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, dt = cfg.d_model, _pdt(cfg)
+    p = {
+        "wq": dense_init(k1, (d, cfg.q_dim), dt),
+        "wk": dense_init(k2, (d, cfg.kv_dim), dt),
+        "wv": dense_init(k3, (d, cfg.kv_dim), dt),
+        "wo": dense_init(k4, (cfg.q_dim, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def attention_qkv(
+    ctx: LayerCtx, p: Params, x: jax.Array, positions: jax.Array,
+    *, use_rope: bool = True,
+):
+    """Project to q, k, v. x: (B, S, D) -> q (B,S,HQ,Dh), k/v (B,S,HK,Dh)."""
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    q = ctx.matmul(x, p["wq"])
+    k = ctx.matmul(x, p["wk"])
+    v = ctx.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = ctx.shard(q, "act_qkv")
+    k = ctx.shard(k, "act_kv")
+    v = ctx.shard(v, "act_kv")
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    ctx: LayerCtx, p: Params, x: jax.Array, positions: jax.Array,
+    *, causal: bool = True, use_rope: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Full-sequence (train / prefill / encoder) attention.
+
+    ``kv_override`` feeds cross-attention (keys/values from the encoder).
+    """
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    if kv_override is None:
+        q, k, v = attention_qkv(ctx, p, x, positions, use_rope=use_rope)
+    else:
+        q = ctx.matmul(x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+        k, v = kv_override
+    o = ops.attention_prefill(
+        q, k, v,
+        phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
+        SoftmaxPhiConfig(enabled=False),
+        causal=causal,
+        sliding_window=cfg.sliding_window,
+        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+    )
+    o = ctx.shard(o.reshape(b, s, cfg.q_dim), "act_attn_out")
+    return ctx.matmul(o, p["wo"])
+
+
+def attention_decode_block(
+    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array, lengths: jax.Array,
+    *, use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S, HK, Dh); lengths: (B,) current lengths.
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    cfg = ctx.cfg
+    b = x.shape[0]
+    q, k, v = attention_qkv(
+        ctx, p, x, position[:, None], use_rope=use_rope
+    )  # q: (B,1,HQ,Dh), k/v: (B,1,HK,Dh)
+    # single-token q/k/v are tiny: replicate over `model` (the sharded
+    # resource is the cache sequence — T1's split-KV layout)
+    k_new = ctx.shard(k[:, 0], "act_decode_rep")
+    v_new = ctx.shard(v[:, 0], "act_decode_rep")
+    qd = ctx.shard(q[:, 0], "act_decode_rep")  # (B, HQ, Dh)
+    # append at each sequence's own length (in place, S-sharded cache)
+    cache_k = ctx.shard(_scatter_kv(cache_k, k_new, lengths),
+                        "act_cache_slice")
+    cache_v = ctx.shard(_scatter_kv(cache_v, v_new, lengths),
+                        "act_cache_slice")
+    new_len = lengths + 1
+    if ctx.decode_attention_fn is not None:
+        o = ctx.decode_attention_fn(qd, cache_k, cache_v, new_len)
+    else:
+        o = ops.attention_decode(
+            qd, cache_k, cache_v, new_len,
+            phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
+            SoftmaxPhiConfig(enabled=False),
+            block_k=ctx.decode_kv_block,
+            use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+            shard=ctx.shard,
+        )
+    o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
+    return ctx.matmul(o, p["wo"]), cache_k, cache_v
+
+
+def _scatter_kv(cache: jax.Array, new: jax.Array, lengths: jax.Array):
+    """cache: (B, S, H, D), new: (B, H, D) — write at per-row position."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), lengths].set(new.astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (dense)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    d, f, dt = cfg.d_model, d_ff or cfg.d_ff, _pdt(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d, f), dt),
+            "w_up": dense_init(k2, (d, f), dt),
+            "w_down": dense_init(k3, (f, d), dt),
+        }
+    return {
+        "w_up": dense_init(k1, (d, f), dt),
+        "w_down": dense_init(k2, (f, d), dt),
+    }
+
+
+def mlp_block(ctx: LayerCtx, p: Params, x: jax.Array) -> jax.Array:
+    cfg = ctx.cfg
+    if cfg.activation in ("swiglu", "geglu"):
+        if ctx.use_pallas:
+            # T2 extension: single fused kernel for gate+up+epilogue —
+            # the (M, F) gate/up tensors never round-trip HBM
+            h = ops.fused_ffn(x, p["w_gate"], p["w_up"],
+                              activation=cfg.activation, use_pallas=True)
+            h = ctx.shard(h, "act_ffn")
+        else:
+            g = ctx.matmul(x, p["w_gate"])
+            u = ctx.matmul(x, p["w_up"])
+            g = ctx.shard(g, "act_ffn")
+            u = ctx.shard(u, "act_ffn")
+            act = (jax.nn.silu(g) if cfg.activation == "swiglu"
+                   else jax.nn.gelu(g))
+            h = act * u
+    else:
+        h = ctx.matmul(x, p["w_up"])
+        h = ctx.shard(h, "act_ffn")
+        h = jax.nn.gelu(h)
+    return ctx.matmul(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def vocab_padded(cfg: ModelConfig, multiple: int = 256) -> int:
+    v = cfg.vocab_size
+    return (v + multiple - 1) // multiple * multiple
+
+
+def embed_params(cfg: ModelConfig, key) -> Params:
+    vp = vocab_padded(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (vp, cfg.d_model), _pdt(cfg), in_axis=1)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, vp), _pdt(cfg))
+    return p
+
+
+def embed(ctx: LayerCtx, p: Params, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return ctx.shard(x.astype(_adt(ctx.cfg)), "act_resid")
+
+
+def lm_logits(ctx: LayerCtx, p: Params, x: jax.Array) -> jax.Array:
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    logits = ctx.matmul(x, w)
+    return ctx.shard(logits, "act_logits")
+
+
+def cross_entropy_loss(
+    ctx: LayerCtx, p: Params, x: jax.Array, labels: jax.Array,
+    *, seq_chunks: int = 8,
+) -> jax.Array:
+    """Memory-sane LM loss: the (B,S,V) logits tensor is never materialized
+    at full sequence length — a *python-unrolled* loop over sequence chunks
+    keeps HLO flat (counted exactly by cost_analysis; see EXPERIMENTS.md
+    §Methodology) while bounding live logits to (B, S/chunks, V).
+    """
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    vp = vocab_padded(cfg)
+    seq_chunks = min(seq_chunks, s)
+    assert s % seq_chunks == 0
+    cs = s // seq_chunks
+    total = jnp.zeros((), jnp.float32)
+    for i in range(seq_chunks):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * cs, cs, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+        logits = lm_logits(ctx, p, xc).astype(jnp.float32)
+        if vp != cfg.vocab_size:  # mask padded vocab tail
+            pad_mask = jnp.arange(vp) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e9, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(logz - gold)
+    return total / (b * s)

@@ -1,0 +1,364 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+T1 applicability note (DESIGN.md §4): RWKV has **no softmax attention**, so
+the paper's unified-max softmax does not apply — the arch is implemented
+without it (per the assignment) while T2/T3 fully apply to its projections
+(decode-phase RWKV is the flattest-GEMM regime of all the assigned archs).
+
+TPU-native formulation: training/prefill use a **chunked-parallel** scheme —
+within a chunk the recurrence is expanded into dense einsums (MXU-friendly),
+across chunks the state is propagated with ``jax.lax.associative_scan``
+(log-depth, *flat HLO*: no sequential while loop, so XLA cost analysis and
+the dry-run probes see every FLOP). Decode is the O(1) recurrence step.
+
+Per head (head size N), with data-dependent decay w_t ∈ (0,1)^N and bonus u:
+
+    S_t = diag(w_t) · S_{t-1} + k_t vᵗ_t
+    o_t = r_tᵀ · (S_{t-1} + diag(u) k_t vᵗ_t)
+
+Chunk algebra (cumulative log-decay ``la_t = Σ_{s≤t} log w_s``):
+    o_t   = (r_t e^{la_{t-1}}) · S_0  +  Σ_{s<t} (r_t·k_s e^{la_{t-1}-la_s}) v_s
+            + (r_t·u·k_t) v_t
+    S_end = diag(e^{la_L}) S_0 + Σ_s (k_s e^{la_L - la_s}) vᵗ_s
+
+All exponents in the S_end/inter terms are ≤ 0 (safe); the intra-chunk
+``e^{la_{t-1}-la_s}`` (s<t ⇒ ≤0) is factored as e^{la_{t-1}}·e^{-la_s} with a
+clamp at ±30 — exact for the calibrated decay range (|log w| ≤ ~0.1/token,
+chunk=64), see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models.layers import LayerCtx, Params
+
+CHUNK = 64
+_CLAMP = 30.0
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    n = cfg.ssm.head_dim if cfg.ssm else 64
+    return cfg.d_model // n, n
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    h, n = _heads(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "tm_norm": L.norm_params(cfg, d),
+        "tm": {
+            "mu_r": jnp.full((d,), 0.5, dt),
+            "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_v": jnp.full((d,), 0.5, dt),
+            "mu_g": jnp.full((d,), 0.5, dt),
+            "mu_w": jnp.full((d,), 0.5, dt),
+            "w_r": L.dense_init(ks[0], (d, d), dt),
+            "w_k": L.dense_init(ks[1], (d, d), dt),
+            "w_v": L.dense_init(ks[2], (d, d), dt),
+            "w_g": L.dense_init(ks[3], (d, d), dt),
+            "w_o": L.dense_init(ks[4], (d, d), dt),
+            # data-dependent decay lora (Finch signature): w = exp(-exp(·))
+            "decay_base": jnp.full((d,), -6.0, jnp.float32),
+            "decay_A": L.dense_init(ks[5], (d, lora), jnp.float32),
+            "decay_B": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(
+                jnp.float32),
+            "bonus_u": jnp.zeros((h, n), jnp.float32),
+            "ln_out": jnp.ones((d,), dt),
+        },
+        "cm_norm": L.norm_params(cfg, d),
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_r": jnp.full((d,), 0.5, dt),
+            "w_k": L.dense_init(ks[7], (d, cfg.d_ff), dt),
+            "w_v": L.dense_init(ks[0], (cfg.d_ff, d), dt),
+            "w_r": L.dense_init(ks[1], (d, d), dt),
+        },
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: layer_params(cfg, k))(lkeys)
+    return {
+        **L.embed_params(cfg, ke),
+        "layers": stacked,
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Time mixing — chunked parallel (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Previous-token features; ``last`` seeds position 0 (decode cache)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _decay_logw(tm: Params, xw: jax.Array) -> jax.Array:
+    """log w_t ∈ (-inf, 0): data-dependent per-channel decay."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ tm["decay_A"]) @ tm["decay_B"]
+    return -jnp.exp(tm["decay_base"] + lo)  # log w = -exp(·) < 0
+
+
+def time_mix_chunked(
+    ctx: LayerCtx, tm: Params, x: jax.Array,
+    state0: jax.Array | None = None, last_x: jax.Array | None = None,
+    *, return_state: bool = False, valid: jax.Array | None = None,
+):
+    """x: (B, T, D). Returns out (+ final state, last x).
+
+    ``valid``: (B, T) bool — invalid (padding) positions neither decay nor
+    write the state, so per-row prompt lengths produce exact states.
+    T is padded internally to a CHUNK multiple.
+    """
+    cfg = ctx.cfg
+    h, n = _heads(cfg)
+    b, t_in, d = x.shape
+    pad_t = (-t_in) % min(CHUNK, max(t_in, 1))
+    if pad_t:
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+        if valid is None:
+            valid = jnp.arange(t_in + pad_t)[None, :] < t_in
+        else:
+            valid = jnp.pad(valid, ((0, 0), (0, pad_t)))
+    b, t, d = x.shape
+    xx = _shift(x, last_x)
+
+    def lerp(mu):
+        return x + (xx - x) * mu
+
+    r = ctx.matmul(lerp(tm["mu_r"]), tm["w_r"])
+    k = ctx.matmul(lerp(tm["mu_k"]), tm["w_k"])
+    v = ctx.matmul(lerp(tm["mu_v"]), tm["w_v"])
+    gate = jax.nn.silu(ctx.matmul(lerp(tm["mu_g"]), tm["w_g"]))
+    logw = _decay_logw(tm, lerp(tm["mu_w"]))                  # (B,T,D) f32
+    if valid is not None:
+        vm = valid[..., None]
+        k = jnp.where(vm, k, 0)        # no state write at padding
+        logw = jnp.where(vm, logw, 0)  # no decay at padding
+
+    c = min(CHUNK, t)
+    assert t % c == 0
+    nc = t // c
+    shape = (b, nc, c, h, n)
+    rr = r.reshape(shape).astype(jnp.float32)
+    kk = k.reshape(shape).astype(jnp.float32)
+    vv = v.reshape(shape).astype(jnp.float32)
+    lw = logw.reshape(shape)
+
+    la = jnp.cumsum(lw, axis=2)                                # (B,NC,C,H,N)
+    la_prev = la - lw
+    la_end = la[:, :, -1:]                                     # (B,NC,1,H,N)
+
+    # ---- per-chunk summaries for the cross-chunk associative scan ----
+    dec = jnp.exp(la_end[:, :, 0])                             # (B,NC,H,N)
+    kd = kk * jnp.exp(la_end - la)                             # ≤ 0 exps
+    u_mat = jnp.einsum("bcthn,bcthm->bchnm", kd, vv)           # (B,NC,H,N,N)
+
+    def combine(a, b_):
+        d1, u1 = a
+        d2, u2 = b_
+        return d1 * d2, u2 + d2[..., None] * u1
+
+    dec_s, u_s = jax.lax.associative_scan(combine, (dec, u_mat), axis=1)
+    # state at chunk START j: S_j = dec/u up to chunk j-1 applied to state0
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    s_end = dec_s[..., None] * state0[:, None] + u_s           # (B,NC,H,N,N)
+    s_start = jnp.concatenate([state0[:, None], s_end[:, :-1]], axis=1)
+
+    # ---- within-chunk ----
+    q_t = rr * jnp.exp(la_prev)                                # safe: ≤0
+    inter = jnp.einsum("bcthn,bchnm->bcthm", q_t, s_start)
+    k_neg = kk * jnp.exp(jnp.clip(-la, -_CLAMP, _CLAMP))
+    scores = jnp.einsum("bcthn,bcshn->bchts", q_t, k_neg)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    intra = jnp.einsum("bchts,bcshn->bcthn", scores, vv)
+    diag = jnp.einsum(
+        "bcthn,hn,bcthn->bcth", rr, tm["bonus_u"], kk
+    )[..., None] * vv
+    out = inter + intra + diag                                 # (B,NC,C,H,N)
+
+    out = out.reshape(b, t, d)
+    out = _headnorm(out, tm["ln_out"], h, n).astype(x.dtype) * gate
+    out = ctx.matmul(out, tm["w_o"])[:, :t_in]
+    if return_state:
+        return out, s_end[:, -1], x[:, t_in - 1]
+    return out
+
+
+def _headnorm(x: jax.Array, scale: jax.Array, h: int, n: int) -> jax.Array:
+    b, t, d = x.shape
+    xh = x.reshape(b, t, h, n).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(b, t, d) * scale.astype(jnp.float32))
+
+
+def time_mix_step(ctx: LayerCtx, tm: Params, x: jax.Array,
+                  state: jax.Array, last_x: jax.Array):
+    """One-token recurrence. x: (B, D); state: (B,H,N,N); last_x: (B,D)."""
+    cfg = ctx.cfg
+    h, n = _heads(cfg)
+    b, d = x.shape
+
+    def lerp(mu):
+        return x + (last_x - x) * mu
+
+    r = ctx.matmul(lerp(tm["mu_r"]), tm["w_r"]).astype(jnp.float32)
+    k = ctx.matmul(lerp(tm["mu_k"]), tm["w_k"]).astype(jnp.float32)
+    v = ctx.matmul(lerp(tm["mu_v"]), tm["w_v"]).astype(jnp.float32)
+    gate = jax.nn.silu(ctx.matmul(lerp(tm["mu_g"]), tm["w_g"]))
+    logw = _decay_logw(tm, lerp(tm["mu_w"]))                  # (B,D)
+
+    rr = r.reshape(b, h, n)
+    kk = k.reshape(b, h, n)
+    vv = v.reshape(b, h, n)
+    w = jnp.exp(logw).reshape(b, h, n)
+
+    kv = jnp.einsum("bhn,bhm->bhnm", kk, vv)
+    att = state + tm["bonus_u"][None, :, :, None] * kv
+    o = jnp.einsum("bhn,bhnm->bhm", rr, att).reshape(b, d)
+    new_state = w[..., None] * state + kv
+
+    o = _headnorm(o[:, None], tm["ln_out"], h, n)[:, 0].astype(x.dtype) * gate
+    return ctx.matmul(o, tm["w_o"]), new_state, x
+
+
+# ---------------------------------------------------------------------------
+# Channel mixing
+# ---------------------------------------------------------------------------
+
+
+def channel_mix(ctx: LayerCtx, cm: Params, x: jax.Array,
+                last_x: jax.Array | None = None):
+    xx = _shift(x, last_x) if x.ndim == 3 else last_x
+    xk = x + (xx - x) * cm["mu_k"]
+    xr = x + (xx - x) * cm["mu_r"]
+    k = ctx.matmul(xk, cm["w_k"])
+    k = ctx.shard(k, "act_ffn") if x.ndim == 3 else k
+    k = jnp.square(jax.nn.relu(k))
+    out = ctx.matmul(k, cm["w_v"])
+    return out * jax.nn.sigmoid(ctx.matmul(xr, cm["w_r"]))
+
+
+# ---------------------------------------------------------------------------
+# Blocks / model API
+# ---------------------------------------------------------------------------
+
+
+def block(ctx: LayerCtx, p: Params, x: jax.Array, positions=None):
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["tm_norm"], x)
+    x = x + time_mix_chunked(ctx, p["tm"], h)
+    x = ctx.shard(x, "act_resid")
+    h = L.norm(cfg, p["cm_norm"], x)
+    x = x + channel_mix(ctx, p["cm"], h)
+    return ctx.shard(x, "act_resid"), jnp.zeros((), jnp.float32)
+
+
+def train_loss(ctx: LayerCtx, params: Params, batch: dict, *,
+               unroll: bool = False, remat: bool = True):
+    from repro.models import transformer as tfm
+    return tfm.train_loss(
+        ctx, params, batch, unroll=unroll, remat=remat, block_fn=block
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    h, n = _heads(cfg)
+    del max_seq  # O(1) state — the long_500k story
+    return {
+        "state": jnp.zeros((cfg.num_layers, batch, h, n, n), jnp.float32),
+        "tm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model),
+                          jnp.dtype(cfg.activation_dtype)),
+        "cm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model),
+                          jnp.dtype(cfg.activation_dtype)),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq)),
+    )
+
+
+def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
+            unroll: bool = False, **kw):
+    """Chunked-parallel prompt processing; emits the recurrent state cache.
+
+    Per-row ragged prompts are exact: positions >= lengths are masked in
+    the recurrence (no state write, no decay), and the shift features for
+    the next decode step are gathered at each row's own last position.
+    """
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens)
+    b, t, _ = x.shape
+    valid = jnp.arange(t)[None, :] < lengths[:, None]
+
+    def last_tok(h):
+        return jnp.take_along_axis(
+            h, (lengths - 1)[:, None, None].clip(0), axis=1)[:, 0]
+
+    def blk(p_i, xx):
+        h = L.norm(cfg, p_i["tm_norm"], xx)
+        tm_out, s_end, _ = time_mix_chunked(
+            ctx, p_i["tm"], h, return_state=True, valid=valid
+        )
+        xx = xx + tm_out
+        h2 = L.norm(cfg, p_i["cm_norm"], xx)
+        xx = xx + channel_mix(ctx, p_i["cm"], h2)
+        return ctx.shard(xx, "act_resid"), {
+            "state": s_end, "tm_x": last_tok(h), "cm_x": last_tok(h2)
+        }
+
+    x, entries = stack.run_stack_collect(
+        params["layers"], x, blk, unroll=unroll
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None].clip(0), 1)
+    logits = L.lm_logits(ctx, params, last)[:, 0]
+    return logits, entries
+
+
+def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
+                unroll: bool = False):
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens[:, None])[:, 0]  # (B, D)
+
+    def blk(p_i, xx, c_i):
+        h = L.norm(cfg, p_i["tm_norm"], xx)
+        o, new_state, tm_last = time_mix_step(
+            ctx, p_i["tm"], h, c_i["state"], c_i["tm_x"]
+        )
+        xx = xx + o
+        h2 = L.norm(cfg, p_i["cm_norm"], xx)
+        xx = xx + channel_mix(ctx, p_i["cm"], h2, last_x=c_i["cm_x"])
+        return xx, {"state": new_state, "tm_x": tm_last, "cm_x": h2}
+
+    x, new_cache = stack.run_stack_cached(
+        params["layers"], x, cache, blk, unroll=unroll
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(ctx, params, x[:, None])[:, 0]
+    return logits, new_cache

@@ -1,0 +1,85 @@
+"""Layer-stack plumbing shared by all model families.
+
+Uniform block interfaces:
+  * train/prefill-style: ``block_fn(p_i, x) -> (x, aux)`` — aux is a scalar
+    (MoE load-balance loss; 0.0 for other families), accumulated across
+    layers.
+  * cached decode-style: ``block_fn(p_i, x, cache_i) -> (x, new_cache_i)``
+    where ``cache_i`` is the per-layer slice of a stacked cache pytree.
+
+``unroll=False`` uses ``lax.scan`` over the stacked-L params (compact HLO —
+the only while-loop in the whole program, with a known trip count);
+``unroll=True`` emits a flat python loop for the cost-analysis probes.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def num_layers_of(layers_params) -> int:
+    return jax.tree_util.tree_leaves(layers_params)[0].shape[0]
+
+
+def run_stack(layers_params, x, block_fn: Callable, *, unroll: bool = False):
+    """Returns (x, total_aux)."""
+    if unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(num_layers_of(layers_params)):
+            p_i = jax.tree.map(lambda a: a[i], layers_params)
+            x, a = block_fn(p_i, x)
+            aux = aux + a
+        return x, aux
+
+    def layer_scan_body(carry, p_i):
+        x, aux = carry
+        x, a = block_fn(p_i, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        layer_scan_body, (x, jnp.zeros((), jnp.float32)), layers_params
+    )
+    return x, aux
+
+
+def run_stack_collect(layers_params, x, block_fn: Callable,
+                      *, unroll: bool = False):
+    """Like run_stack but blocks return (x, per_layer_output) and the
+    per-layer outputs are stacked (used by prefill to build the KV cache)."""
+    if unroll:
+        outs = []
+        for i in range(num_layers_of(layers_params)):
+            p_i = jax.tree.map(lambda a: a[i], layers_params)
+            x, o = block_fn(p_i, x)
+            outs.append(o)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+        return x, stacked
+
+    def layer_scan_body(carry, p_i):
+        x, o = block_fn(p_i, carry)
+        return x, o
+
+    return jax.lax.scan(layer_scan_body, x, layers_params)
+
+
+def run_stack_cached(layers_params, x, cache, block_fn: Callable,
+                     *, unroll: bool = False):
+    """Returns (x, new_cache) — cache leaves have leading L axis."""
+    if unroll:
+        news = []
+        for i in range(num_layers_of(layers_params)):
+            p_i = jax.tree.map(lambda a: a[i], layers_params)
+            c_i = jax.tree.map(lambda a: a[i], cache)
+            x, c_new = block_fn(p_i, x, c_i)
+            news.append(c_new)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *news)
+        return x, stacked
+
+    def layer_scan_body(carry, xs):
+        p_i, c_i = xs
+        x, c_new = block_fn(p_i, carry, c_i)
+        return x, c_new
+
+    return jax.lax.scan(layer_scan_body, x, (layers_params, cache))

@@ -1,0 +1,213 @@
+"""Dense GQA decoder-only transformer (qwen2 / minitron / deepseek / phi3
+families) plus the VLM variant (internvl2 backbone with stub vision prefix).
+
+Layer params are stacked on a leading L axis; ``lax.scan`` keeps the HLO
+compact for 95-layer dry-run compiles, ``unroll=True`` flattens for the
+cost-analysis probes. The MoE model reuses this module's plumbing with its
+own block functions (see :mod:`repro.models.moe`).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models.layers import LayerCtx, Params
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.norm_params(cfg, cfg.d_model),
+        "attn": L.attention_params(cfg, k1),
+        "mlp_norm": L.norm_params(cfg, cfg.d_model),
+        "mlp": L.mlp_params(cfg, k2),
+    }
+
+
+def init_params(cfg: ModelConfig, key,
+                layer_params_fn: Callable = None) -> Params:
+    lp = layer_params_fn or layer_params
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    stacked = jax.vmap(lambda k: lp(cfg, k))(lkeys)
+    return {
+        **L.embed_params(cfg, ke),
+        "layers": stacked,
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks (dense). MoE swaps the mlp half.
+# ---------------------------------------------------------------------------
+
+
+def block(ctx: LayerCtx, p: Params, x: jax.Array,
+          positions: jax.Array):
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["attn_norm"], x)
+    x = x + L.attention_block(ctx, p["attn"], h, positions)
+    x = ctx.shard(x, "act_resid")
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), jnp.zeros((), jnp.float32)
+
+
+def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+                 cache_i: dict, lengths: jax.Array):
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["attn_norm"], x)
+    a, ck, cv = L.attention_decode_block(
+        ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
+    )
+    x = x + a
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
+
+
+def prefill_block(ctx: LayerCtx, p: Params, x: jax.Array,
+                  positions: jax.Array, s_max: int):
+    """Like ``block`` but also emits this layer's (padded) KV cache entry."""
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    h = L.norm(cfg, p["attn_norm"], x)
+    q, k, v = L.attention_qkv(ctx, p["attn"], h, positions)
+    from repro.kernels import ops
+    o = ops.attention_prefill(
+        q, k, v, phi_cfg=ctx.phi_cfg, causal=True,
+        sliding_window=cfg.sliding_window, use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+    )
+    o = ctx.shard(o.reshape(b, s, cfg.q_dim), "act_attn_out")
+    x = x + ctx.matmul(o, p["attn"]["wo"])
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    pad = [(0, 0), (0, s_max - s), (0, 0), (0, 0)]
+    entry = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    return ctx.shard(x, "act_resid"), entry
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (parameterized over block fns so MoE can reuse them)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, remat: bool):
+    if not remat:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def forward_hidden(
+    ctx: LayerCtx, params: Params, tokens: jax.Array,
+    *, prefix_embeds: Optional[jax.Array] = None,
+    unroll: bool = False, remat: bool = False,
+    block_fn: Callable = block,
+):
+    """Token (+ optional embedding prefix) -> (hidden (B,S,D), aux loss)."""
+    x = L.embed(ctx, params, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = ctx.shard(x, "act_resid")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    body = _maybe_remat(
+        lambda p_i, xx: block_fn(ctx, p_i, xx, positions), remat
+    )
+    x, aux = stack.run_stack(params["layers"], x, body, unroll=unroll)
+    return L.norm(ctx.cfg, params["final_norm"], x), aux
+
+
+def train_loss(
+    ctx: LayerCtx, params: Params, batch: dict,
+    *, unroll: bool = False, remat: bool = True,
+    block_fn: Callable = block, aux_weight: float = 0.0,
+) -> jax.Array:
+    x, aux = forward_hidden(
+        ctx, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        unroll=unroll, remat=remat, block_fn=block_fn,
+    )
+    if batch.get("prefix_embeds") is not None:
+        npfx = batch["prefix_embeds"].shape[1]
+        x = x[:, npfx:]
+    loss = L.cross_entropy_loss(ctx, params, x, batch["labels"])
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def prefill(
+    ctx: LayerCtx, params: Params, tokens: jax.Array, lengths: jax.Array,
+    cache: dict, *, prefix_embeds: Optional[jax.Array] = None,
+    unroll: bool = False, prefill_block_fn: Callable = prefill_block,
+):
+    """Process the prompt, fill the KV cache, return last-token logits."""
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    s_max = cache["k"].shape[2]
+
+    x, entries = stack.run_stack_collect(
+        params["layers"], x,
+        lambda p_i, xx: prefill_block_fn(ctx, p_i, xx, positions, s_max),
+        unroll=unroll,
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    last = jnp.take_along_axis(
+        x, (lengths - 1)[:, None, None].clip(0), axis=1
+    )
+    logits = L.lm_logits(ctx, params, last)[:, 0]
+    cache = {"k": entries["k"].astype(cache["k"].dtype),
+             "v": entries["v"].astype(cache["v"].dtype)}
+    return logits, cache
+
+
+def decode_step(
+    ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
+    lengths: jax.Array, *, unroll: bool = False,
+    decode_block_fn: Callable = decode_block,
+):
+    """One decode step. tokens: (B,) -> logits (B, V_padded), new cache."""
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
+    position = lengths
+
+    x, new_cache = stack.run_stack_cached(
+        params["layers"], x, cache,
+        lambda p_i, xx, c_i: decode_block_fn(ctx, p_i, xx, position, c_i,
+                                             lengths),
+        unroll=unroll,
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(ctx, params, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,7 @@
+"""Serving substrate: KV-cache management, continuous-batching engine,
+sampling. The engine is the end-to-end realization of the paper's system:
+prefill fills slot caches, decode steps run the T1/T2/T3-optimized
+``decode_step`` over the whole active batch every tick.
+"""
+from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.sampling import sample  # noqa: F401

@@ -1,0 +1,173 @@
+"""Continuous-batching inference engine (prefill + decode over slot caches).
+
+The serving realization of the paper's dataflow (Fig. 2): prefill is the
+GEMM-shaped phase (one request at a time, bucketed prompt lengths), decode
+is the flat-GEMM/GEMV-shaped phase executed over the *whole* slot batch
+every tick. New requests claim slots as soon as finished sequences release
+them — decode batches stay full (continuous batching), which is what keeps
+the decode-phase GEMMs at M = num_slots, the regime T2/T3 optimize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RunConfig
+from repro.core.dispatch import DispatchTable
+from repro.models.api import get_model
+from repro.models.layers import LayerCtx
+from repro.serving.kvcache import SlotManager
+from repro.serving.sampling import sample
+
+PROMPT_BUCKET = 64
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray               # (P,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _Done:
+    tokens: list
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_slots: int = 8,
+        max_seq: int = 2048,
+        table: Optional[DispatchTable] = None,
+        use_pallas: bool = False,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.ctx = LayerCtx(cfg=cfg, table=table, use_pallas=use_pallas)
+        self.params = params
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.slots = SlotManager(num_slots, max_seq)
+        self.cache = self.api.init_cache(num_slots, max_seq)
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.by_slot: dict[int, Request] = {}
+        self.results: dict[int, _Done] = {}
+        self.ticks = 0
+
+        self._decode = jax.jit(
+            lambda p, t, c, l: self.api.decode_step(self.ctx, p, t, c, l),
+            donate_argnums=(2,),
+        )
+        self._prefill_cache = {}  # bucketed P -> jitted fn
+
+    # -- public API -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, requests: list[Request], *, max_ticks: int = 10_000
+            ) -> dict[int, list[int]]:
+        for r in requests:
+            self.submit(r)
+        while (self.queue or self.by_slot) and self.ticks < max_ticks:
+            self.step()
+        return {rid: d.tokens for rid, d in self.results.items()}
+
+    # -- engine tick ------------------------------------------------------------
+
+    def step(self) -> list[tuple[int, int]]:
+        """Admit + prefill waiting requests, then one decode tick."""
+        self._admit()
+        if not self.by_slot:
+            return []
+        emitted = self._decode_tick()
+        self.ticks += 1
+        return emitted
+
+    # -- internals ---------------------------------------------------------------
+
+    def _admit(self) -> None:
+        still_waiting = []
+        for req in self.queue:
+            idx = self.slots.try_assign(req.id, len(req.prompt),
+                                        req.max_new_tokens)
+            if idx is None:
+                still_waiting.append(req)
+                continue
+            self.by_slot[idx] = req
+            self.results[req.id] = _Done(tokens=[])
+            self._prefill_into(idx, req)
+        self.queue = still_waiting
+
+    def _prefill_fn(self, padded: int):
+        if padded not in self._prefill_cache:
+            cache1 = self.api.cache_spec(1, self.max_seq)
+
+            def fn(params, tokens, lengths):
+                cache = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), cache1)
+                return self.api.prefill(
+                    self.ctx, params, tokens, lengths, cache)
+
+            self._prefill_cache[padded] = jax.jit(fn)
+        return self._prefill_cache[padded]
+
+    def _prefill_into(self, idx: int, req: Request) -> None:
+        p = len(req.prompt)
+        padded = -(-max(p, 1) // PROMPT_BUCKET) * PROMPT_BUCKET
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :p] = req.prompt
+        logits, cache1 = self._prefill_fn(padded)(
+            self.params, jnp.asarray(toks), jnp.array([p], jnp.int32))
+        # insert the single-sequence cache into slot idx (batch axis 1)
+        self.cache = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), idx, axis=1),
+            self.cache, cache1,
+        )
+        tok = self._sample(logits, req)
+        self._emit(idx, req, int(tok[0]), wrote_kv=False)
+
+    def _decode_tick(self) -> list[tuple[int, int]]:
+        lengths = jnp.asarray(self.slots.lengths())
+        tokens = np.zeros((self.num_slots,), np.int32)
+        for idx, req in self.by_slot.items():
+            tokens[idx] = self.results[req.id].tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, lengths)
+        emitted = []
+        for idx in list(self.by_slot):
+            req = self.by_slot[idx]
+            tok = int(self._sample(logits[idx:idx + 1], req)[0])
+            emitted.append((req.id, tok))
+            self._emit(idx, req, tok)
+        return emitted
+
+    def _sample(self, logits: jax.Array, req: Request) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sample(
+            logits, sub, temperature=req.temperature, top_k=req.top_k,
+            vocab_size=self.cfg.vocab_size,
+        )
+
+    def _emit(self, idx: int, req: Request, tok: int,
+              *, wrote_kv: bool = True) -> None:
+        self.results[req.id].tokens.append(tok)
+        self.slots.tick(idx, wrote_kv=wrote_kv)
+        eos = req.eos_token is not None and tok == req.eos_token
+        if self.slots.done(idx, eos):
+            self.slots.release(idx)
+            del self.by_slot[idx]

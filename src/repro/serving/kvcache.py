@@ -1,0 +1,69 @@
+"""Slot-based KV cache manager for continuous batching.
+
+The device cache is the model family's own pytree (dense KV / ring KV +
+SSM state / recurrent state — ``api.init_cache``), always allocated for
+``num_slots`` sequences at ``max_seq``. This manager tracks slot
+occupancy host-side and produces the per-tick (lengths, active mask)
+arrays; eviction is immediate on completion so a waiting request can
+claim the slot on the next tick (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Slot:
+    request_id: Optional[int] = None
+    length: int = 0                  # valid positions in the cache
+    generated: int = 0
+    max_new: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.request_id is None
+
+
+class SlotManager:
+    def __init__(self, num_slots: int, max_seq: int):
+        self.max_seq = max_seq
+        self.slots = [Slot() for _ in range(num_slots)]
+
+    def try_assign(self, request_id: int, prompt_len: int,
+                   max_new: int) -> Optional[int]:
+        if prompt_len + max_new > self.max_seq:
+            raise ValueError(
+                f"request {request_id} needs {prompt_len + max_new} > "
+                f"max_seq {self.max_seq}")
+        for i, s in enumerate(self.slots):
+            if s.free:
+                self.slots[i] = Slot(request_id, prompt_len, 0, max_new)
+                return i
+        return None
+
+    def release(self, idx: int) -> None:
+        self.slots[idx] = Slot()
+
+    def lengths(self) -> np.ndarray:
+        return np.array([s.length for s in self.slots], np.int32)
+
+    def active(self) -> np.ndarray:
+        return np.array([not s.free for s in self.slots], np.bool_)
+
+    def tick(self, idx: int, *, wrote_kv: bool = True) -> None:
+        """Account one emitted token. ``wrote_kv=False`` for the token that
+        comes out of prefill itself (its KV lands in the cache only on the
+        next decode tick, which scatters at the current length)."""
+        s = self.slots[idx]
+        if wrote_kv:
+            s.length += 1
+        s.generated += 1
+
+    def done(self, idx: int, eos: bool) -> bool:
+        s = self.slots[idx]
+        return (not s.free) and (
+            eos or s.generated >= s.max_new or s.length >= self.max_seq
+        )

@@ -1,0 +1,28 @@
+"""Token sampling: greedy / temperature / top-k (pure JAX, vocab-padded
+logits are masked by the caller or here via ``vocab_size``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,              # (B, V_padded) f32/bf16
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    vocab_size: int = 0,
+) -> jax.Array:
+    """Returns (B,) int32 next tokens."""
+    logits = logits.astype(jnp.float32)
+    if vocab_size and vocab_size < logits.shape[-1]:
+        pad = jnp.arange(logits.shape[-1]) >= vocab_size
+        logits = jnp.where(pad, -jnp.inf, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, state, data pipeline, checkpointing, loop.
+
+Everything is pure JAX over explicit pytrees; sharding comes from
+:mod:`repro.distributed.sharding` (params FSDP over ``pod``+``data``, TP
+over ``model`` — optimizer moments inherit the param sharding, which *is*
+the ZeRO posture).
+"""
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    lr_schedule,
+)
+from repro.training.train_state import TrainState  # noqa: F401

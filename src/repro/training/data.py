@@ -1,0 +1,128 @@
+"""Deterministic sharded synthetic-token pipeline with background prefetch.
+
+Determinism contract (the fault-tolerance linchpin): batch contents are a
+pure function of ``(seed, step)`` — restarting from a checkpoint at step k
+replays exactly the stream a never-interrupted run would have seen, on any
+host count (each host materializes only its shard of the global batch, so
+elastic restarts re-slice the same global stream).
+
+Tokens follow a Zipf-ish distribution over the vocab with a deterministic
+per-step permutation — cheap to generate, non-degenerate for throughput
+work, and the label stream is the standard next-token shift.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+class SyntheticTokens:
+    """Deterministic (seed, step) -> batch generator."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        shape: ShapeConfig,
+        *,
+        seed: int = 0,
+        host_index: int = 0,
+        host_count: int = 1,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.host_index = host_index
+        self.host_count = host_count
+        assert shape.global_batch % host_count == 0
+        self.local_batch = shape.global_batch // host_count
+
+    def batch_at(self, step: int) -> dict:
+        """Materialize this host's shard of the global batch for ``step``."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_index])
+        )
+        b, s = self.local_batch, self.shape.seq_len
+        v = self.cfg.vocab_size
+        # Zipf-ish: rank ~ floor(exp(u * ln(v))) gives a heavy head
+        u = rng.random((b, s + 1))
+        toks = np.minimum(
+            (np.exp(u * np.log(v)) - 1.0).astype(np.int64), v - 1
+        ).astype(np.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.frontend == "vision":
+            from repro.models.api import n_image_tokens
+            npfx = n_image_tokens(s)
+            batch["tokens"] = batch["tokens"][:, : s - npfx]
+            batch["labels"] = batch["labels"][:, : s - npfx]
+            batch["prefix_embeds"] = (
+                rng.standard_normal((b, npfx, self.cfg.d_model)) * 0.02
+            ).astype(np.float32)
+        if self.cfg.family == "encdec":
+            batch["frames"] = (
+                rng.standard_normal((b, s, self.cfg.d_model)) * 0.02
+            ).astype(np.float32)
+        return batch
+
+
+class Prefetcher:
+    """Double-buffered background producer over a SyntheticTokens stream.
+
+    One producer thread keeps ``depth`` batches ready so a slow host's
+    input generation never stalls the (synchronous) collective step — the
+    straggler posture called out in DESIGN.md §5.
+    """
+
+    def __init__(self, source: SyntheticTokens, start_step: int = 0,
+                 depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self, timeout: float = 60.0):
+        return self.q.get(timeout=timeout)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+
+def device_batch(batch: dict, mesh=None, specs=None) -> dict:
+    """Host numpy batch -> device arrays (sharded when a mesh is given)."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding
+    out = {}
+    for k, v in batch.items():
+        spec = specs[k] if specs else None
+        if spec is None:
+            out[k] = jnp.asarray(v)
+        else:
+            out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

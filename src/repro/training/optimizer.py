@@ -1,0 +1,105 @@
+"""AdamW + global-norm clip + warmup-cosine schedule (pure JAX).
+
+Moments are f32 regardless of param dtype; the update is computed in f32
+and cast back (bf16 params with f32 optimizer state — the standard mixed
+setup). Because params are FSDP-sharded by the rules in
+``distributed/sharding.py``, the moments inherit that sharding and the
+optimizer runs fully sharded with zero extra collectives (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    if cfg.warmup_steps <= 0:
+        warm = 1.0
+    else:
+        warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * decay
+
+
+def adamw_init(params: Any) -> tuple[Any, Any]:
+    """(m, v) f32 moment trees shaped like params."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    m: Any,
+    v: Any,
+    step: jax.Array,
+):
+    """One AdamW step. Returns (params, m, v, metrics)."""
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, m_, v_):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.beta1 * m_ + (1 - cfg.beta1) * gf
+        v_new = cfg.beta2 * v_ + (1 - cfg.beta2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * pf
+        return (pf - lr * delta).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    new_params = jax.tree.map(
+        lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    new_m = jax.tree.map(
+        lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+    new_v = jax.tree.map(
+        lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+    return new_params, new_m, new_v, {"grad_norm": gnorm, "lr": lr}

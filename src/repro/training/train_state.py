@@ -1,0 +1,158 @@
+"""TrainState pytree + the jit-able train step factory.
+
+``make_train_step`` builds the function the dry-run lowers and the trainer
+executes: forward loss (family-dispatched), backprop, optional microbatch
+gradient accumulation, optional int8-EF cross-pod gradient compression,
+AdamW update. Pure function of (state, batch) -> (state, metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RunConfig
+from repro.models.api import ModelApi
+from repro.models.layers import LayerCtx
+from repro.training import optimizer as opt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array            # () int32
+    params: Any
+    m: Any
+    v: Any
+    ef_err: Optional[Any] = None   # int8-EF residuals (grad compression)
+
+    @staticmethod
+    def create(params: Any, *, npods: int = 0,
+               compression: str = "none") -> "TrainState":
+        m, v = opt.adamw_init(params)
+        ef = None
+        if compression == "int8_ef" and npods > 1:
+            from repro.distributed import collectives as C
+            ef = C.zeros_error_state(params, npods)
+        return TrainState(
+            step=jnp.zeros((), jnp.int32), params=params, m=m, v=v, ef_err=ef
+        )
+
+
+def adamw_config(run: RunConfig) -> opt.AdamWConfig:
+    return opt.AdamWConfig(
+        learning_rate=run.learning_rate,
+        weight_decay=run.weight_decay,
+        warmup_steps=run.warmup_steps,
+        total_steps=run.total_steps,
+    )
+
+
+def make_train_step(
+    api: ModelApi,
+    ctx: LayerCtx,
+    run: RunConfig,
+    *,
+    unroll: bool = False,
+    mesh=None,
+) -> Callable:
+    """Build train_step(state, batch) -> (state, metrics)."""
+    acfg = adamw_config(run)
+    remat = run.remat != "none"
+
+    def loss_fn(params, batch):
+        return api.train_loss(ctx, params, batch, unroll=unroll, remat=remat)
+
+    def compute_grads(params, batch):
+        if run.microbatch and run.microbatch > 1:
+            # gradient accumulation: split the batch on axis 0 into
+            # `microbatch` slices and scan, accumulating f32 grads.
+            nmb = run.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                assert b % nmb == 0, (b, nmb)
+                return x.reshape(nmb, b // nmb, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                tot_g = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), tot_g, g)
+                return (tot_l + l, tot_g), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), gz), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            return loss / nmb, grads
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    compressed = (
+        run.grad_compression == "int8_ef"
+        and mesh is not None
+        and "pod" in getattr(mesh, "axis_names", ())
+    )
+
+    if not compressed:
+        def train_step(state: TrainState, batch):
+            loss, grads = compute_grads(state.params, batch)
+            params, m, v, metrics = opt.adamw_update(
+                acfg, state.params, grads, state.m, state.v, state.step)
+            new_state = TrainState(
+                step=state.step + 1, params=params, m=m, v=v,
+                ef_err=state.ef_err)
+            metrics = dict(metrics, loss=loss)
+            return new_state, metrics
+
+        return train_step
+
+    # ---- int8-EF compressed cross-pod gradients --------------------------
+    # Gradients must be *pod-local* for the compressed hop to be real, so
+    # the grad computation runs inside a shard_map manual over `pod` only
+    # (data/model stay under GSPMD). Params are pod-replicated in this mode
+    # (rules use fsdp over `data` only); the batch's pod slice is consumed
+    # manually; per-pod EF residuals ride a leading pod axis.
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import collectives as C
+
+    def train_step(state: TrainState, batch):
+        def pod_body(batch_l, params, ef_l):
+            ef = jax.tree.map(lambda e: e[0], ef_l)
+            loss, grads = compute_grads(params, batch_l)
+            grads, ef_new = C.crosspod_psum_int8(grads, ef, axis="pod")
+            losses = jax.lax.all_gather(loss, "pod")
+            return (
+                jnp.mean(losses)[None],
+                jax.tree.map(lambda g: g[None], grads),
+                jax.tree.map(lambda e: e[None], ef_new),
+            )
+
+        batch_spec = jax.tree.map(lambda _: P("pod"), batch)
+        g_spec = jax.tree.map(lambda _: P("pod"), state.params)
+        e_spec = jax.tree.map(lambda _: P("pod"), state.ef_err)
+        fn = jax.shard_map(
+            pod_body,
+            mesh=mesh,
+            in_specs=(batch_spec, jax.tree.map(lambda _: P(), state.params),
+                      e_spec),
+            out_specs=(P("pod"), g_spec, e_spec),
+            axis_names={"pod"},
+        )
+        loss_boxed, grads_boxed, ef = fn(batch, state.params, state.ef_err)
+        loss = loss_boxed[0]
+        grads = jax.tree.map(lambda g: g[0], grads_boxed)
+        params, m, v, metrics = opt.adamw_update(
+            acfg, state.params, grads, state.m, state.v, state.step)
+        new_state = TrainState(
+            step=state.step + 1, params=params, m=m, v=v, ef_err=ef)
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,93 @@
+"""Roofline/HLO analysis unit tests: the collective parser against
+synthetic HLO, the linear L-decomposition, and bottleneck attribution."""
+import numpy as np
+
+from repro.analysis import hlo, roofline
+
+SYNTH_HLO = """
+HloModule jit_step
+
+%fused_add (a: f32[8,128]) -> f32[8,128] {
+  ROOT %r = f32[8,128] parameter(0)
+}
+
+%while_body_1 (arg: (f32[4,4])) -> (f32[4,4]) {
+  %p = f32[4,4] parameter(0)
+  %ar = f32[4,4]{1,0} all-reduce(%p), replica_groups={}
+  ROOT %t = (f32[4,4]) tuple(%ar)
+}
+
+ENTRY %main (x: bf16[16,256]) -> bf16[16,256] {
+  %x = bf16[16,256] parameter(0)
+  %ag = bf16[32,256]{1,0} all-gather(%x), dimensions={0}
+  %ar2 = f32[16,256]{1,0} all-reduce-start(%x), replica_groups={}
+  %ar2d = f32[16,256]{1,0} all-reduce-done(%ar2)
+  %rs = bf16[8,256]{1,0} reduce-scatter(%x), dimensions={0}
+  %cp = bf16[16,256]{1,0} collective-permute(%x)
+  ROOT %out = bf16[16,256] add(%x, %x)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = hlo.parse_collectives(SYNTH_HLO)
+    kinds = stats.by_kind()
+    assert kinds["all-gather"] == 32 * 256 * 2
+    # async pair counted once (start only)
+    assert kinds["all-reduce"] == 16 * 256 * 4 + 4 * 4 * 4
+    assert kinds["reduce-scatter"] == 8 * 256 * 2
+    assert kinds["collective-permute"] == 16 * 256 * 2
+    assert stats.counts["all-gather"] == 1
+
+
+def test_parse_collectives_while_multiplier():
+    stats = hlo.parse_collectives(SYNTH_HLO)
+    base = stats.total_bytes()
+    boosted = stats.total_bytes({"while": 10})
+    assert boosted - base == 9 * (4 * 4 * 4)  # only the while-body AR scales
+
+
+def test_linear_extrapolation_exact():
+    probes = [
+        roofline.ProbeCost(1, flops=100.0, bytes_accessed=50.0,
+                           collective_bytes=7.0),
+        roofline.ProbeCost(3, flops=160.0, bytes_accessed=90.0,
+                           collective_bytes=13.0),
+    ]
+    full = roofline.extrapolate(probes, 10)
+    # per-layer: 30 flops, 20 bytes, 3 coll; outside: 70, 30, 4
+    np.testing.assert_allclose(full.flops, 70 + 300)
+    np.testing.assert_allclose(full.bytes_accessed, 30 + 200)
+    np.testing.assert_allclose(full.collective_bytes, 4 + 30)
+
+
+def test_terms_bottleneck_attribution():
+    cost = roofline.ProbeCost(1, flops=1e15, bytes_accessed=1e9,
+                              collective_bytes=1e6)
+    t = roofline.terms_from(arch="a", shape="s", mesh="16x16", chips=256,
+                            cost=cost, model_flops=5e14)
+    assert t.bottleneck == "compute"
+    assert abs(t.useful_ratio - 0.5) < 1e-9
+    cost = roofline.ProbeCost(1, flops=1e9, bytes_accessed=1e9,
+                              collective_bytes=1e12)
+    t = roofline.terms_from(arch="a", shape="s", mesh="16x16", chips=256,
+                            cost=cost, model_flops=1e9)
+    assert t.bottleneck == "collective"
+    assert t.bound_s == t.collective_s
+
+
+def test_model_flops_train_vs_decode():
+    train = roofline.model_flops_estimate(
+        params_active=int(1e9), tokens=1000, kind="train")
+    decode = roofline.model_flops_estimate(
+        params_active=int(1e9), tokens=1000, kind="decode")
+    assert abs(train / decode - 3.0) < 1e-9  # 6ND vs 2ND
+
+
+def test_format_table_runs():
+    cost = roofline.ProbeCost(1, 1e12, 1e10, 1e8)
+    t = roofline.terms_from(arch="qwen2-0.5b", shape="train_4k",
+                            mesh="16x16", chips=256, cost=cost,
+                            model_flops=5e11, per_device_bytes=int(2e9))
+    out = roofline.format_table([t.to_dict()])
+    assert "qwen2-0.5b" in out and "compute" in out

@@ -1,0 +1,105 @@
+"""T3 heuristic-dataflow tests: the decision structure of paper §5."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core import dispatch as dsp
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+def test_dense_model_has_exactly_four_projection_shapes():
+    """The paper's homogeneity insight: four [K,N] per dense LLM (+head)."""
+    cfg = configs.get("phi3-mini-3.8b")
+    shapes = dsp.model_gemm_shapes(cfg)
+    names = {s.name for s in shapes}
+    assert names == {"qkv_proj", "o_proj", "ffn_up", "ffn_down", "lm_head"}
+
+
+def test_moe_model_adds_expert_shapes():
+    shapes = {s.name for s in dsp.model_gemm_shapes(configs.get("dbrx-132b"))}
+    assert {"router", "expert_up", "expert_down"} <= shapes
+
+
+@given(st.sampled_from([(4096, 4096), (4096, 12288), (11008, 4096),
+                        (896, 151936)]))
+def test_inflection_points_ordered(kn):
+    k, n = kn
+    e = dsp.find_inflections(k, n)
+    assert e.m1 <= e.m2
+
+
+@given(st.integers(min_value=1, max_value=2048),
+       st.sampled_from([(4096, 4096), (4096, 11008)]))
+def test_pick_is_piecewise_by_m(m, kn):
+    e = dsp.find_inflections(*kn)
+    impl = e.pick(m)
+    if m < e.m1:
+        assert impl is dsp.Impl.GEMV
+    elif m < e.m2:
+        assert impl is dsp.Impl.FLAT_GEMM
+    else:
+        assert impl is dsp.Impl.XLA_DOT
+
+
+def test_cost_model_limits():
+    """GEMV must win at M=1; XLA dot must win at M=1024 (paper Fig. 9)."""
+    k, n = 4096, 4096
+    t_gemv = dsp.predict_time(dsp.Impl.GEMV, 1, k, n)
+    t_flat = dsp.predict_time(dsp.Impl.FLAT_GEMM, 1, k, n)
+    assert t_gemv <= t_flat
+    t_flat = dsp.predict_time(dsp.Impl.FLAT_GEMM, 1024, k, n)
+    t_xla = dsp.predict_time(dsp.Impl.XLA_DOT, 1024, k, n)
+    assert t_xla <= t_flat * 1.01
+
+
+def test_table_roundtrip_and_fallback():
+    cfg = configs.get("qwen2-0.5b")
+    table = dsp.tune_table(cfg)
+    s = table.to_json()
+    table2 = dsp.DispatchTable.from_json(s)
+    for (k, n), e in table.entries.items():
+        assert table2.entries[(k, n)].m1 == e.m1
+        assert table2.entries[(k, n)].m2 == e.m2
+    # unseen shape falls back to the static policy, never crashes
+    assert table.pick(1, 17, 23) is dsp.Impl.GEMV
+    assert table.pick(64, 17, 23) is dsp.Impl.FLAT_GEMM
+    assert table.pick(4096, 17, 23) is dsp.Impl.XLA_DOT
+
+
+def test_matmul_routes_by_table():
+    """ops.matmul must produce oracle-equal results whatever impl it picks."""
+    import numpy as np
+    from repro.kernels import ops, ref
+    import jax
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    table = dsp.tune_table(cfg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    for m in (1, 8, 200):
+        x = jax.random.normal(k1, (m, 128), jnp.float32)
+        w = jax.random.normal(k2, (128, 256), jnp.float32)
+        got = ops.matmul(x, w, table=table, use_pallas=True)
+        np.testing.assert_allclose(got, ref.flat_gemm_ref(x, w),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_measured_backend_hook():
+    """A custom measure fn drives the decision flow (real-TPU path)."""
+    calls = []
+
+    def fake_measure(impl, m, k, n):
+        calls.append((impl, m))
+        # fabricate a world where flat wins from M=8, xla from M=128
+        base = {dsp.Impl.GEMV: 1.0, dsp.Impl.FLAT_GEMM: 2.0,
+                dsp.Impl.XLA_DOT: 4.0}[impl]
+        if impl is dsp.Impl.FLAT_GEMM and m >= 8:
+            base = 0.5
+        if impl is dsp.Impl.XLA_DOT and m >= 128:
+            base = 0.1
+        return base
+
+    e = dsp.find_inflections(1024, 1024, measure=fake_measure)
+    assert e.m1 == 8 and e.m2 == 128
+    assert calls, "measure backend must be consulted"

@@ -1,0 +1,403 @@
+"""Distribution layer: sharding rules (pure), int8-EF quantizer math
+(hypothesis), and subprocess tests that claim 8 placeholder devices for the
+real collective/pipeline/sharded-train paths (device count is locked at
+first jax init, so multi-device coverage runs in child processes)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
+from repro.distributed import collectives as C
+from repro.distributed.sharding import make_rules
+from repro.models.api import get_model
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (pure functions of shapes — no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_param_specs_megatron_orientation():
+    rules = make_rules(SINGLE_POD)
+    # col: output over model, input over data-FSDP
+    assert rules.param_spec(("layers", "attn", "wq"), (24, 896, 896)) == \
+        P(None, ("data",), "model")
+    # row: input over model
+    assert rules.param_spec(("layers", "attn", "wo"), (24, 896, 896)) == \
+        P(None, "model", ("data",))
+    # rwkv channel-mix down-proj is context-sensitive (row)
+    assert rules.param_spec(("layers", "cm", "w_v"), (24, 7168, 2048)) == \
+        P(None, "model", ("data",))
+    # norm scales replicated
+    assert rules.param_spec(("layers", "attn_norm", "scale"),
+                            (24, 896)) == P(None, None)
+
+
+def test_param_specs_drop_nondivisible_axes():
+    rules = make_rules(MULTI_POD)
+    # hymba w_dt: hm=50 not divisible by 16 -> replicated output
+    spec = rules.param_spec(("layers", "ssm", "w_dt"), (32, 1600, 50))
+    assert spec == P(None, ("pod", "data"), None)
+
+
+def test_every_assigned_arch_params_get_specs():
+    """param_spec_tree covers every leaf of every architecture."""
+    for mesh_cfg in (SINGLE_POD, MULTI_POD):
+        rules = make_rules(mesh_cfg)
+        sizes = rules.axis_sizes
+        for arch in configs.ASSIGNED:
+            cfg = configs.get(arch)
+            api = get_model(cfg)
+            params = jax.eval_shape(
+                lambda api=api: api.init_params(jax.random.PRNGKey(0)))
+            specs = rules.param_spec_tree(params)
+            for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_leaves_with_path(params),
+                jax.tree_util.tree_leaves_with_path(
+                    specs, is_leaf=lambda s: isinstance(s, P)),
+            ):
+                assert len(spec) <= len(leaf.shape), (arch, path)
+                for dim, entry in zip(leaf.shape, spec):
+                    if entry is None:
+                        continue
+                    axes = entry if isinstance(entry, tuple) else (entry,)
+                    nshards = int(np.prod([sizes[a] for a in axes]))
+                    assert dim % nshards == 0, (arch, path, spec)
+
+
+def test_tp_sharded_fraction_is_high_for_big_archs():
+    """The FSDP+TP rules must actually shard the big models' bytes —
+    grok-1 at (2,16,16) must fit 16 GB/chip with headroom."""
+    rules = make_rules(MULTI_POD)
+    sizes = rules.axis_sizes
+    for arch in ("grok-1-314b", "deepseek-67b", "internvl2-76b"):
+        cfg = configs.get(arch)
+        api = get_model(cfg)
+        params = jax.eval_shape(
+            lambda api=api: api.init_params(jax.random.PRNGKey(0)))
+        specs = rules.param_spec_tree(params)
+        per_dev = 0
+        for (_, leaf), (_, spec) in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda s: isinstance(s, P)),
+        ):
+            n = 1
+            for entry in spec:
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                n *= int(np.prod([sizes[a] for a in axes]))
+            per_dev += leaf.size * 2 // n   # bf16
+        assert per_dev < 4 * 2**30, (arch, per_dev / 2**30)
+
+
+def test_act_specs_adapt_to_rank_and_divisibility():
+    rules = make_rules(SINGLE_POD)
+    assert rules.act_spec("act_ffn", (256, 128, 4864)) == \
+        P(("data",), None, "model")
+    assert rules.act_spec("act_resid", (1, 64, 896)) == P(None, None, None)
+    assert rules.act_spec("act_scores_decode", (128, 14, 32768)) == \
+        P(("data",), None, "model")
+    assert rules.act_spec("act_cache_slice", (128, 32768, 2, 64)) == \
+        P(("data",), "model", None, None)
+
+
+def test_cache_spec_seq_sharding():
+    rules = make_rules(SINGLE_POD)
+    # dense KV cache (L, B, S, H, Dh): batch over data, seq over model
+    assert rules.cache_spec((24, 128, 32768, 2, 64)) == \
+        P(None, ("data",), "model", None, None)
+    # rwkv state (L, B, H, N, N): H=32 divisible -> over model at dim 2
+    assert rules.cache_spec((24, 128, 32, 64, 64)) == \
+        P(None, ("data",), "model", None, None)
+    # disabled seq sharding
+    rules2 = make_rules(SINGLE_POD, seq_shard_kv=False)
+    assert rules2.cache_spec((24, 128, 32768, 2, 64)) == \
+        P(None, ("data",), None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# int8 + error-feedback quantizer (pure math)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1000))
+def test_quantize_roundtrip_bounded_error(seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=64) * 10,
+                    jnp.float32)
+    q, scale = C.quantize_int8(x)
+    err = np.abs(np.asarray(C.dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    g = jnp.full((128,), 0.004567, jnp.float32)
+    e = jnp.zeros_like(g)
+    tot = 0.0
+    for _ in range(100):
+        q, s, e = C.ef_quantize_leaf(g, e)
+        tot += float(C.dequantize_int8(q, s).sum())
+    exact = 100 * float(g.sum())
+    assert abs(tot - exact) / abs(exact) < 1e-3
+
+
+def test_pack_unpack_i8_roundtrip():
+    for n in (4, 7, 64, 129):
+        q = jnp.asarray(
+            np.random.default_rng(n).integers(-127, 128, size=n), jnp.int8)
+        words, pad = C._pack_i8(q)
+        assert words.dtype == jnp.int32
+        back = C._unpack_i8(words, q.shape, pad)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+# ---------------------------------------------------------------------------
+# Multi-device paths (subprocess: 8 placeholder devices)
+# ---------------------------------------------------------------------------
+
+_SUB_ENV = dict(
+    os.environ,
+    XLA_FLAGS="--xla_force_host_platform_device_count=8 "
+              "--xla_disable_hlo_passes=all-reduce-promotion",
+    PYTHONPATH=os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + os.environ.get("PYTHONPATH", "").split(os.pathsep)),
+)
+
+
+def _run_sub(code: str) -> str:
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=_SUB_ENV, capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_crosspod_allreduce_int8_multidevice():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import collectives as C
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"))
+        grads = {"a": jnp.stack([jnp.full((4,8), 1.0), jnp.full((4,8), 2.0)])}
+        err = C.zeros_error_state({"a": grads["a"][0]}, npods=2)
+        out, new_err = C.crosspod_allreduce_int8(mesh, grads, err)
+        np.testing.assert_allclose(out["a"][0], 1.5, rtol=2e-2)
+        np.testing.assert_allclose(out["a"][1], 1.5, rtol=2e-2)
+        print("PASS")
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_pipeline_forward_and_grad_multidevice():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import pipeline as PP
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"))
+        lp = {"w": jnp.arange(4, dtype=jnp.float32).reshape(4, 1) + 1.0}
+        staged = PP.split_stages(lp, 2)
+        def stage_fn(p, x):
+            for i in range(p["w"].shape[0]):
+                x = x + p["w"][i]
+            return x
+        xs = jnp.zeros((4, 2, 1))
+        out = PP.pipeline_forward(mesh, staged, xs, stage_fn)
+        np.testing.assert_allclose(out, 10.0)
+        g = jax.grad(lambda sp: PP.pipeline_forward(
+            mesh, sp, xs, stage_fn).sum())(staged)
+        np.testing.assert_allclose(np.asarray(g["w"]).ravel(), 8.0)
+        print("PASS")
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_multidevice_matches_single():
+    """The 4x2-sharded train step must produce the same loss trajectory as
+    the single-device step (SPMD is semantics-preserving)."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.config import MeshConfig, RunConfig, ShapeConfig
+        from repro.distributed.sharding import make_rules, make_shard_fn, named
+        from repro.launch.mesh import make_mesh_from_config
+        from repro.models.api import get_model, make_synthetic_batch, train_input_specs
+        from repro.models.layers import LayerCtx
+        from repro.training.train_state import TrainState, make_train_step
+        from jax.sharding import PartitionSpec as P
+
+        cfg = configs.smoke(configs.get("qwen2-0.5b"))
+        shape = ShapeConfig("t", 32, 8, "train")
+        run = RunConfig(learning_rate=1e-3, warmup_steps=1)
+        api = get_model(cfg)
+        batch = make_synthetic_batch(cfg, shape, jax.random.PRNGKey(1))
+        params = api.init_params(jax.random.PRNGKey(0))
+
+        # single-device reference
+        ctx0 = LayerCtx(cfg=cfg)
+        step0 = jax.jit(make_train_step(api, ctx0, run))
+        s0 = TrainState.create(params)
+        losses0 = []
+        for _ in range(3):
+            s0, m = step0(s0, batch)
+            losses0.append(float(m["loss"]))
+
+        mesh_cfg = MeshConfig((4, 2), ("data", "model"))
+        mesh = make_mesh_from_config(mesh_cfg)
+        rules = make_rules(mesh_cfg)
+        ctx = LayerCtx(cfg=cfg, shard=make_shard_fn(mesh, rules))
+        step = make_train_step(api, ctx, run, mesh=mesh)
+        state = TrainState.create(params)
+        pspec = rules.param_spec_tree(state.params)
+        sspec = TrainState(step=P(), params=pspec, m=pspec, v=pspec,
+                           ef_err=None)
+        bspec = rules.input_specs_tree(train_input_specs(cfg, shape))
+        fn = jax.jit(step, in_shardings=(named(mesh, sspec),
+                                         named(mesh, bspec)),
+                     out_shardings=(named(mesh, sspec), None))
+        losses = []
+        for _ in range(3):
+            state, m = fn(state, batch)
+            losses.append(float(m["loss"]))
+        np.testing.assert_allclose(losses, losses0, rtol=2e-3)
+        print("PASS", losses)
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_seq_sharded_decode_matches_single():
+    """Split-KV decode (cache sequence over `model`) must equal the
+    unsharded decode — T1's additive combine is exact."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.config import MeshConfig
+        from repro.distributed.sharding import make_rules, make_shard_fn, named
+        from repro.launch.mesh import make_mesh_from_config
+        from repro.models.api import get_model
+        from repro.models.layers import LayerCtx
+
+        cfg = configs.smoke(configs.get("qwen2-0.5b"))
+        api = get_model(cfg)
+        params = api.init_params(jax.random.PRNGKey(0))
+        cache = api.init_cache(4, 128)
+        toks = jnp.array([1, 2, 3, 4], jnp.int32)
+        lens = jnp.array([7, 60, 100, 13], jnp.int32)
+        # warm the cache with junk KV so attention reads something real
+        cache = jax.tree.map(
+            lambda c: c + 0.01 * jax.random.normal(
+                jax.random.PRNGKey(9), c.shape, c.dtype), cache)
+
+        ctx0 = LayerCtx(cfg=cfg)
+        logits0, _ = api.decode_step(ctx0, params, toks, cache, lens)
+
+        mesh_cfg = MeshConfig((2, 4), ("data", "model"))
+        mesh = make_mesh_from_config(mesh_cfg)
+        rules = make_rules(mesh_cfg)  # seq_shard_kv=True
+        ctx = LayerCtx(cfg=cfg, shard=make_shard_fn(mesh, rules))
+        cspec = jax.tree.map(lambda c: rules.cache_spec(c.shape), cache)
+        fn = jax.jit(lambda p, t, c, l: api.decode_step(ctx, p, t, c, l),
+                     in_shardings=(None, None, named(mesh, cspec), None))
+        logits1, _ = fn(params, toks, cache, lens)
+        np.testing.assert_allclose(
+            np.asarray(logits0, np.float32), np.asarray(logits1, np.float32),
+            rtol=3e-2, atol=3e-2)
+        print("PASS")
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_split_kv_decode_attention_collective_claim():
+    """The paper's T1 claim at pod scale: the async (unified-max) combine
+    needs exactly ONE all-reduce per decode-attention call; the
+    synchronized (online-max) combine needs TWO (max exchange + rescaled
+    num/den). Verified on the compiled HLO of the explicit shard_map
+    artifact, plus exactness of both against the unsharded oracle."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config import SoftmaxPhiConfig
+        from repro.core.attention import decode_attention_sharded
+        from repro.kernels import ref
+        from repro.analysis import hlo as H
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        b, hq, hk, d, s = 4, 8, 2, 64, 512
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, s, hk, d), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, s, hk, d), jnp.float32)
+        lengths = jnp.array([100, 512, 7, 300], jnp.int32)
+        want = ref.attention_decode_ref(q, kc, vc, lengths)
+
+        counts = {}
+        for name, cfgp in [("async", SoftmaxPhiConfig(phi=0.0)),
+                           ("sync", SoftmaxPhiConfig(enabled=False))]:
+            f = jax.jit(lambda q_, k_, v_, l_: decode_attention_sharded(
+                mesh, q_, k_, v_, l_, phi_cfg=cfgp))
+            np.testing.assert_allclose(f(q, kc, vc, lengths), want,
+                                       rtol=1e-4, atol=1e-5)
+            comp = f.lower(q, kc, vc, lengths).compile()
+            counts[name] = H.parse_collectives(comp.as_text()).counts
+        assert counts["async"].get("all-reduce", 0) == 1, counts
+        assert counts["sync"].get("all-reduce", 0) == 2, counts
+        print("PASS", counts)
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_manual_moe_dispatch_matches_gspmd():
+    """_moe_block_manual (dispatch locality by construction) must equal
+    the plain GSPMD path in loss AND gradients."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import configs
+        from repro.config import MeshConfig, ShapeConfig
+        from repro.distributed.sharding import make_rules, make_shard_fn
+        from repro.launch.mesh import make_mesh_from_config
+        from repro.models.api import get_model, make_synthetic_batch
+        from repro.models.layers import LayerCtx
+
+        cfg = configs.smoke(configs.get("dbrx-132b"))
+        api = get_model(cfg)
+        params = api.init_params(jax.random.PRNGKey(0))
+        batch = make_synthetic_batch(cfg, ShapeConfig("t", 64, 4, "train"),
+                                     jax.random.PRNGKey(1))
+        # same group count on both sides: routing/capacity are per-group
+        ctx0 = LayerCtx(cfg=cfg, moe_groups=2)
+        l0, g0 = jax.value_and_grad(
+            lambda p: api.train_loss(ctx0, p, batch))(params)
+
+        mesh_cfg = MeshConfig((2, 4), ("data", "model"))
+        mesh = make_mesh_from_config(mesh_cfg)
+        rules = make_rules(mesh_cfg)
+        ctx1 = LayerCtx(cfg=cfg, shard=make_shard_fn(mesh, rules),
+                        mesh=mesh, rules=rules, moe_groups=2)
+        l1, g1 = jax.jit(jax.value_and_grad(
+            lambda p: api.train_loss(ctx1, p, batch)))(params)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=2e-3)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=5e-2, atol=5e-3)
+        print("PASS")
+    """)
+    assert "PASS" in out

@@ -1,0 +1,144 @@
+"""T1 property tests (hypothesis): the math the paper's §3 rests on.
+
+  * Eq. 3 — softmax is invariant to the scaling constant φ.
+  * Eq. 4 — the async (num, den) combine is invariant to how the KV axis
+    is split (order-independence = no synchronized update needed).
+  * sync and async combines agree wherever both are numerically safe.
+  * φ calibration disables T1 for wide-ranged models (the OPT case).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SoftmaxPhiConfig
+from repro.core import phi as phi_mod
+from repro.core import softmax as smx
+from repro.kernels import ref
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+floats = st.floats(min_value=-8.0, max_value=8.0)
+
+
+@given(st.lists(floats, min_size=2, max_size=24),
+       st.floats(min_value=-10, max_value=10))
+def test_softmax_phi_invariance(xs, phi):
+    x = jnp.asarray(xs, jnp.float32)
+    a = ref.softmax_ref(x)
+    b = ref.softmax_unified_max(x, phi)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(min_value=2, max_value=6), st.integers(0, 10_000))
+def test_async_combine_split_invariance(n_splits, seed):
+    """Eq. 4: partial (num, den) sums are addable in any partition."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    kv, d = 24, 8
+    s = jax.random.normal(k1, (kv,), jnp.float32)
+    v = jax.random.normal(k2, (kv, d), jnp.float32)
+    whole = smx.async_partial(s, v, phi=0.5)
+    full_out = whole.num / whole.den
+
+    bounds = sorted(
+        set([0, kv] + list(
+            np.random.default_rng(seed).integers(1, kv, n_splits - 1))))
+    parts = [
+        smx.async_partial(s[a:b], v[a:b], phi=0.5)
+        for a, b in zip(bounds[:-1], bounds[1:]) if b > a
+    ]
+    out, mc = smx.combine_async(parts)
+    np.testing.assert_allclose(out, full_out, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mc, whole.max_centered, rtol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+def test_sync_and_async_combines_agree(seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    kv, d, p = 32, 4, 4
+    s = jax.random.normal(k1, (kv,), jnp.float32) * 3
+    v = jax.random.normal(k2, (kv, d), jnp.float32)
+    asy = [smx.async_partial(s[i::p], v[i::p], phi=0.0) for i in range(p)]
+    syn = [smx.sync_partial(s[i::p], v[i::p]) for i in range(p)]
+    a_out, _ = smx.combine_async(asy)
+    s_out = smx.combine_sync(syn)
+    np.testing.assert_allclose(a_out, s_out, rtol=1e-4, atol=1e-5)
+
+
+def test_sync_combine_handles_fully_masked_partial():
+    s = jnp.array([1.0, 2.0], jnp.float32)
+    v = jnp.array([[1.0], [2.0]], jnp.float32)
+    live = smx.sync_partial(s, v)
+    dead = smx.sync_partial(s, v, valid=jnp.zeros(2, bool))
+    out = smx.combine_sync([live, dead])
+    want = smx.combine_sync([live])
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# φ calibration (paper Fig. 5 workflow)
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_narrow_band_enables_t1():
+    stats = phi_mod.LogitStats()
+    stats = stats.update(jnp.asarray(
+        np.random.default_rng(0).normal(3.0, 1.5, size=4096)))
+    cfg = phi_mod.calibrate(stats)
+    assert cfg.active
+    assert abs(cfg.phi - 3.0) < 0.5
+    assert cfg.band[0] < -6 and cfg.band[1] > 6
+
+
+def test_calibrate_wide_range_disables_t1_like_opt():
+    stats = phi_mod.LogitStats()
+    stats = stats.update(jnp.asarray([-300.0, 0.0, 250.0]))
+    cfg = phi_mod.calibrate(stats)
+    assert not cfg.active  # the paper's OPT-6.7B case
+
+
+def test_logit_stats_merge_matches_batch():
+    rng = np.random.default_rng(1)
+    a, b = rng.normal(size=100), rng.normal(loc=2, size=300)
+    s = phi_mod.LogitStats().update(jnp.asarray(a)).update(jnp.asarray(b))
+    both = np.concatenate([a, b])
+    assert s.count == 400
+    np.testing.assert_allclose(s.mean, both.mean(), rtol=1e-5)
+    np.testing.assert_allclose(s.std, both.std(), rtol=1e-4)
+    np.testing.assert_allclose(s.minimum, both.min())
+    np.testing.assert_allclose(s.maximum, both.max())
+    s2 = phi_mod.LogitStats.from_json(s.to_json())
+    assert s2.count == s.count and s2.mean == s.mean
+
+
+def test_collect_attention_logit_stats_shapes():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 16, 4, 32))
+    k = jax.random.normal(key, (2, 16, 4, 32))
+    stats = phi_mod.collect_attention_logit_stats(q, k)
+    assert stats.count == 2 * 4 * 16 * 16
+    cfg = phi_mod.calibrate(stats)
+    assert isinstance(cfg, SoftmaxPhiConfig)
+
+
+# ---------------------------------------------------------------------------
+# Overflow -> recomputation fallback (paper §3 "Recomputation")
+# ---------------------------------------------------------------------------
+
+
+def test_ops_decode_fallback_recovers_safe_result():
+    from repro.kernels import ops
+    b, hq, hk, d, s = 1, 2, 2, 16, 32
+    q = 60.0 * jnp.ones((b, hq, d), jnp.float32)       # logits >> band
+    kc = jnp.ones((b, s, hk, d), jnp.float32)
+    vc = jax.random.normal(jax.random.PRNGKey(0), (b, s, hk, d))
+    lengths = jnp.array([s], jnp.int32)
+    phi_cfg = SoftmaxPhiConfig(phi=0.0, band=(-8.0, 8.0))
+    out = ops.attention_decode(q, kc, vc, lengths, phi_cfg=phi_cfg,
+                               use_pallas=False)
+    want = ref.attention_decode_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(jnp.isfinite(out)))
