@@ -1,0 +1,113 @@
+"""Dense vs block-paged decode sweep over slot occupancy.
+
+The dense slot cache provisions ``num_slots x max_seq`` KV positions no
+matter what is resident; the paged pool provisions pages for the tokens
+that exist. This sweep decodes one tick over a batch whose sequences fill
+a varying fraction of ``max_seq`` and reports, per occupancy:
+
+  * per-tick decode latency for both cache kinds (CPU wall, directional —
+    the XLA paged path pays a gather; the Pallas kernel path on TPU reads
+    only owned pages via scalar-prefetched block tables), and
+  * provisioned KV bytes for both kinds — the capacity story that decides
+    how many sequences a fixed HBM budget can admit.
+
+Writes ``BENCH_paged.json`` at the repo root so later PRs can track the
+trajectory (schema: {"rows": [...], "config": {...}}).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, time_jitted
+from repro import configs
+from repro.models.api import get_model
+from repro.models.layers import LayerCtx
+from repro.serving.blockpool import BlockPool, PagedSlotManager, pages_for
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_paged.json")
+
+
+def _kv_bytes(cache) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.tree.leaves(cache))
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== paged_decode: dense vs block-paged decode tick ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    ctx = LayerCtx(cfg=cfg, use_pallas=False)
+
+    num_slots = 4 if quick else 8
+    max_seq = 512 if quick else 1024
+    page_size = 64
+    occupancies = [0.25, 1.0] if quick else [0.125, 0.25, 0.5, 1.0]
+
+    dense_fn = jax.jit(
+        lambda p, t, c, l: api.decode_step(ctx, p, t, c, l),
+        donate_argnums=(2,))
+    paged_fn = jax.jit(
+        lambda p, t, c, bt, l: api.decode_step_paged(ctx, p, t, c, bt, l),
+        donate_argnums=(2,))
+
+    widths = [6, 10, 12, 12, 14, 14]
+    print(fmt_row("occ", "len", "dense_us", "paged_us", "dense_KV_MiB",
+                  "paged_KV_MiB", widths=widths))
+    rows = []
+    toks = jnp.arange(num_slots, dtype=jnp.int32) + 1
+    dense_bytes = _kv_bytes(api.cache_spec(num_slots, max_seq))
+    for occ in occupancies:
+        seq = max(int(max_seq * occ) - 1, 1)
+        lengths = jnp.full((num_slots,), seq, jnp.int32)
+
+        t_dense = time_jitted(
+            lambda p, tk, le: dense_fn(
+                p, tk, api.init_cache(num_slots, max_seq), le),
+            params, toks, lengths, warmup=1, iters=5)
+
+        # pool sized to what this occupancy actually needs (+1 growth page
+        # per sequence) — the capacity a paged deployment would provision
+        pool = BlockPool(num_slots * pages_for(seq + 1, page_size),
+                         page_size)
+        mgr = PagedSlotManager(num_slots, max_seq, pool)
+        for i in range(num_slots):
+            assert mgr.try_assign(i, seq, 1) is not None
+        bt = jnp.asarray(mgr.block_tables())
+        paged_bytes = _kv_bytes(
+            api.paged_cache_spec(pool.num_pages, page_size))
+
+        t_paged = time_jitted(
+            lambda p, tk, le: paged_fn(
+                p, tk, api.init_paged_cache(pool.num_pages, page_size),
+                bt, le),
+            params, toks, lengths, warmup=1, iters=5)
+
+        print(fmt_row(occ, seq, f"{t_dense*1e6:.0f}", f"{t_paged*1e6:.0f}",
+                      f"{dense_bytes/2**20:.1f}",
+                      f"{paged_bytes/2**20:.1f}", widths=widths))
+        rows.append(dict(
+            occupancy=occ, seq_len=seq,
+            dense_us=t_dense * 1e6, paged_us=t_paged * 1e6,
+            dense_kv_bytes=dense_bytes, paged_kv_bytes=paged_bytes,
+            kv_savings=1.0 - paged_bytes / dense_bytes,
+        ))
+
+    result = {
+        "config": dict(arch=cfg.name, num_slots=num_slots, max_seq=max_seq,
+                       page_size=page_size),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  [paged_decode -> {os.path.normpath(OUT_PATH)}]")
+    return result
+
+
+if __name__ == "__main__":
+    run()

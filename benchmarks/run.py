@@ -17,7 +17,8 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (attention_softmax, decode_engine, dispatch_table,
-                            flat_gemm_sweep, prefill_engine, roofline_report)
+                            flat_gemm_sweep, paged_decode, prefill_engine,
+                            roofline_report)
 
     results = {}
     for name, mod in [
@@ -25,6 +26,7 @@ def main() -> int:
         ("flat_gemm_sweep", flat_gemm_sweep),
         ("dispatch_table", dispatch_table),
         ("decode_engine", decode_engine),
+        ("paged_decode", paged_decode),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:

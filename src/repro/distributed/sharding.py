@@ -289,7 +289,10 @@ def make_shard_fn(mesh: Optional[Mesh], rules: Optional[Rules]):
         return lambda x, role: x
 
     def shard(x: jax.Array, role: str) -> jax.Array:
-        vma = frozenset(getattr(jax.typeof(x), "vma", frozenset()))
+        # jax.typeof is post-0.4.x; older jax has no vma typing at all
+        # (partial-manual values simply lack the attribute -> empty set)
+        typeof = getattr(jax, "typeof", None) or jax.core.get_aval
+        vma = frozenset(getattr(typeof(x), "vma", frozenset()))
         if vma:
             # Inside a partial-manual shard_map (compressed-grad mode):
             # explicit constraints on manual-varying values trip an XLA

@@ -1,0 +1,34 @@
+"""Version compatibility for ``jax.shard_map``.
+
+The stable ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+axis_names=...)`` alias appeared after the 0.4.x series; on older jax the
+function lives at ``jax.experimental.shard_map.shard_map`` with an ``auto``
+parameter (the complement of ``axis_names``: mesh axes left under GSPMD).
+Importing this module (for the side effect, like
+:mod:`repro.kernels.pltpu_compat`) installs an adapter so every call site
+keeps the single stable-API idiom.
+
+Imported by :mod:`repro` itself so any entry point gets the alias.
+"""
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "shard_map"):  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                   check_rep: bool = True):
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            # partial-manual mode: old shard_map cannot replication-check
+            check_rep = False
+        mapped = _exp_shard_map(f, mesh, in_specs, out_specs,
+                                check_rep=check_rep, auto=auto)
+        # old shard_map has no eager path (NotImplementedError when called
+        # outside a jit); the stable API executes eagerly, so close the gap
+        return jax.jit(mapped)
+
+    jax.shard_map = _shard_map

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the FlashDecoding++ hot spots.
 
 Modules:
-  * decode_attention — T1 async-softmax split-KV decode kernel (+ sync baseline)
+  * decode_attention — T1 async-softmax split-KV decode kernel (+ sync
+                       baseline), plus block-paged variants that gather KV
+                       through scalar-prefetched block tables
   * flash_prefill    — fused causal prefill attention (sync & unified-max)
   * flat_gemm        — T2 minimal-pad double-buffered flat GEMM
   * fused_ffn        — T2 extension: fused flat-GEMM SwiGLU FFN-up epilogue
@@ -13,6 +15,8 @@ from repro.kernels import ref  # noqa: F401
 from repro.kernels.decode_attention import (  # noqa: F401
     decode_attention_sync,
     decode_attention_unified_max,
+    paged_decode_attention_sync,
+    paged_decode_attention_unified_max,
 )
 from repro.kernels.flash_prefill import flash_prefill  # noqa: F401
 from repro.kernels.flat_gemm import flat_gemm  # noqa: F401

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
+
 DEFAULT_BLOCK_K = 512
 
 
@@ -215,6 +217,254 @@ def _decode_kernel_sync(
     @pl.when(s_idx == n_s - 1)
     def _fin():
         out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) variants — same math, KV gathered page-by-page.
+#
+# The KV pool is the storage layout of serving/blockpool.py:
+# (num_pages, page_size, kv_heads, head_dim). The per-sequence block table
+# rides in as a *scalar-prefetch* operand (PrefetchScalarGridSpec) so the
+# BlockSpec index_map can translate logical block i of batch row b into the
+# physical page bt[b, i] before the DMA issues. The grid spans the full
+# table width (NB = ceil(max_seq/PS)) for every sequence; steps past a
+# sequence's length hit clamped/sentinel table entries, their compute is
+# skipped via pl.when, and their (repeated) page fetch is wasted DMA — a
+# per-sequence grid trim is a ROADMAP follow-on.
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    bt_ref,       # (B, NB) int32 scalar-prefetch (unused in body; index maps)
+    len_ref,      # (B,) int32 scalar-prefetch
+    q_ref,        # (1, 1, G, D)
+    k_ref,        # (1, PS, 1, D) — physical page bt[b, i]
+    v_ref,        # (1, PS, 1, D)
+    out_ref,      # (1, 1, G, D)
+    stat_ref,     # (1, 1) f32
+    acc_ref,      # (G, D) f32
+    den_ref,      # (G, 128) f32
+    msc_ref,      # (1, 1) f32
+    *,
+    phi: float,
+    scale: float,
+    page_size: int,
+):
+    b_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+    n_i = pl.num_programs(2)
+
+    @pl.when(i_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        msc_ref[...] = jnp.full_like(msc_ref, -jnp.inf)
+
+    length = len_ref[b_idx]
+
+    @pl.when(i_idx * page_size < length)   # fully-masked pages: skip compute
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (G, PS)
+
+        offs = i_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        valid = offs < length
+
+        centered = s - phi
+        msc_ref[0, 0] = jnp.maximum(
+            msc_ref[0, 0], jnp.max(jnp.where(valid, centered, -jnp.inf))
+        )
+        e = jnp.where(valid, jnp.exp(centered), 0.0)
+
+        acc_ref[...] += jax.lax.dot_general(
+            e, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        den_ref[...] += jnp.broadcast_to(
+            jnp.sum(e, axis=1, keepdims=True), den_ref.shape
+        )
+
+    @pl.when(i_idx == n_i - 1)
+    def _fin():
+        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+        stat_ref[0, 0] = msc_ref[0, 0]
+
+
+def paged_decode_attention_unified_max(
+    q: jax.Array,             # (B, HQ, D)
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB) int32
+    lengths: jax.Array,       # (B,) int32
+    *,
+    phi: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Async-softmax decode attention over a block-paged KV pool.
+
+    Returns ``(out, stat)`` exactly like :func:`decode_attention_unified_max`;
+    the block table is a scalar-prefetch operand so each grid step DMAs one
+    physical page.
+    """
+    b, hq, d = q.shape
+    num_pages, ps, hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+
+    # unassigned table entries hold the OOB sentinel num_pages — clamp so
+    # the page DMA stays in bounds (contents masked off by `lengths`)
+    block_tables = jnp.minimum(block_tables, num_pages - 1)
+    qg = q.reshape(b, hk, g, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, i_, bt, ln: (b_, h_)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, phi=phi, scale=scale, page_size=ps)
+    out, stat = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hk), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, hq, d), stat
+
+
+def _paged_decode_kernel_sync(
+    bt_ref, len_ref,
+    q_ref, k_ref, v_ref,
+    out_ref,
+    acc_ref, den_ref, m_ref,
+    *,
+    scale: float,
+    page_size: int,
+):
+    b_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+    n_i = pl.num_programs(2)
+
+    @pl.when(i_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+
+    length = len_ref[b_idx]
+
+    @pl.when(i_idx * page_size < length)   # fully-masked pages: skip compute
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        offs = i_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(offs < length, s, -jnp.inf)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        rescale = jnp.exp(m_prev - m_new)
+        e = jnp.exp(s - m_new)
+        acc_ref[...] = acc_ref[...] * rescale + jax.lax.dot_general(
+            e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        den_ref[...] = den_ref[...] * jnp.broadcast_to(
+            rescale, den_ref.shape
+        ) + jnp.broadcast_to(jnp.sum(e, axis=1, keepdims=True), den_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(i_idx == n_i - 1)
+    def _fin():
+        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+
+
+def paged_decode_attention_sync(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Online-max (synchronized) paged decode attention — fallback path."""
+    b, hq, d = q.shape
+    num_pages, ps, hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+
+    block_tables = jnp.minimum(block_tables, num_pages - 1)
+    qg = q.reshape(b, hk, g, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel_sync, scale=scale, page_size=ps)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, hq, d)
 
 
 def decode_attention_sync(

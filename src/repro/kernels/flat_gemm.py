@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
+
 from repro import hardware
 
 

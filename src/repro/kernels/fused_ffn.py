@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
+
 from repro.kernels.flat_gemm import pick_bk, pick_bn, round_up
 
 

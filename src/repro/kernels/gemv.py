@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
+
 DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_K = 512
 

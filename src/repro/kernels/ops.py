@@ -23,6 +23,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import (
     decode_attention_sync,
     decode_attention_unified_max,
+    paged_decode_attention_sync,
+    paged_decode_attention_unified_max,
 )
 from repro.kernels.flat_gemm import flat_gemm
 from repro.kernels.flash_prefill import flash_prefill
@@ -208,3 +210,118 @@ def attention_decode(
         )
 
     return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
+
+
+def attention_decode_paged(
+    q: jax.Array,             # (B, HQ, D) — one new token per sequence
+    k_pool: jax.Array,        # (NP, PS, HK, D) — shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB) int32 — logical block -> physical page
+    lengths: jax.Array,       # (B,)
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    use_pallas: bool = True,
+    fallback: bool = True,
+    shard=None,
+) -> jax.Array:
+    """Decode attention over a block-paged KV cache (T1 + overflow fallback).
+
+    Paged twin of :func:`attention_decode`: the KV cache is a flat page pool
+    shared by all sequences and each sequence's pages are named by its block
+    table. On the XLA path the pages are gathered into a dense per-sequence
+    view (bitwise identical to the dense path when NB*PS == max_seq); on the
+    Pallas path the block table is scalar-prefetched so the kernel DMAs
+    exactly the pages each sequence owns.
+    """
+    if not use_pallas:
+        if not phi_cfg.active:
+            return ref.attention_decode_paged_ref(
+                q, k_pool, v_pool, block_tables, lengths, shard=shard)
+        out, stat = ref.attention_decode_paged_unified_max_ref(
+            q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
+            shard=shard,
+        )
+        if not fallback:
+            return out
+        overflow = jnp.any(stat > phi_cfg.band[1])
+        safe = functools.partial(
+            ref.attention_decode_paged_ref, q, k_pool, v_pool, block_tables,
+            lengths, shard=shard,
+        )
+        return jax.lax.cond(overflow, lambda _: safe(), lambda _: out, None)
+
+    if not phi_cfg.active:
+        return paged_decode_attention_sync(
+            q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
+        )
+    out, stat = paged_decode_attention_unified_max(
+        q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
+        interpret=_INTERPRET,
+    )
+    if not fallback:
+        return out
+    overflow = jnp.any(stat > phi_cfg.band[1])
+
+    def recompute(_):
+        return paged_decode_attention_sync(
+            q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
+        )
+
+    return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
+
+
+def attention_chunk(
+    q: jax.Array,        # (B, C, HQ, D) — a chunk of new tokens
+    k_cache: jax.Array,  # (B, S, HK, D) — chunk KV already scattered in
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) lengths before the chunk
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    use_pallas: bool = True,
+    fallback: bool = True,
+) -> jax.Array:
+    """Chunked-prefill attention: C tokens attend to prefix + chunk.
+
+    The decode-shaped admission path: long prompts stream through this in
+    fixed-size chunks instead of compiling one prefill per prompt bucket.
+    Runs the ref math on both paths today (the chunk GEMMs are MXU-shaped
+    already; a fused kernel is a ROADMAP follow-on), with the T1 scheme and
+    a safe-softmax recompute fallback matching :func:`attention_decode`.
+    """
+    del use_pallas  # ref math on both paths (see docstring)
+    if not phi_cfg.active:
+        return ref.attention_chunk_ref(q, k_cache, v_cache, lengths, phi=None)
+    out, stat = ref.attention_chunk_unified_max_ref(
+        q, k_cache, v_cache, lengths, phi=phi_cfg.phi)
+    if not fallback:
+        return out
+    overflow = jnp.any(stat > phi_cfg.band[1])
+    safe = functools.partial(
+        ref.attention_chunk_ref, q, k_cache, v_cache, lengths, phi=None)
+    return jax.lax.cond(overflow, lambda _: safe(), lambda _: out, None)
+
+
+def attention_chunk_paged(
+    q: jax.Array,
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB)
+    lengths: jax.Array,
+    *,
+    phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    use_pallas: bool = True,
+    fallback: bool = True,
+) -> jax.Array:
+    """Paged twin of :func:`attention_chunk` (gather via block tables).
+
+    The gather materializes a dense (B, NB*PS) KV view per layer per chunk
+    step — fine for correctness and for CPU smoke, but it transiently costs
+    dense-cache bytes during prefill; a fused chunk kernel over the pool
+    (no gather) is the ROADMAP "chunk-attention kernel" follow-on.
+    """
+    k = ref.gather_paged_kv(k_pool, block_tables)
+    v = ref.gather_paged_kv(v_pool, block_tables)
+    return attention_chunk(
+        q, k, v, lengths, phi_cfg=phi_cfg, use_pallas=use_pallas,
+        fallback=fallback,
+    )

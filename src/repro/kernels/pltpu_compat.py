@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+Importing this module makes ``pltpu.CompilerParams`` available on jax
+versions where the class is still named ``TPUCompilerParams`` (renamed
+upstream around jax 0.5). Every kernel module in this package imports it
+for the side effect, so all kernels keep a single call-site idiom
+(``pltpu.CompilerParams(dimension_semantics=...)``) across jax versions.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):  # pragma: no cover - version dep
+    pltpu.CompilerParams = pltpu.TPUCompilerParams

@@ -177,6 +177,156 @@ def attention_decode_unified_max_ref(
     return out, stat
 
 
+# ---------------------------------------------------------------------------
+# Paged (block-table) attention oracles
+# ---------------------------------------------------------------------------
+
+
+def gather_paged_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize the dense per-sequence view of a paged KV pool.
+
+    pool: (num_pages, page_size, HK, D); block_tables: (B, NB) int32.
+    Returns (B, NB * page_size, HK, D). Positions past a sequence's length
+    read whatever the addressed pages hold — callers mask by ``lengths``.
+    """
+    b, nb = block_tables.shape
+    ps = pool.shape[1]
+    # unassigned table entries hold the OOB sentinel num_pages: clamp to a
+    # real page — whatever it holds is masked off by the caller's lengths
+    gathered = jnp.take(pool, block_tables.reshape(-1), axis=0, mode="clip")
+    return gathered.reshape(b, nb * ps, *pool.shape[2:])
+
+
+def attention_decode_paged_ref(
+    q: jax.Array,             # (B, HQ, D)
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB) int32
+    lengths: jax.Array,       # (B,)
+    *,
+    scale: float | None = None,
+    shard=None,
+) -> jax.Array:
+    """Safe (max-stabilized) decode attention over a block-paged cache.
+
+    The XLA path gathers each sequence's pages into a dense view and reuses
+    :func:`attention_decode_ref` — bitwise identical to the dense-cache path
+    whenever ``NB * PS`` equals the dense ``max_seq`` (additions of masked
+    exact zeros do not perturb the reduction).
+    """
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    return attention_decode_ref(q, k, v, lengths, scale=scale, shard=shard)
+
+
+def attention_decode_paged_unified_max_ref(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    phi: float,
+    scale: float | None = None,
+    shard=None,
+) -> tuple[jax.Array, jax.Array]:
+    """T1 (async partial-softmax) oracle over a block-paged cache."""
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    return attention_decode_unified_max_ref(
+        q, k, v, lengths, phi=phi, scale=scale, shard=shard)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-append attention (chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_attention(q, k_cache, v_cache, lengths, phi, scale):
+    """Shared chunk-attention math. Returns (out, stat) where stat is the
+    per-batch max |s - phi| over valid positions — the same two-sided T1
+    overflow statistic as :func:`attention_decode_unified_max_ref` (the
+    under-band side matters too: exp underflow of every valid logit makes
+    den 0 -> NaN) — or zeros when ``phi`` is None (safe scheme)."""
+    b, c, hq, d = q.shape
+    _, s_max, hk, _ = k_cache.shape
+    groups = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, c, hk, groups, d)
+    s = jnp.einsum("bchgd,bkhd->bhgck", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = lengths[:, None] + jnp.arange(c)[None, :]        # (B, C)
+    valid = (jnp.arange(s_max)[None, None, None, None, :]
+             <= qpos[:, None, None, :, None])               # (B,1,1,C,S)
+    if phi is not None:
+        centered = s - phi
+        e = jnp.where(valid, jnp.exp(centered), 0.0)
+        stat = jnp.max(jnp.where(valid, jnp.abs(centered), 0.0),
+                       axis=(1, 2, 3, 4))
+    else:
+        m = jnp.max(jnp.where(valid, s, -jnp.inf), axis=-1, keepdims=True)
+        e = jnp.where(valid, jnp.exp(s - m), 0.0)
+        stat = jnp.zeros((b,), jnp.float32)
+    den = jnp.sum(e, axis=-1)                               # (B, HK, G, C)
+    num = jnp.einsum("bhgck,bkhd->bchgd", e.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    den_q = den.transpose(0, 3, 1, 2)[..., None]            # (B, C, HK, G, 1)
+    o = (num / den_q).reshape(b, c, hq, d)
+    return o.astype(q.dtype), stat
+
+
+def attention_chunk_ref(
+    q: jax.Array,          # (B, C, HQ, D) — chunk of new tokens
+    k_cache: jax.Array,    # (B, S, HK, D) — chunk already scattered in
+    v_cache: jax.Array,
+    lengths: jax.Array,    # (B,) lengths *before* this chunk
+    *,
+    phi: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention: C new tokens attend to prefix + chunk.
+
+    Query i of row b sits at absolute position ``lengths[b] + i``; valid keys
+    are cache positions ``<= lengths[b] + i`` (chunk-local causality — the
+    chunk's own KV must already be scattered into the cache). Rows past a
+    sequence's chunk length produce garbage that callers drop. ``phi`` picks
+    the T1 unified-max scheme; None is the safe per-row max.
+    """
+    out, _ = _chunk_attention(q, k_cache, v_cache, lengths, phi, scale)
+    return out
+
+
+def attention_chunk_unified_max_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    phi: float,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """T1 chunk-attention oracle returning ``(out, stat)`` — stat is the
+    per-batch max centered logit for the overflow recompute fallback
+    (chunk twin of :func:`attention_decode_unified_max_ref`)."""
+    return _chunk_attention(q, k_cache, v_cache, lengths, phi, scale)
+
+
+def attention_chunk_paged_ref(
+    q: jax.Array,             # (B, C, HQ, D)
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB)
+    lengths: jax.Array,
+    *,
+    phi: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention over a block-paged cache (gather + ref)."""
+    k = gather_paged_kv(k_pool, block_tables)
+    v = gather_paged_kv(v_pool, block_tables)
+    return attention_chunk_ref(q, k, v, lengths, phi=phi, scale=scale)
+
+
 def attention_prefill_chunked(
     q: jax.Array,
     k: jax.Array,

@@ -20,6 +20,12 @@ def _parse():
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--cache-kind", choices=["dense", "paged"],
+                    default="dense",
+                    help="dense slot cache or block-paged pool")
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="chunked-prefill chunk size (dense-KV families)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--use-dispatch-table", action="store_true",
                     help="build the T3 lookup table and route matmuls")
@@ -45,7 +51,9 @@ def main() -> int:
     table = tune_table(cfg) if args.use_dispatch_table else None
 
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                 table=table, seed=args.seed)
+                 cache_kind=args.cache_kind, page_size=args.page_size,
+                 prefill_chunk=args.prefill_chunk, table=table,
+                 seed=args.seed)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(

@@ -33,6 +33,26 @@ class ModelApi:
     decode_step: Callable         # (ctx, params, tokens, cache, lengths, **)
     init_cache: Callable          # (batch, max_seq)
     cache_spec: Callable          # (batch, max_seq)
+    # Paged-KV + chunked-prefill surface. Only dense-KV families (the
+    # transformer/moe caches of shape (L, B, S, HK, Dh)) support block
+    # paging; recurrent/ring caches (ssm, hybrid, encdec) leave these None
+    # and the engine falls back to the dense slot cache.
+    decode_step_paged: Optional[Callable] = None
+    #   (ctx, params, tokens, cache, block_tables, lengths, **)
+    prefill_chunk: Optional[Callable] = None
+    #   (ctx, params, tokens, chunk_lens, cache, lengths, **)
+    prefill_chunk_paged: Optional[Callable] = None
+    #   (ctx, params, tokens, chunk_lens, cache, block_tables, lengths, **)
+    init_paged_cache: Optional[Callable] = None   # (num_pages, page_size)
+    paged_cache_spec: Optional[Callable] = None   # (num_pages, page_size)
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.decode_step_paged is not None
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self.prefill_chunk is not None
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:
@@ -49,6 +69,7 @@ def get_model(cfg: ModelConfig) -> ModelApi:
     else:
         raise ValueError(f"unknown family {cfg.family}")
 
+    has_paged = hasattr(mod, "decode_step_paged")
     return ModelApi(
         cfg=cfg,
         init_params=lambda key: mod.init_params(cfg, key),
@@ -57,6 +78,17 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         decode_step=mod.decode_step,
         init_cache=lambda batch, max_seq: mod.init_cache(cfg, batch, max_seq),
         cache_spec=lambda batch, max_seq: mod.cache_spec(cfg, batch, max_seq),
+        decode_step_paged=getattr(mod, "decode_step_paged", None),
+        prefill_chunk=getattr(mod, "prefill_chunk", None),
+        prefill_chunk_paged=getattr(mod, "prefill_chunk_paged", None),
+        init_paged_cache=(
+            (lambda num_pages, page_size:
+             mod.init_paged_cache(cfg, num_pages, page_size))
+            if has_paged else None),
+        paged_cache_spec=(
+            (lambda num_pages, page_size:
+             mod.paged_cache_spec(cfg, num_pages, page_size))
+            if has_paged else None),
     )
 
 

@@ -253,6 +253,126 @@ def _scatter_kv(cache: jax.Array, new: jax.Array, lengths: jax.Array):
     return cache.at[jnp.arange(b), lengths].set(new.astype(cache.dtype))
 
 
+def _scatter_kv_chunk(cache: jax.Array, new: jax.Array, lengths: jax.Array,
+                      chunk_lens: jax.Array) -> jax.Array:
+    """cache: (B, S, H, D), new: (B, C, H, D) — row b writes its first
+    ``chunk_lens[b]`` chunk entries at positions ``lengths[b] + i``; the
+    rest (chunk padding / rows not prefilling this tick) are dropped via
+    an out-of-bounds sentinel index."""
+    b, c = new.shape[:2]
+    s = cache.shape[1]
+    pos = lengths[:, None] + jnp.arange(c)[None, :]
+    pos = jnp.where(jnp.arange(c)[None, :] < chunk_lens[:, None], pos, s)
+    return cache.at[jnp.arange(b)[:, None], pos].set(
+        new.astype(cache.dtype), mode="drop")
+
+
+def _paged_scatter_chunk(pool: jax.Array, new: jax.Array,
+                         block_tables: jax.Array, lengths: jax.Array,
+                         chunk_lens: jax.Array) -> jax.Array:
+    """Scatter a chunk of new KV into the shared block pool.
+
+    pool: (NP, PS, H, D); new: (B, C, H, D); block_tables: (B, NB).
+    Logical position ``lengths[b] + i`` lands at physical page
+    ``block_tables[b, pos // PS]`` offset ``pos % PS``. Entries past a row's
+    ``chunk_lens`` are redirected to page NP (out of bounds) and dropped;
+    unassigned block-table entries already hold the NP sentinel, so writes
+    from empty slots in a partially occupied batch are dropped too.
+    """
+    num_pages, ps = pool.shape[0], pool.shape[1]
+    b, c = new.shape[:2]
+    pos = lengths[:, None] + jnp.arange(c)[None, :]
+    valid = jnp.arange(c)[None, :] < chunk_lens[:, None]
+    page = jnp.clip(pos // ps, 0, block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(block_tables, page, axis=1)
+    phys = jnp.where(valid, phys, num_pages)
+    return pool.at[phys, pos % ps].set(new.astype(pool.dtype), mode="drop")
+
+
+def attention_decode_block_paged(
+    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+    pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, *, use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a block-paged KV cache.
+
+    x: (B, 1, D); pool_k/v: (NP, PS, HK, Dh) shared page pools;
+    block_tables: (B, NB) int32. Empty slots in a partially occupied batch
+    write nothing — their block-table entries are the out-of-bounds
+    sentinel, so the scatter drops them.
+    """
+    cfg = ctx.cfg
+    b = x.shape[0]
+    q, k, v = attention_qkv(
+        ctx, p, x, position[:, None], use_rope=use_rope
+    )
+    ones = jnp.ones_like(lengths)
+    pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths, ones)
+    pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths, ones)
+    new_len = lengths + 1
+    o = ops.attention_decode_paged(
+        q[:, 0], pool_k, pool_v, block_tables, new_len,
+        phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
+        SoftmaxPhiConfig(enabled=False),
+        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        shard=ctx.shard,
+    )
+    o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
+    return ctx.matmul(o, p["wo"]), pool_k, pool_v
+
+
+def attention_chunk_block(
+    ctx: LayerCtx, p: Params, x: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array,
+    lengths: jax.Array, chunk_lens: jax.Array, *, use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill step: C prompt tokens append to a dense slot cache.
+
+    x: (B, C, D); cache_k/v: (B, S, HK, Dh). Row b's tokens sit at absolute
+    positions ``lengths[b] + i`` for ``i < chunk_lens[b]``; the chunk's KV is
+    scattered first, then the chunk attends causally to prefix + chunk.
+    """
+    cfg = ctx.cfg
+    b, c, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(c)[None, :]
+    q, k, v = attention_qkv(ctx, p, x, positions, use_rope=use_rope)
+    cache_k = _scatter_kv_chunk(cache_k, k, lengths, chunk_lens)
+    cache_v = _scatter_kv_chunk(cache_v, v, lengths, chunk_lens)
+    o = ops.attention_chunk(
+        q, cache_k, cache_v, lengths,
+        phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
+        SoftmaxPhiConfig(enabled=False),
+        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+    )
+    o = ctx.shard(o.reshape(b, c, cfg.q_dim), "act_attn_out")
+    return ctx.matmul(o, p["wo"]), cache_k, cache_v
+
+
+def attention_chunk_block_paged(
+    ctx: LayerCtx, p: Params, x: jax.Array,
+    pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, chunk_lens: jax.Array, *, use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill step against the block-paged pool (paged twin of
+    :func:`attention_chunk_block`)."""
+    cfg = ctx.cfg
+    b, c, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(c)[None, :]
+    q, k, v = attention_qkv(ctx, p, x, positions, use_rope=use_rope)
+    pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths,
+                                  chunk_lens)
+    pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths,
+                                  chunk_lens)
+    o = ops.attention_chunk_paged(
+        q, pool_k, pool_v, block_tables, lengths,
+        phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
+        SoftmaxPhiConfig(enabled=False),
+        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+    )
+    o = ctx.shard(o.reshape(b, c, cfg.q_dim), "act_attn_out")
+    return ctx.matmul(o, p["wo"]), pool_k, pool_v
+
+
 # ---------------------------------------------------------------------------
 # Feed-forward (dense)
 # ---------------------------------------------------------------------------

@@ -76,6 +76,52 @@ def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
     return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
 
 
+def decode_block_paged(ctx: LayerCtx, p: Params, x: jax.Array,
+                       position: jax.Array, cache_i: dict,
+                       block_tables: jax.Array, lengths: jax.Array):
+    """Paged twin of :func:`decode_block`: the per-layer cache slice is the
+    shared (NP, PS, HK, Dh) page pool, addressed through block tables."""
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["attn_norm"], x)
+    a, pk, pv = L.attention_decode_block_paged(
+        ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+        block_tables, lengths,
+    )
+    x = x + a
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), {"k": pk, "v": pv}
+
+
+def chunk_block(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
+                lengths: jax.Array, chunk_lens: jax.Array):
+    """Chunked-prefill block over a dense slot cache (decode-shaped path)."""
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["attn_norm"], x)
+    a, ck, cv = L.attention_chunk_block(
+        ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths, chunk_lens
+    )
+    x = x + a
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
+
+
+def chunk_block_paged(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
+                      block_tables: jax.Array, lengths: jax.Array,
+                      chunk_lens: jax.Array):
+    cfg = ctx.cfg
+    h = L.norm(cfg, p["attn_norm"], x)
+    a, pk, pv = L.attention_chunk_block_paged(
+        ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
+        lengths, chunk_lens,
+    )
+    x = x + a
+    h = L.norm(cfg, p["mlp_norm"], x)
+    x = x + L.mlp_block(ctx, p["mlp"], h)
+    return ctx.shard(x, "act_resid"), {"k": pk, "v": pv}
+
+
 def prefill_block(ctx: LayerCtx, p: Params, x: jax.Array,
                   positions: jax.Array, s_max: int):
     """Like ``block`` but also emits this layer's (padded) KV cache entry."""
@@ -163,6 +209,26 @@ def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None):
+    """Block-paged KV storage: a flat pool of fixed-size pages shared by
+    every sequence (per-sequence addressing lives in the engine's block
+    tables — see :mod:`repro.serving.blockpool`)."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
 def prefill(
     ctx: LayerCtx, params: Params, tokens: jax.Array, lengths: jax.Array,
     cache: dict, *, prefix_embeds: Optional[jax.Array] = None,
@@ -210,4 +276,86 @@ def decode_step(
     )
     x = L.norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(ctx, params, x)[:, 0]
+    return logits, new_cache
+
+
+def decode_step_paged(
+    ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
+    block_tables: jax.Array, lengths: jax.Array, *, unroll: bool = False,
+    decode_block_fn: Callable = decode_block_paged,
+):
+    """One decode step over the block-paged cache.
+
+    ``cache`` leaves are (L, NP, PS, HK, Dh) page pools; ``block_tables`` is
+    the (B, NB) logical→physical page map, shared by all layers (the scan
+    carries the pool, the table rides in closure).
+    """
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
+    position = lengths
+
+    x, new_cache = stack.run_stack_cached(
+        params["layers"], x, cache,
+        lambda p_i, xx, c_i: decode_block_fn(ctx, p_i, xx, position, c_i,
+                                             block_tables, lengths),
+        unroll=unroll,
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(ctx, params, x)[:, 0]
+    return logits, new_cache
+
+
+def prefill_chunk(
+    ctx: LayerCtx, params: Params, tokens: jax.Array,
+    chunk_lens: jax.Array, cache: dict, lengths: jax.Array,
+    *, unroll: bool = False, chunk_block_fn: Callable = chunk_block,
+):
+    """Process one prompt chunk for a whole (possibly ragged) batch.
+
+    tokens: (B, C); row b consumes its first ``chunk_lens[b]`` entries at
+    absolute positions ``lengths[b]..lengths[b]+chunk_lens[b]-1``; rows with
+    ``chunk_lens[b] == 0`` are spectators (nothing written, outputs garbage).
+    Returns per-row logits at each row's last chunk position and the updated
+    cache — long prompts stream through this in fixed-size chunks, and a
+    whole admission batch prefills in one call (chunked + batched prefill).
+    Starting from ``lengths == 0`` this subsumes single-shot prefill.
+    """
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens)           # (B, C, D)
+
+    x, new_cache = stack.run_stack_cached(
+        params["layers"], x, cache,
+        lambda p_i, xx, c_i: chunk_block_fn(ctx, p_i, xx, c_i, lengths,
+                                            chunk_lens),
+        unroll=unroll,
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    last = jnp.take_along_axis(
+        x, (chunk_lens - 1)[:, None, None].clip(0), axis=1
+    )
+    logits = L.lm_logits(ctx, params, last)[:, 0]
+    return logits, new_cache
+
+
+def prefill_chunk_paged(
+    ctx: LayerCtx, params: Params, tokens: jax.Array,
+    chunk_lens: jax.Array, cache: dict, block_tables: jax.Array,
+    lengths: jax.Array, *, unroll: bool = False,
+    chunk_block_fn: Callable = chunk_block_paged,
+):
+    """Paged twin of :func:`prefill_chunk` (cache = page pools + tables)."""
+    cfg = ctx.cfg
+    x = L.embed(ctx, params, tokens)
+
+    x, new_cache = stack.run_stack_cached(
+        params["layers"], x, cache,
+        lambda p_i, xx, c_i: chunk_block_fn(ctx, p_i, xx, c_i, block_tables,
+                                            lengths, chunk_lens),
+        unroll=unroll,
+    )
+    x = L.norm(cfg, params["final_norm"], x)
+    last = jnp.take_along_axis(
+        x, (chunk_lens - 1)[:, None, None].clip(0), axis=1
+    )
+    logits = L.lm_logits(ctx, params, last)[:, 0]
     return logits, new_cache

@@ -1,7 +1,13 @@
-"""Serving substrate: KV-cache management, continuous-batching engine,
-sampling. The engine is the end-to-end realization of the paper's system:
-prefill fills slot caches, decode steps run the T1/T2/T3-optimized
-``decode_step`` over the whole active batch every tick.
+"""Serving substrate: KV-cache management (dense slots or a block-paged
+pool), continuous-batching engine with chunked + batched prefill, sampling.
+The engine is the end-to-end realization of the paper's system: admitted
+prompts stream through the decode-shaped chunk path (or a batched
+single-shot prefill for recurrent families), decode steps run the
+T1/T2/T3-optimized ``decode_step`` over the whole active batch every tick,
+and ``cache_kind="paged"`` swaps the dense slot cache for fixed-size pages
+addressed through per-sequence block tables.
 """
+from repro.serving.blockpool import BlockPool, PagedSlotManager  # noqa: F401
 from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.kvcache import SlotManager  # noqa: F401
 from repro.serving.sampling import sample  # noqa: F401

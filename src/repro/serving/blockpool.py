@@ -1,0 +1,171 @@
+"""Block-paged KV cache management (host side).
+
+The paper's §3/Fig. 2 critique of static dataflow applies to memory as much
+as compute: a dense ``(num_slots, max_seq)`` cache provisions every slot for
+the worst-case sequence, so short requests strand capacity and admission is
+bounded by slots, not by actual KV bytes. This module replaces that with a
+**block pool**: KV storage is a flat array of fixed-size pages shared by all
+sequences, each sequence owns an ordered list of page ids (its *block
+table*), and pages cycle through an explicit LIFO free-list on release.
+
+Device layout (see :func:`repro.models.transformer.init_paged_cache`):
+
+    k/v pool: (num_layers, num_pages, page_size, kv_heads, head_dim)
+
+Logical position ``p`` of the sequence in slot ``s`` lives at physical
+``(block_tables[s, p // page_size], p % page_size)``. Block tables are a
+dense ``(num_slots, max_pages_per_seq)`` int32 array handed to the jitted
+decode/prefill-chunk steps each tick; unassigned entries hold the
+out-of-bounds sentinel ``num_pages`` — KV scatters through them are
+dropped (``mode="drop"``), and reads clamp to a real page whose contents
+the attention length-mask discards. Correctness of empty slots in a
+partially occupied batch depends on that sentinel: a 0 entry would alias a
+real page another sequence may own.
+
+Two classes:
+
+  * :class:`BlockPool` — the free-list allocator (no device state).
+  * :class:`PagedSlotManager` — drop-in replacement for
+    :class:`repro.serving.kvcache.SlotManager` that additionally owns the
+    per-slot block tables. Pages for ``prompt_len + max_new`` positions are
+    reserved at admission, so a running sequence can never fail allocation
+    mid-decode (preemption/lazy growth are ROADMAP follow-ons).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kvcache import Slot, SlotManager
+
+
+def pages_for(positions: int, page_size: int) -> int:
+    """Pages needed to store ``positions`` KV entries — the one definition
+    of the page ceil-div, shared by the allocator, the engine's default
+    pool sizing, and the benchmarks."""
+    return -(-max(positions, 0) // page_size)
+
+
+class BlockPool:
+    """Fixed-size page allocator over ``num_pages`` physical pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO: a just-freed (hot) page is reused first
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._used: set[int] = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    def pages_for(self, positions: int) -> int:
+        """Pages needed to store ``positions`` KV entries."""
+        return pages_for(positions, self.page_size)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Pop ``n`` pages off the free list; None if not enough remain."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative page count")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+    def check(self) -> None:
+        """Invariant check (used by the property tests): every page is on
+        exactly one side of the free/used split."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (free & self._used), "page both free and allocated"
+        assert free | self._used == set(range(self.num_pages)), \
+            "page leaked out of the pool"
+
+
+@dataclasses.dataclass
+class PagedSlot(Slot):
+    pages: list = dataclasses.field(default_factory=list)
+
+
+class PagedSlotManager(SlotManager):
+    """Slot occupancy + block tables over a shared :class:`BlockPool`.
+
+    Inherits the ``SlotManager`` tick-loop interface (``lengths`` /
+    ``tick`` / ``done`` and the admission scan) so the engine can switch
+    cache kinds without touching its loop; admission additionally requires
+    the pool to cover the request's full ``prompt_len + max_new`` footprint
+    and release returns the pages to the free list.
+    """
+
+    def __init__(self, num_slots: int, max_seq: int, pool: BlockPool):
+        self.pool = pool
+        self.max_pages_per_seq = pool.pages_for(max_seq)
+        super().__init__(num_slots, max_seq)
+
+    def _empty_slot(self) -> PagedSlot:
+        return PagedSlot()
+
+    def _make_slot(self, request_id: int, prompt_len: int,
+                   max_new: int) -> Optional[PagedSlot]:
+        need = self.pool.pages_for(prompt_len + max_new)
+        if need > self.pool.num_pages:
+            # can never be satisfied, not even by an empty pool — raise like
+            # the max_seq check (returning None would livelock admission)
+            raise ValueError(
+                f"request {request_id} needs {need} pages > pool size "
+                f"{self.pool.num_pages} (page_size {self.pool.page_size})")
+        pages = self.pool.alloc(need)
+        if pages is None:
+            return None
+        return PagedSlot(request_id, prompt_len, 0, max_new, pages=pages)
+
+    def release(self, idx: int) -> None:
+        s = self.slots[idx]
+        if s.pages:
+            self.pool.free(s.pages)
+        super().release(idx)
+
+    def block_tables(self) -> np.ndarray:
+        """Dense (num_slots, max_pages_per_seq) int32 block-table array.
+
+        Unassigned entries hold the out-of-bounds sentinel ``num_pages``:
+        KV scatters through them are dropped (so an empty slot in the batch
+        can never corrupt a page another sequence owns) and reads clamp to
+        a real page whose contents the attention length-mask discards.
+        """
+        bt = np.full((len(self.slots), self.max_pages_per_seq),
+                     self.pool.num_pages, np.int32)
+        for i, s in enumerate(self.slots):
+            if s.pages:
+                bt[i, :len(s.pages)] = s.pages
+        return bt
+
+    def check(self) -> None:
+        """Cross-structure invariants for the property tests."""
+        self.pool.check()
+        owned: list[int] = []
+        for s in self.slots:
+            if s.free:
+                assert not s.pages, "free slot still holds pages"
+            owned.extend(s.pages)
+        assert len(owned) == len(set(owned)), \
+            "page owned by two sequences (double allocation)"
+        assert set(owned) == self.pool._used, \
+            "pool used-set out of sync with slot block tables"

@@ -1,11 +1,31 @@
-"""Continuous-batching inference engine (prefill + decode over slot caches).
+"""Continuous-batching inference engine (chunked/batched prefill + decode).
 
-The serving realization of the paper's dataflow (Fig. 2): prefill is the
-GEMM-shaped phase (one request at a time, bucketed prompt lengths), decode
-is the flat-GEMM/GEMV-shaped phase executed over the *whole* slot batch
-every tick. New requests claim slots as soon as finished sequences release
-them — decode batches stay full (continuous batching), which is what keeps
-the decode-phase GEMMs at M = num_slots, the regime T2/T3 optimize.
+The serving realization of the paper's dataflow (Fig. 2), upgraded past the
+static-allocation regime the paper argues against:
+
+  * **KV storage** is either the classic dense ``(slots, max_seq)`` cache
+    (``cache_kind="dense"``) or a **block-paged pool** shared by all
+    sequences (``cache_kind="paged"``, see :mod:`repro.serving.blockpool`):
+    fixed-size pages, per-sequence block tables, explicit free-list. Paging
+    decouples admission from worst-case sequence length — the pool can be
+    sized to *expected* occupancy instead of ``slots x max_seq``.
+
+  * **Prefill** is chunked + batched for dense-KV families: every admitted
+    prompt streams through the decode-shaped chunk path
+    (``api.prefill_chunk``) in fixed-size chunks, and the whole admission
+    batch rides in one ``(num_slots, chunk)`` call — a single compiled
+    shape, instead of one ``jax.jit`` per (request, prompt-bucket).
+    Families without a dense KV cache (ssm / hybrid ring / encdec) use a
+    batched single-shot prefill (one padded call per admission wave).
+
+  * **Decode** runs over the whole slot batch every tick; new requests
+    claim slots (and pages) as soon as finished sequences release them, so
+    decode batches stay full (continuous batching) and the decode-phase
+    GEMMs stay at M = num_slots, the regime T2/T3 optimize.
+
+Dense and paged engines are an apples-to-apples switch: with
+``page_size`` dividing ``max_seq`` the paged gather view is bitwise
+identical to the dense cache, so greedy outputs are token-identical.
 """
 from __future__ import annotations
 
@@ -20,10 +40,13 @@ from repro.config import ModelConfig, RunConfig
 from repro.core.dispatch import DispatchTable
 from repro.models.api import get_model
 from repro.models.layers import LayerCtx
+from repro.serving.blockpool import BlockPool, PagedSlotManager, pages_for
 from repro.serving.kvcache import SlotManager
 from repro.serving.sampling import sample
 
 PROMPT_BUCKET = 64
+DEFAULT_PREFILL_CHUNK = 64
+DEFAULT_PAGE_SIZE = 64
 
 
 @dataclasses.dataclass
@@ -49,6 +72,10 @@ class Engine:
         *,
         num_slots: int = 8,
         max_seq: int = 2048,
+        cache_kind: str = "dense",
+        page_size: int = DEFAULT_PAGE_SIZE,
+        num_pages: Optional[int] = None,
+        prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
         table: Optional[DispatchTable] = None,
         use_pallas: bool = False,
         seed: int = 0,
@@ -59,19 +86,65 @@ class Engine:
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
-        self.slots = SlotManager(num_slots, max_seq)
-        self.cache = self.api.init_cache(num_slots, max_seq)
+        self.cache_kind = cache_kind
+        # chunked prefill needs the chunk-append model path (dense-KV
+        # families); others fall back to batched single-shot prefill
+        self.prefill_chunk = (
+            prefill_chunk if self.api.supports_chunked_prefill else 0)
+
+        if cache_kind == "dense":
+            self.slots: SlotManager = SlotManager(num_slots, max_seq)
+            self.cache = self.api.init_cache(num_slots, max_seq)
+        elif cache_kind == "paged":
+            if not self.api.supports_paged:
+                raise ValueError(
+                    f"family {cfg.family!r} has no paged-KV path "
+                    "(recurrent/ring state caches); use cache_kind='dense'")
+            if not self.prefill_chunk:
+                raise ValueError(
+                    "cache_kind='paged' requires chunked prefill "
+                    "(prefill_chunk > 0)")
+            # default pool = same KV bytes as the dense cache; size it
+            # smaller to overcommit (admission then queues on free pages)
+            pool = BlockPool(
+                num_pages if num_pages is not None
+                else num_slots * pages_for(max_seq, page_size),
+                page_size,
+            )
+            self.slots = PagedSlotManager(num_slots, max_seq, pool)
+            self.pool = pool
+            self.cache = self.api.init_paged_cache(pool.num_pages, page_size)
+        else:
+            raise ValueError(f"unknown cache_kind {cache_kind!r}")
+
         self.key = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.by_slot: dict[int, Request] = {}
         self.results: dict[int, _Done] = {}
         self.ticks = 0
 
-        self._decode = jax.jit(
-            lambda p, t, c, l: self.api.decode_step(self.ctx, p, t, c, l),
-            donate_argnums=(2,),
-        )
-        self._prefill_cache = {}  # bucketed P -> jitted fn
+        if cache_kind == "paged":
+            self._decode = jax.jit(
+                lambda p, t, c, bt, l: self.api.decode_step_paged(
+                    self.ctx, p, t, c, bt, l),
+                donate_argnums=(2,),
+            )
+            self._chunk = jax.jit(
+                lambda p, t, cl, c, bt, l: self.api.prefill_chunk_paged(
+                    self.ctx, p, t, cl, c, bt, l),
+                donate_argnums=(3,),
+            )
+        else:
+            self._decode = jax.jit(
+                lambda p, t, c, l: self.api.decode_step(self.ctx, p, t, c, l),
+                donate_argnums=(2,),
+            )
+            self._chunk = jax.jit(
+                lambda p, t, cl, c, l: self.api.prefill_chunk(
+                    self.ctx, p, t, cl, c, l),
+                donate_argnums=(3,),
+            ) if self.prefill_chunk else None
+        self._prefill_cache = {}  # bucketed P -> jitted batched prefill
 
     # -- public API -----------------------------------------------------------
 
@@ -100,6 +173,9 @@ class Engine:
     # -- internals ---------------------------------------------------------------
 
     def _admit(self) -> None:
+        """Claim slots (and pages) for waiting requests; prefill the whole
+        admission wave in one batch."""
+        admitted: list[tuple[int, Request]] = []
         still_waiting = []
         for req in self.queue:
             idx = self.slots.try_assign(req.id, len(req.prompt),
@@ -109,45 +185,111 @@ class Engine:
                 continue
             self.by_slot[idx] = req
             self.results[req.id] = _Done(tokens=[])
-            self._prefill_into(idx, req)
+            admitted.append((idx, req))
         self.queue = still_waiting
+        if not admitted:
+            return
+        if self.prefill_chunk:
+            self._prefill_chunked(admitted)
+        else:
+            self._prefill_batched(admitted)
+
+    # -- chunked + batched prefill (dense-KV families) -------------------------
+
+    def _prefill_chunked(self, items: list[tuple[int, Request]]) -> None:
+        """Stream all admitted prompts through the chunk-append path.
+
+        Each step processes one ``(num_slots, chunk)`` call: admitted rows
+        consume their next chunk, every other slot is a spectator
+        (``chunk_lens == 0`` — nothing written). One compiled shape total.
+        """
+        c = self.prefill_chunk
+        progress = {idx: 0 for idx, _ in items}
+        plens = {idx: max(len(req.prompt), 1) for idx, req in items}
+        final_logits: dict[int, jax.Array] = {}
+        n_steps = -(-max(plens.values()) // c)
+        for step in range(n_steps):
+            tokens = np.zeros((self.num_slots, c), np.int32)
+            chunk_lens = np.zeros((self.num_slots,), np.int32)
+            lengths = self.slots.lengths()
+            for idx, req in items:
+                done = progress[idx]
+                cl = min(plens[idx] - done, c)
+                if cl <= 0:
+                    continue
+                avail = min(max(len(req.prompt) - done, 0), cl)
+                if avail:
+                    tokens[idx, :avail] = req.prompt[done:done + avail]
+                chunk_lens[idx] = cl          # p=0 feeds one pad token
+                lengths[idx] = done           # prefill progress, not final P
+            args = [self.params, jnp.asarray(tokens), jnp.asarray(chunk_lens),
+                    self.cache]
+            if self.cache_kind == "paged":
+                args.append(jnp.asarray(self.slots.block_tables()))
+            args.append(jnp.asarray(lengths))
+            logits, self.cache = self._chunk(*args)
+            for idx, req in items:
+                if chunk_lens[idx]:
+                    progress[idx] += int(chunk_lens[idx])
+                    if progress[idx] == plens[idx]:
+                        final_logits[idx] = logits[idx:idx + 1]
+        for idx, req in items:
+            tok = int(self._sample(final_logits[idx], req)[0])
+            self._emit(idx, req, tok, wrote_kv=False)
+
+    # -- batched single-shot prefill (recurrent/ring families) ------------------
 
     def _prefill_fn(self, padded: int):
         if padded not in self._prefill_cache:
-            cache1 = self.api.cache_spec(1, self.max_seq)
+            spec = self.api.cache_spec(self.num_slots, self.max_seq)
 
             def fn(params, tokens, lengths):
                 cache = jax.tree.map(
-                    lambda s: jnp.zeros(s.shape, s.dtype), cache1)
+                    lambda s: jnp.zeros(s.shape, s.dtype), spec)
                 return self.api.prefill(
                     self.ctx, params, tokens, lengths, cache)
 
             self._prefill_cache[padded] = jax.jit(fn)
         return self._prefill_cache[padded]
 
-    def _prefill_into(self, idx: int, req: Request) -> None:
-        p = len(req.prompt)
-        padded = -(-max(p, 1) // PROMPT_BUCKET) * PROMPT_BUCKET
-        toks = np.zeros((1, padded), np.int32)
-        toks[0, :p] = req.prompt
-        logits, cache1 = self._prefill_fn(padded)(
-            self.params, jnp.asarray(toks), jnp.array([p], jnp.int32))
-        # insert the single-sequence cache into slot idx (batch axis 1)
-        self.cache = jax.tree.map(
-            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
-                big, small.astype(big.dtype), idx, axis=1),
-            self.cache, cache1,
-        )
-        tok = self._sample(logits, req)
-        self._emit(idx, req, int(tok[0]), wrote_kv=False)
+    def _prefill_batched(self, items: list[tuple[int, Request]]) -> None:
+        """One padded prefill call for the whole admission wave; each row's
+        cache entry is inserted at its slot index afterwards."""
+        pmax = max(len(req.prompt) for _, req in items)
+        padded = -(-max(pmax, 1) // PROMPT_BUCKET) * PROMPT_BUCKET
+        toks = np.zeros((self.num_slots, padded), np.int32)
+        lens = np.zeros((self.num_slots,), np.int32)
+        for row, (idx, req) in enumerate(items):
+            toks[row, :len(req.prompt)] = req.prompt
+            lens[row] = len(req.prompt)
+        logits, cache_new = self._prefill_fn(padded)(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        for row, (idx, req) in enumerate(items):
+            row_cache = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1),
+                cache_new)
+            self.cache = jax.tree.map(
+                lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), idx, axis=1),
+                self.cache, row_cache,
+            )
+            tok = int(self._sample(logits[row:row + 1], req)[0])
+            self._emit(idx, req, tok, wrote_kv=False)
+
+    # -- decode ----------------------------------------------------------------
 
     def _decode_tick(self) -> list[tuple[int, int]]:
         lengths = jnp.asarray(self.slots.lengths())
         tokens = np.zeros((self.num_slots,), np.int32)
         for idx, req in self.by_slot.items():
             tokens[idx] = self.results[req.id].tokens[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache, lengths)
+        if self.cache_kind == "paged":
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(self.slots.block_tables()), lengths)
+        else:
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache, lengths)
         emitted = []
         for idx in list(self.by_slot):
             req = self.by_slot[idx]
@@ -155,6 +297,8 @@ class Engine:
             emitted.append((req.id, tok))
             self._emit(idx, req, tok)
         return emitted
+
+    # -- bookkeeping -----------------------------------------------------------
 
     def _sample(self, logits: jax.Array, req: Request) -> jax.Array:
         self.key, sub = jax.random.split(self.key)

@@ -1,4 +1,4 @@
-"""Slot-based KV cache manager for continuous batching.
+"""Slot-based (dense) KV cache manager for continuous batching.
 
 The device cache is the model family's own pytree (dense KV / ring KV +
 SSM state / recurrent state — ``api.init_cache``), always allocated for
@@ -6,6 +6,12 @@ SSM state / recurrent state — ``api.init_cache``), always allocated for
 occupancy host-side and produces the per-tick (lengths, active mask)
 arrays; eviction is immediate on completion so a waiting request can
 claim the slot on the next tick (continuous batching).
+
+This is the *dense* storage discipline: every slot reserves ``max_seq``
+positions up front, so capacity = slots x worst case. The block-paged
+alternative (:mod:`repro.serving.blockpool`) shares a page pool across
+sequences and reserves only each request's actual footprint; the engine
+selects between them with ``cache_kind="dense" | "paged"``.
 """
 from __future__ import annotations
 
@@ -30,7 +36,17 @@ class Slot:
 class SlotManager:
     def __init__(self, num_slots: int, max_seq: int):
         self.max_seq = max_seq
-        self.slots = [Slot() for _ in range(num_slots)]
+        self.slots = [self._empty_slot() for _ in range(num_slots)]
+
+    # hooks overridden by the paged manager (blockpool.PagedSlotManager)
+    def _empty_slot(self) -> Slot:
+        return Slot()
+
+    def _make_slot(self, request_id: int, prompt_len: int,
+                   max_new: int) -> Optional[Slot]:
+        """Build the slot record for an admitted request; None = the
+        backing storage (e.g. a page pool) cannot host it right now."""
+        return Slot(request_id, prompt_len, 0, max_new)
 
     def try_assign(self, request_id: int, prompt_len: int,
                    max_new: int) -> Optional[int]:
@@ -40,12 +56,15 @@ class SlotManager:
                 f"max_seq {self.max_seq}")
         for i, s in enumerate(self.slots):
             if s.free:
-                self.slots[i] = Slot(request_id, prompt_len, 0, max_new)
+                new = self._make_slot(request_id, prompt_len, max_new)
+                if new is None:
+                    return None
+                self.slots[i] = new
                 return i
         return None
 
     def release(self, idx: int) -> None:
-        self.slots[idx] = Slot()
+        self.slots[idx] = self._empty_slot()
 
     def lengths(self) -> np.ndarray:
         return np.array([s.length for s in self.slots], np.int32)

@@ -1,0 +1,211 @@
+"""Block-paged KV cache: pool/free-list invariants (property-based via the
+hypothesis shim), block-table consistency, and paged-vs-dense engine
+equivalence — greedy outputs must be token-identical, including runs where
+slot release + re-admission recycles pages."""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import configs
+from repro.models.api import get_model
+from repro.serving.blockpool import BlockPool, PagedSlotManager
+from repro.serving.engine import Engine, Request
+
+settings.register_profile("fast", max_examples=20, deadline=None)
+settings.load_profile("fast")
+
+
+# ---------------------------------------------------------------------------
+# BlockPool unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_blockpool_alloc_free_conservation():
+    pool = BlockPool(num_pages=8, page_size=16)
+    a = pool.alloc(3)
+    b = pool.alloc(5)
+    assert pool.free_pages == 0 and pool.used_pages == 8
+    assert set(a) | set(b) == set(range(8)) and not set(a) & set(b)
+    assert pool.alloc(1) is None            # exhausted, not an exception
+    pool.free(a)
+    assert pool.free_pages == 3
+    c = pool.alloc(2)
+    assert set(c) <= set(a)                 # freed pages are reused
+    pool.check()
+
+
+def test_blockpool_double_free_raises():
+    pool = BlockPool(num_pages=4, page_size=8)
+    a = pool.alloc(2)
+    pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free([99])                      # foreign page
+
+
+def test_blockpool_pages_for():
+    pool = BlockPool(num_pages=4, page_size=16)
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+
+
+# ---------------------------------------------------------------------------
+# PagedSlotManager: random admit/tick/release lifecycles keep every
+# cross-structure invariant (no double allocation, free-list conservation,
+# block-table <-> pool consistency)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+def test_paged_manager_random_lifecycle(seed):
+    rng = np.random.default_rng(seed)
+    page_size = int(rng.choice([4, 8, 16]))
+    num_pages = int(rng.integers(4, 40))
+    num_slots = int(rng.integers(1, 6))
+    max_seq = page_size * max(2, num_pages // max(num_slots, 1))
+    pool = BlockPool(num_pages, page_size)
+    mgr = PagedSlotManager(num_slots, max_seq, pool)
+    live: list[int] = []
+    rid = 0
+    for _ in range(40):
+        op = rng.random()
+        if op < 0.5:
+            prompt = int(rng.integers(1, max(max_seq // 2, 2)))
+            max_new = int(rng.integers(1, max_seq - prompt + 1))
+            idx = mgr.try_assign(rid, prompt, max_new)
+            if idx is not None:
+                assert idx not in live, "slot double-assigned"
+                live.append(idx)
+                rid += 1
+        elif op < 0.8 and live:
+            idx = live[rng.integers(len(live))]
+            mgr.tick(idx, wrote_kv=bool(rng.random() < 0.9))
+        elif live:
+            idx = live.pop(rng.integers(len(live)))
+            mgr.release(idx)
+        mgr.check()                          # invariants after every op
+    for idx in live:
+        mgr.release(idx)
+    mgr.check()
+    assert pool.free_pages == num_pages      # everything returned
+
+
+def test_block_tables_sentinel_and_ownership():
+    pool = BlockPool(num_pages=16, page_size=8)
+    mgr = PagedSlotManager(3, max_seq=64, pool=pool)
+    a = mgr.try_assign(0, prompt_len=20, max_new=4)   # 3 pages
+    b = mgr.try_assign(1, prompt_len=5, max_new=3)    # 1 page
+    assert a is not None and b is not None
+    bt = mgr.block_tables()
+    assert bt.shape == (3, 8)                          # 64 / 8 logical blocks
+    pages_a = set(bt[a][bt[a] < pool.num_pages])
+    pages_b = set(bt[b][bt[b] < pool.num_pages])
+    assert len(pages_a) == 3 and len(pages_b) == 1
+    assert not pages_a & pages_b                       # disjoint ownership
+    # unassigned entries (and the whole free slot row) hold the sentinel
+    free_row = ({0, 1, 2} - {a, b}).pop()
+    assert (bt[free_row] == pool.num_pages).all()
+    mgr.release(a)
+    assert pool.free_pages == 16 - 1
+
+
+def test_paged_manager_rejects_oversized_request():
+    mgr = PagedSlotManager(1, max_seq=32, pool=BlockPool(8, 8))
+    with pytest.raises(ValueError):
+        mgr.try_assign(0, prompt_len=30, max_new=8)
+
+
+def test_paged_manager_rejects_request_larger_than_pool():
+    """A request whose page footprint exceeds the whole (overcommitted)
+    pool must raise, not return None — None would make the engine's
+    admission loop retry forever (livelock, ticks never advance)."""
+    mgr = PagedSlotManager(1, max_seq=512, pool=BlockPool(2, 64))
+    with pytest.raises(ValueError):
+        mgr.try_assign(0, prompt_len=200, max_new=100)  # needs 5 > 2 pages
+
+
+def test_paged_manager_admission_blocks_on_pool_not_slots():
+    # plenty of slots, tiny pool: admission must wait on pages
+    pool = BlockPool(num_pages=2, page_size=8)
+    mgr = PagedSlotManager(4, max_seq=32, pool=pool)
+    assert mgr.try_assign(0, prompt_len=8, max_new=8) is not None  # 2 pages
+    assert mgr.try_assign(1, prompt_len=1, max_new=1) is None      # no pages
+    mgr.release(0)
+    assert mgr.try_assign(1, prompt_len=1, max_new=1) is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: paged greedy decode is token-identical to dense
+# ---------------------------------------------------------------------------
+
+
+def _engines(arch, **kw):
+    cfg = configs.smoke(configs.get(arch))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    dense = Engine(cfg, params, cache_kind="dense", **kw)
+    paged = Engine(cfg, params, cache_kind="paged", page_size=32, **kw)
+    return cfg, dense, paged
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-0.5b",
+             pytest.param("dbrx-132b", marks=pytest.mark.slow)])
+def test_paged_engine_token_identical_to_dense(arch):
+    """Greedy outputs match bitwise across cache kinds, through a workload
+    where 5 requests share 2 slots — finished sequences release their pages
+    and re-admitted requests recycle them mid-run."""
+    cfg, dense, paged = _engines(arch, num_slots=2, max_seq=256,
+                                 prefill_chunk=32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (9, 23, 70, 5)]
+
+    def reqs():
+        return [Request(id=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+
+    out_dense = dense.run(reqs())
+    out_paged = paged.run(reqs())
+    assert out_dense == out_paged
+    # every page returned to the free list once the run drains
+    assert paged.pool.used_pages == 0
+    assert paged.pool.free_pages == paged.pool.num_pages
+
+
+def test_paged_engine_page_recycling_visible():
+    """With a pool sized for ~one request, back-to-back requests must reuse
+    the same physical pages (recycle through the free list) and still match
+    the dense engine."""
+    cfg, dense, paged = _engines(
+        "qwen2-0.5b", num_slots=1, max_seq=64, prefill_chunk=16)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
+               for _ in range(2)]
+    pages_used = []
+    outs = {}
+    for i, p in enumerate(prompts):
+        paged.submit(Request(id=i, prompt=p, max_new_tokens=3))
+        paged.step()                       # admit + prefill + first tick
+        pages_used.append(tuple(paged.slots.slots[0].pages))
+        while paged.queue or paged.by_slot:
+            paged.step()
+        outs[i] = paged.results[i].tokens
+    out_dense = dense.run([Request(id=i, prompt=p, max_new_tokens=3)
+                           for i, p in enumerate(prompts)])
+    assert outs == out_dense
+    assert set(pages_used[1]) & set(pages_used[0]), \
+        "request 1 did not recycle request 0's freed pages"
+
+
+def test_paged_engine_rejects_recurrent_families():
+    cfg = configs.smoke(configs.get("rwkv6-1.6b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        Engine(cfg, params, cache_kind="paged")

@@ -1,7 +1,7 @@
 """T3 heuristic-dataflow tests: the decision structure of paper §5."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.core import dispatch as dsp

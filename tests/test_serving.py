@@ -45,7 +45,10 @@ def test_engine_continuous_batching_queueing():
     assert all(len(v) == 4 for v in out.values())
 
 
-@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-1.6b", "hymba-1.5b"])
+@pytest.mark.parametrize(
+    "arch", ["qwen2-0.5b",
+             pytest.param("rwkv6-1.6b", marks=pytest.mark.slow),
+             pytest.param("hymba-1.5b", marks=pytest.mark.slow)])
 def test_engine_matches_teacher_forcing(arch):
     """Greedy engine output == argmax of prefill(prompt + prefix) at every
     step — continuous batching/ragged prompts do not change the math."""
@@ -63,12 +66,45 @@ def test_engine_matches_teacher_forcing(arch):
         toks = out[i]
         for k in range(3):
             seq = np.concatenate([prompt, np.asarray(toks[:k], np.int32)])
+            # one padded teacher shape -> one jit compile for all (i, k)
+            padded = np.zeros((64,), np.int32)
+            padded[:len(seq)] = seq
             cache = api.init_cache(1, 256)
             logits, _ = api.prefill(
-                ctx, params, jnp.asarray(seq)[None],
+                ctx, params, jnp.asarray(padded)[None],
                 jnp.array([len(seq)], jnp.int32), cache)
             want = int(jnp.argmax(logits[0, :cfg.vocab_size]))
             assert want == toks[k], (arch, i, k)
+
+
+def test_engine_chunked_prefill_matches_teacher_forcing():
+    """Chunked + batched prefill (prompts streamed through the decode-shaped
+    path in 16-token chunks, whole admission wave in one padded batch) is
+    greedy-equivalent to single-shot ``api.prefill`` teacher forcing for
+    ragged prompt lengths spanning 1..4 chunks."""
+    cfg, eng = _engine("qwen2-0.5b", num_slots=4, max_seq=256,
+                       prefill_chunk=16)
+    api = get_model(cfg)
+    from repro.models.layers import LayerCtx
+    ctx = LayerCtx(cfg=cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 16, 23, 61)]    # below / at / across chunk edges
+    out = eng.run([Request(id=i, prompt=p, max_new_tokens=2)
+                   for i, p in enumerate(prompts)])
+    for i, prompt in enumerate(prompts):
+        toks = out[i]
+        for k in range(2):
+            seq = np.concatenate([prompt, np.asarray(toks[:k], np.int32)])
+            # one padded teacher shape -> one jit compile for all (i, k)
+            padded = np.zeros((64,), np.int32)
+            padded[:len(seq)] = seq
+            cache = api.init_cache(1, 256)
+            logits, _ = api.prefill(
+                ctx, eng.params, jnp.asarray(padded)[None],
+                jnp.array([len(seq)], jnp.int32), cache)
+            want = int(jnp.argmax(logits[0, :cfg.vocab_size]))
+            assert want == toks[k], (i, k)
 
 
 def test_engine_eos_and_slot_reuse():

@@ -9,7 +9,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.config import SoftmaxPhiConfig
 from repro.core import phi as phi_mod
@@ -31,6 +32,7 @@ def test_softmax_phi_invariance(xs, phi):
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 @given(st.integers(min_value=2, max_value=6), st.integers(0, 10_000))
 def test_async_combine_split_invariance(n_splits, seed):
     """Eq. 4: partial (num, den) sums are addable in any partition."""

@@ -7,6 +7,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.config import RunConfig, ShapeConfig
@@ -19,6 +20,7 @@ from repro.training.loop import train_loop
 from repro.training.train_state import TrainState, make_train_step
 
 
+@pytest.mark.slow
 def test_train_checkpoint_serve_roundtrip():
     cfg = configs.smoke(configs.get("qwen2-0.5b"))
     api = get_model(cfg)

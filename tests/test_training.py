@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.config import RunConfig, ShapeConfig
@@ -86,6 +86,7 @@ def test_weight_decay_applies_to_matrices_only():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg = configs.smoke(configs.get("qwen2-0.5b"))
     api = get_model(cfg)
@@ -178,6 +179,7 @@ def _loop_fixture(tmp, total):
     return cfg, shape, run, step, init
 
 
+@pytest.mark.slow
 def test_loop_restart_resumes_and_matches_uninterrupted():
     with tempfile.TemporaryDirectory() as d1, \
             tempfile.TemporaryDirectory() as d2:
@@ -200,6 +202,7 @@ def test_loop_restart_resumes_and_matches_uninterrupted():
                                    rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_loop_preemption_checkpoints_and_exits():
     with tempfile.TemporaryDirectory() as d:
         cfg, shape, run, step, init = _loop_fixture(d, total=100)
