@@ -24,6 +24,7 @@ from benchmarks.common import fmt_row, time_jitted
 from repro import configs
 from repro.config import SoftmaxPhiConfig
 from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
 
 
@@ -55,9 +56,9 @@ def run(quick: bool = False) -> list[dict]:
             api_c = get_model(c)
             ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
             fn = _serve_fn(c, api_c, ctx)
-            cache = api_c.init_cache(b, s)
+            layout = DenseLayout(b, s)
             t = time_jitted(
-                lambda p, tk, le: fn(p, tk, api_c.init_cache(b, s), le),
+                lambda p, tk, le: fn(p, tk, api_c.init_cache(layout), le),
                 params, toks, lengths, warmup=1, iters=5)
             return t
 

@@ -26,8 +26,9 @@ import numpy as np
 from benchmarks.common import fmt_row, time_jitted
 from repro import configs
 from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout, PagedLayout, pages_for
 from repro.models.layers import LayerCtx
-from repro.serving.blockpool import BlockPool, PagedSlotManager, pages_for
+from repro.serving.blockpool import BlockPool, PagedSlotManager
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_paged.json")
 
@@ -49,11 +50,11 @@ def run(quick: bool = False) -> dict:
     page_size = 64
     occupancies = [0.25, 1.0] if quick else [0.125, 0.25, 0.5, 1.0]
 
-    dense_fn = jax.jit(
-        lambda p, t, c, l: api.decode_step(ctx, p, t, c, l),
-        donate_argnums=(2,))
-    paged_fn = jax.jit(
-        lambda p, t, c, bt, l: api.decode_step_paged(ctx, p, t, c, bt, l),
+    # one decode_step surface for both layouts: the block-table operand
+    # (None for dense) selects the addressing discipline
+    step_fn = jax.jit(
+        lambda p, t, c, bt, l: api.decode_step(
+            ctx, p, t, c, l, block_tables=bt),
         donate_argnums=(2,))
 
     widths = [6, 10, 12, 12, 14, 14]
@@ -61,14 +62,15 @@ def run(quick: bool = False) -> dict:
                   "paged_KV_MiB", widths=widths))
     rows = []
     toks = jnp.arange(num_slots, dtype=jnp.int32) + 1
-    dense_bytes = _kv_bytes(api.cache_spec(num_slots, max_seq))
+    dense_layout = DenseLayout(num_slots, max_seq)
+    dense_bytes = _kv_bytes(api.cache_spec(dense_layout))
     for occ in occupancies:
         seq = max(int(max_seq * occ) - 1, 1)
         lengths = jnp.full((num_slots,), seq, jnp.int32)
 
         t_dense = time_jitted(
-            lambda p, tk, le: dense_fn(
-                p, tk, api.init_cache(num_slots, max_seq), le),
+            lambda p, tk, le: step_fn(
+                p, tk, api.init_cache(dense_layout), None, le),
             params, toks, lengths, warmup=1, iters=5)
 
         # pool sized to what this occupancy actually needs (+1 growth page
@@ -77,15 +79,15 @@ def run(quick: bool = False) -> dict:
                          page_size)
         mgr = PagedSlotManager(num_slots, max_seq, pool)
         for i in range(num_slots):
-            assert mgr.try_assign(i, seq, 1) is not None
+            idx = mgr.try_assign(i, seq, 1)
+            assert idx is not None and mgr.ensure(idx, seq + 1)
         bt = jnp.asarray(mgr.block_tables())
-        paged_bytes = _kv_bytes(
-            api.paged_cache_spec(pool.num_pages, page_size))
+        paged_layout = PagedLayout(pool.num_pages, page_size)
+        paged_bytes = _kv_bytes(api.cache_spec(paged_layout))
 
         t_paged = time_jitted(
-            lambda p, tk, le: paged_fn(
-                p, tk, api.init_paged_cache(pool.num_pages, page_size),
-                bt, le),
+            lambda p, tk, le: step_fn(
+                p, tk, api.init_cache(paged_layout), bt, le),
             params, toks, lengths, warmup=1, iters=5)
 
         print(fmt_row(occ, seq, f"{t_dense*1e6:.0f}", f"{t_paged*1e6:.0f}",

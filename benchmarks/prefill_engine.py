@@ -11,6 +11,7 @@ from benchmarks.common import fmt_row, time_jitted
 from repro import configs
 from repro.config import SoftmaxPhiConfig
 from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
 
 
@@ -33,7 +34,7 @@ def run(quick: bool = False) -> list[dict]:
             ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
             toks = jnp.ones((b, plen), jnp.int32)
             lengths = jnp.full((b,), plen, jnp.int32)
-            cache = api.init_cache(b, plen)
+            cache = api.init_cache(DenseLayout(b, plen))
 
             fn = jax.jit(lambda p, t, l, c_: api.prefill(ctx, p, t, l, c_))
             return time_jitted(fn, params, toks, lengths, cache,

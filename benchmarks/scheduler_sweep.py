@@ -1,0 +1,114 @@
+"""Scheduler-policy × pool-overcommit sweep over the streaming engine.
+
+The redesign's claim is that admission/preemption policy is a first-class
+performance lever once KV pages are lazy: an overcommitted pool trades
+preemption rework for resident batch size, and the right victim/admission
+order decides whether that trade wins. This sweep runs the same synthetic
+ragged workload through every built-in policy at several overcommit
+ratios and reports, per cell:
+
+  * decode throughput (tok/s, CPU wall — directional),
+  * preemption count + peak page utilization, and
+  * p50/p99 time-to-first-token (queueing + prefill latency, the number
+    admission order actually moves).
+
+Writes ``BENCH_sched.json`` at the repo root so later PRs can track the
+trajectory (schema: {"rows": [...], "config": {...}}).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro import configs
+from repro.models.api import get_model
+from repro.models.kvlayout import pages_for
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
+
+POLICIES = ("fcfs", "sjf", "pagefair")
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== scheduler_sweep: policy x overcommit ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    num_slots = 2
+    max_seq = 128
+    page_size = 16
+    chunk = 16
+    n_requests = 6 if quick else 10
+    max_new = 8 if quick else 12
+    # quick keeps one (interesting) overcommit cell per policy so the CI
+    # smoke test stays inside the fast lane's budget
+    overcommits = (0.5,) if quick else (1.0, 0.5, 0.25)
+
+    rng = np.random.default_rng(0)
+    prompt_lens = rng.integers(5, 60, size=n_requests)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).astype(np.int32)
+               for n in prompt_lens]
+
+    widths = [10, 6, 9, 9, 11, 10, 10]
+    print(fmt_row("policy", "over", "tok/s", "preempt", "peak_pages",
+                  "ttft_p50", "ttft_p99", widths=widths))
+    rows = []
+    worst = num_slots * pages_for(max_seq, page_size)
+    for policy in POLICIES:
+        for over in overcommits:
+            num_pages = max(int(worst * over), 3)
+            eng = Engine(cfg, params, num_slots=num_slots, max_seq=max_seq,
+                         cache_kind="paged", page_size=page_size,
+                         num_pages=num_pages, prefill_chunk=chunk,
+                         scheduler=policy, seed=0)
+            reqs = [(p, SamplingParams(max_new_tokens=max_new))
+                    for p in prompts]
+            t0 = time.perf_counter()
+            out = eng.run(reqs)
+            dt = time.perf_counter() - t0
+            tokens = sum(len(v) for v in out.values())
+            ttfts = [eng.requests[r].first_token_time
+                     - eng.requests[r].submit_time for r in out
+                     if eng.requests[r].first_token_time is not None]
+            row = dict(
+                policy=policy, overcommit=over, num_pages=num_pages,
+                tok_s=tokens / dt, preemptions=eng.stats.preemptions,
+                peak_pages_used=eng.stats.peak_pages_used,
+                page_utilization=eng.stats.peak_pages_used / num_pages,
+                ttft_p50_ms=_percentile(ttfts, 50) * 1e3,
+                ttft_p99_ms=_percentile(ttfts, 99) * 1e3,
+                ticks=eng.ticks, tokens=tokens,
+            )
+            rows.append(row)
+            print(fmt_row(policy, over, f"{row['tok_s']:.1f}",
+                          row["preemptions"],
+                          f"{row['peak_pages_used']}/{num_pages}",
+                          f"{row['ttft_p50_ms']:.0f}ms",
+                          f"{row['ttft_p99_ms']:.0f}ms", widths=widths))
+
+    result = {
+        "config": dict(arch=cfg.name, num_slots=num_slots, max_seq=max_seq,
+                       page_size=page_size, prefill_chunk=chunk,
+                       n_requests=n_requests, max_new=max_new),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  [scheduler_sweep -> {os.path.normpath(OUT_PATH)}]")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,8 @@ import numpy as np
 from repro import configs
 from repro.core.dispatch import tune_table
 from repro.models.api import get_model
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
 
 
 def main():
@@ -25,13 +26,11 @@ def main():
 
     rng = np.random.default_rng(0)
     requests = [
-        Request(id=i,
-                prompt=rng.integers(1, cfg.vocab_size,
-                                    size=int(rng.integers(8, 120))
-                                    ).astype(np.int32),
-                max_new_tokens=16,
-                temperature=0.8 if i % 2 else 0.0,
-                top_k=20)
+        (rng.integers(1, cfg.vocab_size,
+                      size=int(rng.integers(8, 120))).astype(np.int32),
+         SamplingParams(max_new_tokens=16,
+                        temperature=0.8 if i % 2 else 0.0,
+                        top_k=20, top_p=0.95, seed=i))
         for i in range(12)
     ]
     t0 = time.perf_counter()
@@ -42,7 +41,7 @@ def main():
           f"({tok/dt:.1f} tok/s, {eng.ticks} decode ticks, "
           f"{eng.num_slots} slots)")
     for rid in sorted(out)[:5]:
-        print(f"  req {rid:>2}: {out[rid]}")
+        print(f"  req {rid:>2}: {out[rid]} [{eng.finish_reason(rid)}]")
 
 
 if __name__ == "__main__":

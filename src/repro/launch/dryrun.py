@@ -149,7 +149,8 @@ def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules,
     api = model_api.get_model(cfg)
     ctx = _ctx(cfg, mesh, rules, run)
     specs = model_api.serve_prefill_input_specs(cfg, shape)
-    cache_struct = api.cache_spec(shape.global_batch, shape.seq_len)
+    cache_struct = api.cache_spec(
+        model_api.DenseLayout(shape.global_batch, shape.seq_len))
 
     def prefill_step(params, tokens, lengths, extra):
         logits, cache = api.prefill(

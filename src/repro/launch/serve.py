@@ -3,8 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --requests 16 --slots 4 --max-new 12
 
-Reports per-phase latency (prefill / per-token decode) — the two numbers
-the paper's figures compare across engines.
+Pool pressure and preemption are drivable from the CLI: ``--cache-kind
+paged --overcommit 0.5`` provisions half the worst-case page pool (or set
+``--num-pages`` exactly), and ``--scheduler`` picks the admission/victim
+policy. The summary line reports per-phase throughput plus preemption and
+page-utilization counters — the scheduler-policy numbers the paper's
+heuristic-dataflow argument cares about.
 """
 import argparse
 import sys
@@ -24,9 +28,19 @@ def _parse():
                     default="dense",
                     help="dense slot cache or block-paged pool")
     ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="exact pool size in pages (default: worst-case "
+                         "slots*max_seq footprint scaled by --overcommit)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="fraction of the worst-case page footprint to "
+                         "provision; <1 forces lazy-growth preemption")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "sjf", "pagefair"],
+                    help="admission/preemption policy")
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="chunked-prefill chunk size (dense-KV families)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--use-dispatch-table", action="store_true",
                     help="build the T3 lookup table and route matmuls")
     ap.add_argument("--seed", type=int, default=0)
@@ -41,7 +55,9 @@ def main() -> int:
     from repro import configs
     from repro.core.dispatch import tune_table
     from repro.models.api import get_model
-    from repro.serving.engine import Engine, Request
+    from repro.models.kvlayout import pages_for
+    from repro.serving.engine import Engine
+    from repro.serving.request import SamplingParams
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -50,30 +66,40 @@ def main() -> int:
     params = api.init_params(jax.random.PRNGKey(args.seed))
     table = tune_table(cfg) if args.use_dispatch_table else None
 
+    num_pages = args.num_pages
+    if num_pages is None and args.cache_kind == "paged":
+        worst = args.slots * pages_for(args.max_seq, args.page_size)
+        num_pages = max(int(worst * args.overcommit), 1)
+
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                  cache_kind=args.cache_kind, page_size=args.page_size,
-                 prefill_chunk=args.prefill_chunk, table=table,
-                 seed=args.seed)
+                 num_pages=num_pages, prefill_chunk=args.prefill_chunk,
+                 scheduler=args.scheduler, table=table, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    sp = SamplingParams(max_new_tokens=args.max_new,
+                        temperature=args.temperature, top_p=args.top_p)
     reqs = [
-        Request(
-            id=i,
-            prompt=rng.integers(
-                1, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
-            temperature=args.temperature,
-        )
-        for i in range(args.requests)
+        (rng.integers(1, cfg.vocab_size,
+                      size=args.prompt_len).astype(np.int32), sp)
+        for _ in range(args.requests)
     ]
 
     t0 = time.perf_counter()
     out = eng.run(reqs)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s, {eng.ticks} decode ticks)")
+    line = (f"served {len(out)} requests, {total_tokens} tokens in {dt:.2f}s "
+            f"({total_tokens / dt:.1f} tok/s, {eng.ticks} decode ticks, "
+            f"{eng.scheduler.name} scheduler, "
+            f"{eng.stats.preemptions} preemptions")
+    if eng.pool is not None:
+        util = eng.stats.peak_pages_used / eng.pool.num_pages
+        line += (f", peak pages {eng.stats.peak_pages_used}"
+                 f"/{eng.pool.num_pages} = {util:.0%}")
+    print(line + ")")
     for rid in sorted(out)[:4]:
-        print(f"  req {rid}: {out[rid]}")
+        print(f"  req {rid}: {out[rid]} "
+              f"[{eng.finish_reason(rid)}]")
     return 0
 
 

@@ -12,3 +12,8 @@ from repro.models.api import (  # noqa: F401
     serve_prefill_input_specs,
     train_input_specs,
 )
+from repro.models.kvlayout import (  # noqa: F401
+    DenseLayout,
+    KVLayout,
+    PagedLayout,
+)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer
+from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
 
 N_IMAGE_TOKENS = 256  # vision stub: patch embeddings prepended (internvl2)
@@ -26,29 +27,30 @@ def n_image_tokens(seq_len: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ModelApi:
+    """One cache-agnostic surface per family.
+
+    Cache construction and the decode/chunk steps are parameterized by a
+    :class:`~repro.models.kvlayout.KVLayout` rather than forked into
+    ``*_paged`` twins: ``init_cache``/``cache_spec`` take a layout object,
+    and ``decode_step``/``prefill_chunk`` take the layout's optional
+    ``block_tables`` operand (``None`` = dense slot addressing, an array =
+    block-paged addressing). ``supports_paged`` says whether the family's
+    KV tensors admit :class:`PagedLayout` at all — recurrent/ring state
+    caches (ssm, hybrid, encdec) do not.
+    """
+
     cfg: ModelConfig
     init_params: Callable
     train_loss: Callable          # (ctx, params, batch, *, unroll, remat)
     prefill: Callable             # (ctx, params, tokens, lengths, cache, **)
-    decode_step: Callable         # (ctx, params, tokens, cache, lengths, **)
-    init_cache: Callable          # (batch, max_seq)
-    cache_spec: Callable          # (batch, max_seq)
-    # Paged-KV + chunked-prefill surface. Only dense-KV families (the
-    # transformer/moe caches of shape (L, B, S, HK, Dh)) support block
-    # paging; recurrent/ring caches (ssm, hybrid, encdec) leave these None
-    # and the engine falls back to the dense slot cache.
-    decode_step_paged: Optional[Callable] = None
-    #   (ctx, params, tokens, cache, block_tables, lengths, **)
+    decode_step: Callable
+    #   (ctx, params, tokens, cache, lengths, *, block_tables=None, **)
+    init_cache: Callable          # (layout: KVLayout)
+    cache_spec: Callable          # (layout: KVLayout)
+    supports_paged: bool = False
     prefill_chunk: Optional[Callable] = None
-    #   (ctx, params, tokens, chunk_lens, cache, lengths, **)
-    prefill_chunk_paged: Optional[Callable] = None
-    #   (ctx, params, tokens, chunk_lens, cache, block_tables, lengths, **)
-    init_paged_cache: Optional[Callable] = None   # (num_pages, page_size)
-    paged_cache_spec: Optional[Callable] = None   # (num_pages, page_size)
-
-    @property
-    def supports_paged(self) -> bool:
-        return self.decode_step_paged is not None
+    #   (ctx, params, tokens, chunk_lens, cache, lengths,
+    #    *, block_tables=None, **)
 
     @property
     def supports_chunked_prefill(self) -> bool:
@@ -69,26 +71,16 @@ def get_model(cfg: ModelConfig) -> ModelApi:
     else:
         raise ValueError(f"unknown family {cfg.family}")
 
-    has_paged = hasattr(mod, "decode_step_paged")
     return ModelApi(
         cfg=cfg,
         init_params=lambda key: mod.init_params(cfg, key),
         train_loss=mod.train_loss,
         prefill=mod.prefill,
         decode_step=mod.decode_step,
-        init_cache=lambda batch, max_seq: mod.init_cache(cfg, batch, max_seq),
-        cache_spec=lambda batch, max_seq: mod.cache_spec(cfg, batch, max_seq),
-        decode_step_paged=getattr(mod, "decode_step_paged", None),
+        init_cache=lambda layout: mod.init_cache(cfg, layout),
+        cache_spec=lambda layout: mod.cache_spec(cfg, layout),
+        supports_paged=getattr(mod, "PAGED_KV", False),
         prefill_chunk=getattr(mod, "prefill_chunk", None),
-        prefill_chunk_paged=getattr(mod, "prefill_chunk_paged", None),
-        init_paged_cache=(
-            (lambda num_pages, page_size:
-             mod.init_paged_cache(cfg, num_pages, page_size))
-            if has_paged else None),
-        paged_cache_spec=(
-            (lambda num_pages, page_size:
-             mod.paged_cache_spec(cfg, num_pages, page_size))
-            if has_paged else None),
     )
 
 
@@ -124,7 +116,7 @@ def serve_decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     api = get_model(cfg)
     return {
         "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
-        "cache": api.cache_spec(b, s),
+        "cache": api.cache_spec(DenseLayout(b, s)),
         "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
     }
 

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import stack
+from repro.models.kvlayout import require_dense
 from repro.models.layers import LayerCtx, Params
 
 ENC_FRAMES_SERVE = 1500  # 30 s of audio at 50 Hz — whisper standard
@@ -147,8 +148,10 @@ def train_loss(ctx: LayerCtx, params: Params, batch: dict, *,
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+def init_cache(cfg: ModelConfig, layout, dtype=None,
                enc_len: int = ENC_FRAMES_SERVE):
+    layout = require_dense(layout, cfg.family)
+    batch, max_seq = layout.num_slots, layout.max_seq
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
     lt = cfg.num_layers
     return {
@@ -163,12 +166,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
     }
 
 
-def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+def cache_spec(cfg: ModelConfig, layout, dtype=None,
                enc_len: int = ENC_FRAMES_SERVE):
     return jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype,
-                                          enc_len)),
+        jax.eval_shape(lambda: init_cache(cfg, layout, dtype, enc_len)),
     )
 
 
@@ -221,7 +223,8 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                unroll: bool = False):
+                block_tables=None, unroll: bool = False):
+    assert block_tables is None, "enc-dec cross/self cache has no paged layout"
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])
     b = x.shape[0]

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, SoftmaxPhiConfig
 from repro.models import layers as L
 from repro.models import stack
+from repro.models.kvlayout import require_dense
 from repro.models.layers import LayerCtx, Params
 from repro.core import softmax as smx
 
@@ -240,7 +241,9 @@ def train_loss(ctx: LayerCtx, params: Params, batch: dict, *,
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+def init_cache(cfg: ModelConfig, layout, dtype=None):
+    layout = require_dense(layout, cfg.family)
+    batch, max_seq = layout.num_slots, layout.max_seq
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
     inner, hm, n = _ssm_dims(cfg)
     w = min(cfg.sliding_window or 1024, max_seq)
@@ -253,10 +256,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     }
 
 
-def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+def cache_spec(cfg: ModelConfig, layout, dtype=None):
     return jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype)),
+        jax.eval_shape(lambda: init_cache(cfg, layout, dtype)),
     )
 
 
@@ -317,7 +320,8 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                unroll: bool = False):
+                block_tables=None, unroll: bool = False):
+    assert block_tables is None, "ring KV + SSM state has no paged layout"
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])  # (B,1,D)
     b = x.shape[0]

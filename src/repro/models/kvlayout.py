@@ -1,0 +1,83 @@
+"""KV-storage layouts: the one cache-surface abstraction shared by the
+model API and the serving engine.
+
+A :class:`KVLayout` describes *how per-layer KV tensors are stored and
+addressed*, so every family exposes exactly one ``init_cache`` /
+``cache_spec`` / ``prefill_chunk`` / ``decode_step`` surface instead of a
+dense/paged fork of ``*_paged`` twins:
+
+  * :class:`DenseLayout` — the classic slot cache: ``(L, num_slots,
+    max_seq, HK, Dh)``; logical position ``p`` of slot ``s`` lives at
+    physical ``(s, p)``. No indirection operand.
+
+  * :class:`PagedLayout` — a block-paged pool: ``(L, num_pages, page_size,
+    HK, Dh)`` shared by all sequences; logical position ``p`` of slot ``s``
+    lives at ``(block_tables[s, p // page_size], p % page_size)``. The
+    layout's *operand* is the per-tick block-table array produced by the
+    slot manager (``None`` for dense) — model steps take it as an optional
+    ``block_tables`` argument and select the gather/scatter discipline on
+    whether it is present.
+
+The layout objects are pure shape/addressing descriptors (hashable,
+host-side); device allocation stays in the family modules, free-list
+bookkeeping stays in :mod:`repro.serving.blockpool`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+
+def pages_for(positions: int, page_size: int) -> int:
+    """Pages needed to store ``positions`` KV entries — the one definition
+    of the page ceil-div, shared by the allocator, the engine's pool
+    sizing, and the benchmarks."""
+    return -(-max(positions, 0) // page_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseLayout:
+    """Slot-dense KV storage: every slot reserves ``max_seq`` positions."""
+
+    num_slots: int
+    max_seq: int
+
+    kind = "dense"
+    is_paged = False
+
+    def kv_shape(self, num_layers: int, kv_heads: int,
+                 head_dim: int) -> Tuple[int, int, int, int, int]:
+        return (num_layers, self.num_slots, self.max_seq, kv_heads, head_dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Block-paged KV storage: a shared pool of fixed-size pages addressed
+    through per-sequence block tables."""
+
+    num_pages: int
+    page_size: int
+
+    kind = "paged"
+    is_paged = True
+
+    def kv_shape(self, num_layers: int, kv_heads: int,
+                 head_dim: int) -> Tuple[int, int, int, int, int]:
+        return (num_layers, self.num_pages, self.page_size, kv_heads,
+                head_dim)
+
+    def pages_for(self, positions: int) -> int:
+        return pages_for(positions, self.page_size)
+
+
+KVLayout = Union[DenseLayout, PagedLayout]
+
+
+def require_dense(layout: KVLayout, family: str) -> DenseLayout:
+    """Families without a dense-KV cache (recurrent / ring / encdec state)
+    can only host the slot layout; give them a uniform error."""
+    if getattr(layout, "is_paged", False):
+        raise ValueError(
+            f"family {family!r} has no paged-KV path (recurrent/ring state "
+            "caches); use a DenseLayout")
+    return layout

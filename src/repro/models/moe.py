@@ -305,12 +305,20 @@ def make_block(groups: int = 0, capacity_factor: float = 1.25):
 
 
 def make_decode_block(groups: int = 0):
-    def decode_block(ctx: LayerCtx, p: Params, x, position, cache_i, lengths):
+    def decode_block(ctx: LayerCtx, p: Params, x, position, cache_i, lengths,
+                     block_tables=None):
         cfg = ctx.cfg
         h = L.norm(cfg, p["attn_norm"], x)
-        a, ck, cv = L.attention_decode_block(
-            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
-        )
+        if block_tables is None:
+            a, ck, cv = L.attention_decode_block(
+                ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+                lengths
+            )
+        else:
+            a, ck, cv = L.attention_decode_block_paged(
+                ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+                block_tables, lengths,
+            )
         x = x + a
         h = L.norm(cfg, p["mlp_norm"], x)
         y, _ = moe_block(ctx, p["moe"], h, groups=groups or ctx.moe_groups,
@@ -318,24 +326,6 @@ def make_decode_block(groups: int = 0):
         return ctx.shard(x + y, "act_resid"), {"k": ck, "v": cv}
 
     return decode_block
-
-
-def make_decode_block_paged(groups: int = 0):
-    def decode_block_paged(ctx: LayerCtx, p: Params, x, position, cache_i,
-                           block_tables, lengths):
-        cfg = ctx.cfg
-        h = L.norm(cfg, p["attn_norm"], x)
-        a, pk, pv = L.attention_decode_block_paged(
-            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
-            block_tables, lengths,
-        )
-        x = x + a
-        h = L.norm(cfg, p["mlp_norm"], x)
-        y, _ = moe_block(ctx, p["moe"], h, groups=groups or ctx.moe_groups,
-                         zero_drop=True)
-        return ctx.shard(x + y, "act_resid"), {"k": pk, "v": pv}
-
-    return decode_block_paged
 
 
 def _moe_chunk_mlp(ctx: LayerCtx, p: Params, h, groups: int):
@@ -351,36 +341,25 @@ def _moe_chunk_mlp(ctx: LayerCtx, p: Params, h, groups: int):
 
 def make_chunk_block(groups: int = 0):
     def chunk_block(ctx: LayerCtx, p: Params, x, cache_i, lengths,
-                    chunk_lens):
+                    chunk_lens, block_tables=None):
         cfg = ctx.cfg
         h = L.norm(cfg, p["attn_norm"], x)
-        a, ck, cv = L.attention_chunk_block(
-            ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths,
-            chunk_lens,
-        )
+        if block_tables is None:
+            a, ck, cv = L.attention_chunk_block(
+                ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths,
+                chunk_lens,
+            )
+        else:
+            a, ck, cv = L.attention_chunk_block_paged(
+                ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
+                lengths, chunk_lens,
+            )
         x = x + a
         h = L.norm(cfg, p["mlp_norm"], x)
         x = ctx.shard(x + _moe_chunk_mlp(ctx, p, h, groups), "act_resid")
         return x, {"k": ck, "v": cv}
 
     return chunk_block
-
-
-def make_chunk_block_paged(groups: int = 0):
-    def chunk_block_paged(ctx: LayerCtx, p: Params, x, cache_i,
-                          block_tables, lengths, chunk_lens):
-        cfg = ctx.cfg
-        h = L.norm(cfg, p["attn_norm"], x)
-        a, pk, pv = L.attention_chunk_block_paged(
-            ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
-            lengths, chunk_lens,
-        )
-        x = x + a
-        h = L.norm(cfg, p["mlp_norm"], x)
-        x = ctx.shard(x + _moe_chunk_mlp(ctx, p, h, groups), "act_resid")
-        return x, {"k": pk, "v": pv}
-
-    return chunk_block_paged
 
 
 # Zero-drop slots cost cap = tg·k *per expert* (worst-case all-to-one
@@ -444,40 +423,23 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                unroll: bool = False, groups: int = 0):
+                block_tables=None, unroll: bool = False, groups: int = 0):
     return tfm.decode_step(
-        ctx, params, tokens, cache, lengths, unroll=unroll,
-        decode_block_fn=make_decode_block(groups=groups),
-    )
-
-
-def decode_step_paged(ctx: LayerCtx, params: Params, tokens, cache,
-                      block_tables, lengths, *, unroll: bool = False,
-                      groups: int = 0):
-    return tfm.decode_step_paged(
-        ctx, params, tokens, cache, block_tables, lengths, unroll=unroll,
-        decode_block_fn=make_decode_block_paged(groups=groups),
+        ctx, params, tokens, cache, lengths, block_tables=block_tables,
+        unroll=unroll, decode_block_fn=make_decode_block(groups=groups),
     )
 
 
 def prefill_chunk(ctx: LayerCtx, params: Params, tokens, chunk_lens, cache,
-                  lengths, *, unroll: bool = False, groups: int = 0):
+                  lengths, *, block_tables=None, unroll: bool = False,
+                  groups: int = 0):
     return tfm.prefill_chunk(
-        ctx, params, tokens, chunk_lens, cache, lengths, unroll=unroll,
+        ctx, params, tokens, chunk_lens, cache, lengths,
+        block_tables=block_tables, unroll=unroll,
         chunk_block_fn=make_chunk_block(groups=groups),
     )
 
 
-def prefill_chunk_paged(ctx: LayerCtx, params: Params, tokens, chunk_lens,
-                        cache, block_tables, lengths, *,
-                        unroll: bool = False, groups: int = 0):
-    return tfm.prefill_chunk_paged(
-        ctx, params, tokens, chunk_lens, cache, block_tables, lengths,
-        unroll=unroll, chunk_block_fn=make_chunk_block_paged(groups=groups),
-    )
-
-
+PAGED_KV = True
 init_cache = tfm.init_cache
 cache_spec = tfm.cache_spec
-init_paged_cache = tfm.init_paged_cache
-paged_cache_spec = tfm.paged_cache_spec

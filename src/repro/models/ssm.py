@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import stack
+from repro.models.kvlayout import require_dense
 from repro.models.layers import LayerCtx, Params
 
 CHUNK = 64
@@ -284,9 +285,9 @@ def train_loss(ctx: LayerCtx, params: Params, batch: dict, *,
     )
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
-    h, n = _heads(cfg)
-    del max_seq  # O(1) state — the long_500k story
+def init_cache(cfg: ModelConfig, layout, dtype=None):
+    batch = require_dense(layout, cfg.family).num_slots
+    h, n = _heads(cfg)  # O(1) state regardless of max_seq — long_500k story
     return {
         "state": jnp.zeros((cfg.num_layers, batch, h, n, n), jnp.float32),
         "tm_x": jnp.zeros((cfg.num_layers, batch, cfg.d_model),
@@ -296,10 +297,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     }
 
 
-def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+def cache_spec(cfg: ModelConfig, layout, dtype=None):
     return jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq)),
+        jax.eval_shape(lambda: init_cache(cfg, layout)),
     )
 
 
@@ -342,7 +343,8 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                unroll: bool = False):
+                block_tables=None, unroll: bool = False):
+    assert block_tables is None, "ssm state cache has no paged layout"
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])[:, 0]  # (B, D)
 

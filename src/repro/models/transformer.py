@@ -16,7 +16,12 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models import stack
+from repro.models.kvlayout import KVLayout
 from repro.models.layers import LayerCtx, Params
+
+# dense-KV family: the (L, B, S, HK, Dh) cache admits the block-paged
+# storage discipline (PagedLayout + block tables)
+PAGED_KV = True
 
 
 # ---------------------------------------------------------------------------
@@ -64,62 +69,53 @@ def block(ctx: LayerCtx, p: Params, x: jax.Array,
 
 
 def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
-                 cache_i: dict, lengths: jax.Array):
+                 cache_i: dict, lengths: jax.Array,
+                 block_tables: Optional[jax.Array] = None):
+    """One-token decode block over either KV layout.
+
+    ``block_tables is None`` means the per-layer cache slice is a dense
+    (B, S, HK, Dh) slot cache; with tables it is the shared (NP, PS, HK,
+    Dh) page pool, addressed through the (B, NB) logical→physical map.
+    The discriminator is resolved at trace time — each engine layout
+    compiles exactly one path.
+    """
     cfg = ctx.cfg
     h = L.norm(cfg, p["attn_norm"], x)
-    a, ck, cv = L.attention_decode_block(
-        ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
-    )
+    if block_tables is None:
+        a, ck, cv = L.attention_decode_block(
+            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
+        )
+    else:
+        a, ck, cv = L.attention_decode_block_paged(
+            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+            block_tables, lengths,
+        )
     x = x + a
     h = L.norm(cfg, p["mlp_norm"], x)
     x = x + L.mlp_block(ctx, p["mlp"], h)
     return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
-
-
-def decode_block_paged(ctx: LayerCtx, p: Params, x: jax.Array,
-                       position: jax.Array, cache_i: dict,
-                       block_tables: jax.Array, lengths: jax.Array):
-    """Paged twin of :func:`decode_block`: the per-layer cache slice is the
-    shared (NP, PS, HK, Dh) page pool, addressed through block tables."""
-    cfg = ctx.cfg
-    h = L.norm(cfg, p["attn_norm"], x)
-    a, pk, pv = L.attention_decode_block_paged(
-        ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
-        block_tables, lengths,
-    )
-    x = x + a
-    h = L.norm(cfg, p["mlp_norm"], x)
-    x = x + L.mlp_block(ctx, p["mlp"], h)
-    return ctx.shard(x, "act_resid"), {"k": pk, "v": pv}
 
 
 def chunk_block(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
-                lengths: jax.Array, chunk_lens: jax.Array):
-    """Chunked-prefill block over a dense slot cache (decode-shaped path)."""
+                lengths: jax.Array, chunk_lens: jax.Array,
+                block_tables: Optional[jax.Array] = None):
+    """Chunked-prefill block (decode-shaped path) over either KV layout."""
     cfg = ctx.cfg
     h = L.norm(cfg, p["attn_norm"], x)
-    a, ck, cv = L.attention_chunk_block(
-        ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths, chunk_lens
-    )
+    if block_tables is None:
+        a, ck, cv = L.attention_chunk_block(
+            ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths,
+            chunk_lens
+        )
+    else:
+        a, ck, cv = L.attention_chunk_block_paged(
+            ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
+            lengths, chunk_lens,
+        )
     x = x + a
     h = L.norm(cfg, p["mlp_norm"], x)
     x = x + L.mlp_block(ctx, p["mlp"], h)
     return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
-
-
-def chunk_block_paged(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
-                      block_tables: jax.Array, lengths: jax.Array,
-                      chunk_lens: jax.Array):
-    cfg = ctx.cfg
-    h = L.norm(cfg, p["attn_norm"], x)
-    a, pk, pv = L.attention_chunk_block_paged(
-        ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
-        lengths, chunk_lens,
-    )
-    x = x + a
-    h = L.norm(cfg, p["mlp_norm"], x)
-    x = x + L.mlp_block(ctx, p["mlp"], h)
-    return ctx.shard(x, "act_resid"), {"k": pk, "v": pv}
 
 
 def prefill_block(ctx: LayerCtx, p: Params, x: jax.Array,
@@ -196,35 +192,19 @@ def train_loss(
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
-    dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-
-
-def cache_spec(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
-    dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
-            "v": jax.ShapeDtypeStruct(shape, dtype)}
-
-
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype=None):
-    """Block-paged KV storage: a flat pool of fixed-size pages shared by
-    every sequence (per-sequence addressing lives in the engine's block
+def init_cache(cfg: ModelConfig, layout: KVLayout, dtype=None):
+    """KV storage for any :class:`~repro.models.kvlayout.KVLayout` — the
+    dense (L, B, S, HK, Dh) slot cache or the block-paged (L, NP, PS, HK,
+    Dh) pool (per-sequence addressing then lives in the engine's block
     tables — see :mod:`repro.serving.blockpool`)."""
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
-             cfg.head_dim)
+    shape = layout.kv_shape(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype=None):
+def cache_spec(cfg: ModelConfig, layout: KVLayout, dtype=None):
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
-             cfg.head_dim)
+    shape = layout.kv_shape(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jax.ShapeDtypeStruct(shape, dtype),
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
@@ -260,35 +240,15 @@ def prefill(
 
 def decode_step(
     ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
-    lengths: jax.Array, *, unroll: bool = False,
-    decode_block_fn: Callable = decode_block,
+    lengths: jax.Array, *, block_tables: Optional[jax.Array] = None,
+    unroll: bool = False, decode_block_fn: Callable = decode_block,
 ):
-    """One decode step. tokens: (B,) -> logits (B, V_padded), new cache."""
-    cfg = ctx.cfg
-    x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
-    position = lengths
+    """One decode step. tokens: (B,) -> logits (B, V_padded), new cache.
 
-    x, new_cache = stack.run_stack_cached(
-        params["layers"], x, cache,
-        lambda p_i, xx, c_i: decode_block_fn(ctx, p_i, xx, position, c_i,
-                                             lengths),
-        unroll=unroll,
-    )
-    x = L.norm(cfg, params["final_norm"], x)
-    logits = L.lm_logits(ctx, params, x)[:, 0]
-    return logits, new_cache
-
-
-def decode_step_paged(
-    ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
-    block_tables: jax.Array, lengths: jax.Array, *, unroll: bool = False,
-    decode_block_fn: Callable = decode_block_paged,
-):
-    """One decode step over the block-paged cache.
-
-    ``cache`` leaves are (L, NP, PS, HK, Dh) page pools; ``block_tables`` is
-    the (B, NB) logical→physical page map, shared by all layers (the scan
-    carries the pool, the table rides in closure).
+    One signature for both KV layouts: with ``block_tables=None`` the cache
+    leaves are dense (L, B, S, HK, Dh) slot caches; with a (B, NB)
+    logical→physical page map they are (L, NP, PS, HK, Dh) page pools (the
+    scan carries the pool, the table rides in closure).
     """
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
@@ -297,7 +257,7 @@ def decode_step_paged(
     x, new_cache = stack.run_stack_cached(
         params["layers"], x, cache,
         lambda p_i, xx, c_i: decode_block_fn(ctx, p_i, xx, position, c_i,
-                                             block_tables, lengths),
+                                             lengths, block_tables),
         unroll=unroll,
     )
     x = L.norm(cfg, params["final_norm"], x)
@@ -308,7 +268,8 @@ def decode_step_paged(
 def prefill_chunk(
     ctx: LayerCtx, params: Params, tokens: jax.Array,
     chunk_lens: jax.Array, cache: dict, lengths: jax.Array,
-    *, unroll: bool = False, chunk_block_fn: Callable = chunk_block,
+    *, block_tables: Optional[jax.Array] = None, unroll: bool = False,
+    chunk_block_fn: Callable = chunk_block,
 ):
     """Process one prompt chunk for a whole (possibly ragged) batch.
 
@@ -319,6 +280,7 @@ def prefill_chunk(
     cache — long prompts stream through this in fixed-size chunks, and a
     whole admission batch prefills in one call (chunked + batched prefill).
     Starting from ``lengths == 0`` this subsumes single-shot prefill.
+    Like :func:`decode_step`, ``block_tables`` selects the KV layout.
     """
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens)           # (B, C, D)
@@ -326,31 +288,7 @@ def prefill_chunk(
     x, new_cache = stack.run_stack_cached(
         params["layers"], x, cache,
         lambda p_i, xx, c_i: chunk_block_fn(ctx, p_i, xx, c_i, lengths,
-                                            chunk_lens),
-        unroll=unroll,
-    )
-    x = L.norm(cfg, params["final_norm"], x)
-    last = jnp.take_along_axis(
-        x, (chunk_lens - 1)[:, None, None].clip(0), axis=1
-    )
-    logits = L.lm_logits(ctx, params, last)[:, 0]
-    return logits, new_cache
-
-
-def prefill_chunk_paged(
-    ctx: LayerCtx, params: Params, tokens: jax.Array,
-    chunk_lens: jax.Array, cache: dict, block_tables: jax.Array,
-    lengths: jax.Array, *, unroll: bool = False,
-    chunk_block_fn: Callable = chunk_block_paged,
-):
-    """Paged twin of :func:`prefill_chunk` (cache = page pools + tables)."""
-    cfg = ctx.cfg
-    x = L.embed(ctx, params, tokens)
-
-    x, new_cache = stack.run_stack_cached(
-        params["layers"], x, cache,
-        lambda p_i, xx, c_i: chunk_block_fn(ctx, p_i, xx, c_i, block_tables,
-                                            lengths, chunk_lens),
+                                            chunk_lens, block_tables),
         unroll=unroll,
     )
     x = L.norm(cfg, params["final_norm"], x)

@@ -1,13 +1,34 @@
-"""Serving substrate: KV-cache management (dense slots or a block-paged
-pool), continuous-batching engine with chunked + batched prefill, sampling.
-The engine is the end-to-end realization of the paper's system: admitted
-prompts stream through the decode-shaped chunk path (or a batched
-single-shot prefill for recurrent families), decode steps run the
-T1/T2/T3-optimized ``decode_step`` over the whole active batch every tick,
-and ``cache_kind="paged"`` swaps the dense slot cache for fixed-size pages
-addressed through per-sequence block tables.
+"""Serving substrate: one cache-agnostic engine over pluggable pieces.
+
+KV storage is a :class:`~repro.models.kvlayout.KVLayout` (dense slots or a
+block-paged pool with lazy growth), admission/preemption policy is a
+:class:`~repro.serving.scheduler.Scheduler` (FCFS / SJF / page-budget
+fair), and each request is a :class:`~repro.serving.request.RequestState`
+with its own :class:`~repro.serving.request.SamplingParams` and PRNG key.
+The :class:`~repro.serving.engine.Engine` ties them together behind a
+streaming surface — ``generate()`` yields ``TokenEvent``s, ``abort()``
+cancels, blocking ``run()`` rides on top.
 """
+from repro.models.kvlayout import (  # noqa: F401
+    DenseLayout,
+    KVLayout,
+    PagedLayout,
+)
 from repro.serving.blockpool import BlockPool, PagedSlotManager  # noqa: F401
-from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.engine import Engine, EngineStats  # noqa: F401
 from repro.serving.kvcache import SlotManager  # noqa: F401
+from repro.serving.request import (  # noqa: F401
+    FinishReason,
+    Phase,
+    RequestState,
+    SamplingParams,
+    TokenEvent,
+)
 from repro.serving.sampling import sample  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    FCFS,
+    PageBudgetFair,
+    Scheduler,
+    ShortestJobFirst,
+    get_scheduler,
+)

@@ -8,7 +8,8 @@ bounded by slots, not by actual KV bytes. This module replaces that with a
 sequences, each sequence owns an ordered list of page ids (its *block
 table*), and pages cycle through an explicit LIFO free-list on release.
 
-Device layout (see :func:`repro.models.transformer.init_paged_cache`):
+Device layout (see :func:`repro.models.transformer.init_cache` with a
+:class:`~repro.models.kvlayout.PagedLayout`):
 
     k/v pool: (num_layers, num_pages, page_size, kv_heads, head_dim)
 
@@ -27,9 +28,14 @@ Two classes:
   * :class:`BlockPool` — the free-list allocator (no device state).
   * :class:`PagedSlotManager` — drop-in replacement for
     :class:`repro.serving.kvcache.SlotManager` that additionally owns the
-    per-slot block tables. Pages for ``prompt_len + max_new`` positions are
-    reserved at admission, so a running sequence can never fail allocation
-    mid-decode (preemption/lazy growth are ROADMAP follow-ons).
+    per-slot block tables. Allocation is **lazy**: admission reserves
+    pages for the tokens that will be prefilled (plus one decode growth
+    page of headroom), and each decode tick grows a sequence's table
+    page-by-page through :meth:`ensure` — so a
+    pool can be overcommitted below worst-case footprint and the engine's
+    scheduler preempts a victim (pages freed, request re-queued) when
+    :meth:`ensure` reports the pool dry. The block tables make preemption
+    relocation-free: a re-admitted sequence just gets fresh pages.
 """
 from __future__ import annotations
 
@@ -38,14 +44,9 @@ from typing import Optional
 
 import numpy as np
 
+from repro.models.kvlayout import pages_for  # noqa: F401  (re-export: the
+# one page ceil-div definition, shared with layouts/engine/benchmarks)
 from repro.serving.kvcache import Slot, SlotManager
-
-
-def pages_for(positions: int, page_size: int) -> int:
-    """Pages needed to store ``positions`` KV entries — the one definition
-    of the page ceil-div, shared by the allocator, the engine's default
-    pool sizing, and the benchmarks."""
-    return -(-max(positions, 0) // page_size)
 
 
 class BlockPool:
@@ -108,10 +109,11 @@ class PagedSlotManager(SlotManager):
     """Slot occupancy + block tables over a shared :class:`BlockPool`.
 
     Inherits the ``SlotManager`` tick-loop interface (``lengths`` /
-    ``tick`` / ``done`` and the admission scan) so the engine can switch
-    cache kinds without touching its loop; admission additionally requires
-    the pool to cover the request's full ``prompt_len + max_new`` footprint
-    and release returns the pages to the free list.
+    ``tick`` and the admission scan) so the engine can switch cache kinds
+    without touching its loop. Admission requires pages for the tokens
+    about to be prefilled plus one growth page; decode-time growth goes
+    through :meth:`ensure` (lazy allocation), and release returns every
+    page to the free list.
     """
 
     def __init__(self, num_slots: int, max_seq: int, pool: BlockPool):
@@ -124,17 +126,41 @@ class PagedSlotManager(SlotManager):
 
     def _make_slot(self, request_id: int, prompt_len: int,
                    max_new: int) -> Optional[PagedSlot]:
-        need = self.pool.pages_for(prompt_len + max_new)
-        if need > self.pool.num_pages:
+        worst = self.pool.pages_for(prompt_len + max_new)
+        if worst > self.pool.num_pages:
             # can never be satisfied, not even by an empty pool — raise like
-            # the max_seq check (returning None would livelock admission)
+            # the max_seq check (returning None would livelock admission,
+            # and lazily admitting would guarantee an unservable mid-decode
+            # growth failure with no preemptable victim once it runs alone)
             raise ValueError(
-                f"request {request_id} needs {need} pages > pool size "
+                f"request {request_id} needs {worst} pages > pool size "
                 f"{self.pool.num_pages} (page_size {self.pool.page_size})")
+        # lazy: reserve what prefill will write plus ONE decode growth page
+        # (capped at the request's true total footprint) — without the
+        # headroom a request admitted into a dry pool would pay the whole
+        # chunked prefill and be preempted on its very first decode write,
+        # thrashing one token per re-prefill. Further growth goes through
+        # ensure(), preempting on pool exhaustion.
+        need = min(self.pool.pages_for(prompt_len) + 1,
+                   self.pool.pages_for(prompt_len + max_new))
         pages = self.pool.alloc(need)
         if pages is None:
             return None
         return PagedSlot(request_id, prompt_len, 0, max_new, pages=pages)
+
+    def ensure(self, idx: int, positions: int) -> bool:
+        """Grow slot ``idx``'s block table to cover ``positions`` KV
+        entries. False = the pool is dry (caller preempts and retries);
+        the slot's existing pages are untouched either way."""
+        s = self.slots[idx]
+        need = self.pool.pages_for(positions) - len(s.pages)
+        if need <= 0:
+            return True
+        got = self.pool.alloc(need)
+        if got is None:
+            return False
+        s.pages.extend(got)
+        return True
 
     def release(self, idx: int) -> None:
         s = self.slots[idx]

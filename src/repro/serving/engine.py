@@ -1,67 +1,89 @@
-"""Continuous-batching inference engine (chunked/batched prefill + decode).
+"""Streaming continuous-batching engine: pluggable scheduling, lazy paged
+KV growth, preemption, and one cache-agnostic model surface.
 
-The serving realization of the paper's dataflow (Fig. 2), upgraded past the
-static-allocation regime the paper argues against:
+The serving realization of the paper's heuristic-dataflow argument
+(Sec. 5): throughput comes from *adapting* to input dynamics, so the
+engine's request lifecycle, memory discipline, and admission policy are
+all first-class and swappable:
 
-  * **KV storage** is either the classic dense ``(slots, max_seq)`` cache
-    (``cache_kind="dense"``) or a **block-paged pool** shared by all
-    sequences (``cache_kind="paged"``, see :mod:`repro.serving.blockpool`):
-    fixed-size pages, per-sequence block tables, explicit free-list. Paging
-    decouples admission from worst-case sequence length — the pool can be
-    sized to *expected* occupancy instead of ``slots x max_seq``.
+  * **One model surface, two KV layouts.** The engine holds a single
+    :class:`~repro.models.kvlayout.KVLayout` (``DenseLayout`` slot cache
+    or ``PagedLayout`` block pool) and exactly one jitted
+    ``prefill_chunk``/``decode_step`` pair; the layout's optional
+    block-table operand (``slots.block_tables()``, ``None`` for dense)
+    selects the addressing discipline inside the model. There is no
+    dense/paged code fork anywhere in the tick loop.
 
-  * **Prefill** is chunked + batched for dense-KV families: every admitted
-    prompt streams through the decode-shaped chunk path
-    (``api.prefill_chunk``) in fixed-size chunks, and the whole admission
-    batch rides in one ``(num_slots, chunk)`` call — a single compiled
-    shape, instead of one ``jax.jit`` per (request, prompt-bucket).
-    Families without a dense KV cache (ssm / hybrid ring / encdec) use a
-    batched single-shot prefill (one padded call per admission wave).
+  * **Request lifecycle.** Each submission is a
+    :class:`~repro.serving.request.RequestState` walking WAITING →
+    PREFILLING → RUNNING → FINISHED``{stop,length,abort}``, with
+    PREEMPTED as the detour back to the queue. Sampling knobs ride in an
+    immutable :class:`~repro.serving.request.SamplingParams` (temperature
+    / top-k / top-p / per-request seed / stop tokens with explicit
+    ``include_stop``), and every request owns a private PRNG key — no
+    request's sampling order can perturb another's.
 
-  * **Decode** runs over the whole slot batch every tick; new requests
-    claim slots (and pages) as soon as finished sequences release them, so
-    decode batches stay full (continuous batching) and the decode-phase
-    GEMMs stay at M = num_slots, the regime T2/T3 optimize.
+  * **Lazy pages + preemption.** Paged admission reserves pages only for
+    the tokens about to be prefilled; each decode tick grows tables
+    page-by-page. When the (possibly overcommitted) pool runs dry, the
+    :class:`~repro.serving.scheduler.Scheduler` picks a victim: its pages
+    are freed and its state re-queued, and on re-admission the engine
+    re-prefills ``prompt + generated`` — block tables make the eviction
+    relocation-free, and the rebuilt KV is exactly what an uninterrupted
+    run would hold, so greedy outputs are preemption-invariant.
 
-Dense and paged engines are an apples-to-apples switch: with
-``page_size`` dividing ``max_seq`` the paged gather view is bitwise
-identical to the dense cache, so greedy outputs are token-identical.
+  * **Streaming surface.** ``generate(prompt, params)`` yields
+    :class:`~repro.serving.request.TokenEvent` as ticks produce them,
+    ``abort(rid)`` cancels at any phase, and the classic blocking
+    ``run(requests) -> dict`` is a thin loop over ``submit``/``step``.
+
+Prefill remains chunked + batched for dense-KV families (every admitted
+prompt streams through ``api.prefill_chunk`` in fixed-size chunks, the
+whole admission wave in one ``(num_slots, chunk)`` call) and batched
+single-shot for recurrent/ring families; decode runs the whole slot batch
+every tick (continuous batching), keeping the decode-phase GEMMs at
+M = num_slots — the regime the paper's T2/T3 optimize.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Iterator, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, RunConfig
+from repro.config import ModelConfig
 from repro.core.dispatch import DispatchTable
 from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
+    pages_for
 from repro.models.layers import LayerCtx
-from repro.serving.blockpool import BlockPool, PagedSlotManager, pages_for
+from repro.serving.blockpool import BlockPool, PagedSlotManager
 from repro.serving.kvcache import SlotManager
+from repro.serving.request import (FinishReason, Phase, RequestState,
+                                   SamplingParams, TokenEvent)
 from repro.serving.sampling import sample
+from repro.serving.scheduler import Scheduler, get_scheduler
 
 PROMPT_BUCKET = 64
 DEFAULT_PREFILL_CHUNK = 64
 DEFAULT_PAGE_SIZE = 64
 
-
-@dataclasses.dataclass
-class Request:
-    id: int
-    prompt: np.ndarray               # (P,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    top_k: int = 0
-    eos_token: Optional[int] = None
+PromptLike = Union[np.ndarray, Sequence[int]]
 
 
 @dataclasses.dataclass
-class _Done:
-    tokens: list
+class EngineStats:
+    """Counters for the CLI summary line and the scheduler benchmarks.
+    (Tick count lives on ``Engine.ticks`` — the loop's one clock.)"""
+
+    admitted: int = 0
+    finished: int = 0
+    aborted: int = 0
+    preemptions: int = 0
+    peak_pages_used: int = 0
 
 
 class Engine:
@@ -76,6 +98,7 @@ class Engine:
         page_size: int = DEFAULT_PAGE_SIZE,
         num_pages: Optional[int] = None,
         prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
+        scheduler: Union[str, Scheduler] = "fcfs",
         table: Optional[DispatchTable] = None,
         use_pallas: bool = False,
         seed: int = 0,
@@ -86,15 +109,17 @@ class Engine:
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq
-        self.cache_kind = cache_kind
+        self.scheduler = get_scheduler(scheduler)
         # chunked prefill needs the chunk-append model path (dense-KV
         # families); others fall back to batched single-shot prefill
         self.prefill_chunk = (
             prefill_chunk if self.api.supports_chunked_prefill else 0)
 
+        self.layout: KVLayout
         if cache_kind == "dense":
+            self.layout = DenseLayout(num_slots, max_seq)
             self.slots: SlotManager = SlotManager(num_slots, max_seq)
-            self.cache = self.api.init_cache(num_slots, max_seq)
+            self.pool = None
         elif cache_kind == "paged":
             if not self.api.supports_paged:
                 raise ValueError(
@@ -105,143 +130,275 @@ class Engine:
                     "cache_kind='paged' requires chunked prefill "
                     "(prefill_chunk > 0)")
             # default pool = same KV bytes as the dense cache; size it
-            # smaller to overcommit (admission then queues on free pages)
+            # smaller to overcommit (lazy growth then preempts on dry pool)
             pool = BlockPool(
                 num_pages if num_pages is not None
                 else num_slots * pages_for(max_seq, page_size),
                 page_size,
             )
+            self.layout = PagedLayout(pool.num_pages, page_size)
             self.slots = PagedSlotManager(num_slots, max_seq, pool)
             self.pool = pool
-            self.cache = self.api.init_paged_cache(pool.num_pages, page_size)
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
+        self.cache_kind = cache_kind
+        self.cache = self.api.init_cache(self.layout)
 
-        self.key = jax.random.PRNGKey(seed)
-        self.queue: list[Request] = []
-        self.by_slot: dict[int, Request] = {}
-        self.results: dict[int, _Done] = {}
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self.requests: dict[int, RequestState] = {}
+        self.waiting: list[RequestState] = []
+        self.by_slot: dict[int, RequestState] = {}
+        self.stats = EngineStats()
         self.ticks = 0
+        self._next_rid = 0
+        self._arrival = 0
 
-        if cache_kind == "paged":
-            self._decode = jax.jit(
-                lambda p, t, c, bt, l: self.api.decode_step_paged(
-                    self.ctx, p, t, c, bt, l),
-                donate_argnums=(2,),
-            )
-            self._chunk = jax.jit(
-                lambda p, t, cl, c, bt, l: self.api.prefill_chunk_paged(
-                    self.ctx, p, t, cl, c, bt, l),
-                donate_argnums=(3,),
-            )
-        else:
-            self._decode = jax.jit(
-                lambda p, t, c, l: self.api.decode_step(self.ctx, p, t, c, l),
-                donate_argnums=(2,),
-            )
-            self._chunk = jax.jit(
-                lambda p, t, cl, c, l: self.api.prefill_chunk(
-                    self.ctx, p, t, cl, c, l),
-                donate_argnums=(3,),
-            ) if self.prefill_chunk else None
+        # the single jitted pair: the layout's block-table operand (None
+        # for dense) is just another argument, so dense and paged engines
+        # trace the same lambdas
+        self._decode = jax.jit(
+            lambda p, t, c, bt, le: self.api.decode_step(
+                self.ctx, p, t, c, le, block_tables=bt),
+            donate_argnums=(2,),
+        )
+        self._chunk = jax.jit(
+            lambda p, t, cl, c, bt, le: self.api.prefill_chunk(
+                self.ctx, p, t, cl, c, le, block_tables=bt),
+            donate_argnums=(3,),
+        ) if self.prefill_chunk else None
         self._prefill_cache = {}  # bucketed P -> jitted batched prefill
 
     # -- public API -----------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, prompt: PromptLike,
+               params: Optional[SamplingParams] = None,
+               *, rid: Optional[int] = None) -> int:
+        """Queue a request; returns its id (auto-assigned if not given).
 
-    def run(self, requests: list[Request], *, max_ticks: int = 10_000
-            ) -> dict[int, list[int]]:
-        for r in requests:
-            self.submit(r)
-        while (self.queue or self.by_slot) and self.ticks < max_ticks:
+        Unservable requests are rejected here, not mid-admission: a raise
+        inside the admission wave would leave already-slotted batch-mates
+        half admitted (slots claimed, no prefill).
+        """
+        params = params if params is not None else SamplingParams()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        worst = len(prompt) + params.max_new_tokens
+        if worst > self.max_seq:
+            raise ValueError(
+                f"request needs {worst} positions > max_seq {self.max_seq}")
+        if self.pool is not None and (
+                pages_for(worst, self.pool.page_size) > self.pool.num_pages):
+            raise ValueError(
+                f"request needs {pages_for(worst, self.pool.page_size)} "
+                f"pages > pool size {self.pool.num_pages} "
+                f"(page_size {self.pool.page_size})")
+        if rid is None:
+            while self._next_rid in self.requests:
+                self._next_rid += 1
+            rid = self._next_rid
+            self._next_rid += 1
+        elif rid in self.requests:
+            raise ValueError(f"request id {rid} already submitted")
+        key = (jax.random.PRNGKey(params.seed) if params.seed is not None
+               else jax.random.fold_in(self._base_key, rid))
+        state = RequestState(
+            rid=rid, prompt=prompt,
+            params=params, arrival=self._arrival, key=key,
+            submit_time=time.perf_counter())
+        self._arrival += 1
+        self.requests[rid] = state
+        self.waiting.append(state)
+        return rid
+
+    def generate(self, prompt: PromptLike,
+                 params: Optional[SamplingParams] = None,
+                 *, rid: Optional[int] = None) -> Iterator[TokenEvent]:
+        """Stream one request: submit it and yield its ``TokenEvent``s as
+        engine ticks produce them (driving the shared tick loop, so
+        concurrent submissions keep decoding alongside). The final event
+        has ``finished=True`` and a ``finish_reason``; aborting mid-stream
+        ends the iterator with an ``abort`` event."""
+        rid = self.submit(prompt, params, rid=rid)
+        state = self.requests[rid]
+        cursor = 0
+        while True:
+            while cursor < len(state.events):
+                ev = state.events[cursor]
+                cursor += 1
+                yield ev
+                if ev.finished:
+                    return
+            if state.finished:
+                return   # finished without a terminal event (defensive)
             self.step()
-        return {rid: d.tokens for rid, d in self.results.items()}
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a request in any phase; frees its slot/pages at once.
+        Returns False if unknown or already finished."""
+        state = self.requests.get(rid)
+        if state is None or state.finished:
+            return False
+        if state.slot is not None:
+            self.by_slot.pop(state.slot, None)
+            self.slots.release(state.slot)
+        if state in self.waiting:
+            self.waiting.remove(state)
+        state.finish(FinishReason.ABORT)
+        state.events.append(TokenEvent(
+            rid, None, state.generated, finished=True,
+            finish_reason=FinishReason.ABORT))
+        self.stats.aborted += 1
+        return True
+
+    def finish_reason(self, rid: int) -> Optional[FinishReason]:
+        return self.requests[rid].finish_reason
+
+    def evict(self, rid: int) -> list[int]:
+        """Drop a *finished* request's retained state (tokens, events,
+        prompt) and return its tokens. A long-lived server must call this
+        (or ``evict_finished``) after consuming results — the engine keeps
+        every RequestState for post-run inspection and would otherwise
+        grow without bound."""
+        state = self.requests[rid]
+        if not state.finished:
+            raise ValueError(f"request {rid} is not finished; abort() it "
+                             "first to evict early")
+        del self.requests[rid]
+        return state.tokens
+
+    def evict_finished(self) -> int:
+        """Evict every finished request; returns how many were dropped."""
+        done = [r for r, s in self.requests.items() if s.finished]
+        for r in done:
+            del self.requests[r]
+        return len(done)
+
+    def run(self, requests, *, max_ticks: int = 10_000
+            ) -> dict[int, list[int]]:
+        """Blocking batch API on top of the streaming engine.
+
+        ``requests`` is a list of prompts or ``(prompt, SamplingParams)``
+        pairs; returns ``{rid: generated tokens}`` keyed by submission
+        order."""
+        rids = []
+        for item in requests:
+            if isinstance(item, tuple):
+                prompt, sp = item
+            else:
+                prompt, sp = item, None
+            rids.append(self.submit(prompt, sp))
+        start = self.ticks
+        while (any(not self.requests[r].finished for r in rids)
+               and self.ticks - start < max_ticks):
+            self.step()
+        return {r: list(self.requests[r].tokens) for r in rids}
 
     # -- engine tick ------------------------------------------------------------
 
-    def step(self) -> list[tuple[int, int]]:
-        """Admit + prefill waiting requests, then one decode tick."""
-        self._admit()
+    def step(self) -> list[TokenEvent]:
+        """Admit + prefill per the scheduler's order, then one decode tick
+        (growing/preempting paged sequences first). Returns this tick's
+        token events."""
+        events = self._admit()
         if not self.by_slot:
-            return []
-        emitted = self._decode_tick()
+            if self.waiting and not events:
+                # no admission progress and nothing resident to free
+                # resources for the queue — a true stall, not
+                # back-pressure; surface it instead of spinning. (Events
+                # with an empty batch = the whole admitted wave finished
+                # during prefill; the freed slots admit the queue next
+                # step.)
+                raise RuntimeError(
+                    "admission stalled: empty batch but "
+                    f"{len(self.waiting)} requests cannot be admitted")
+            return events
+        events += self._decode_tick()
         self.ticks += 1
-        return emitted
+        return events
 
-    # -- internals ---------------------------------------------------------------
+    # -- admission ---------------------------------------------------------------
 
-    def _admit(self) -> None:
-        """Claim slots (and pages) for waiting requests; prefill the whole
-        admission wave in one batch."""
-        admitted: list[tuple[int, Request]] = []
-        still_waiting = []
-        for req in self.queue:
-            idx = self.slots.try_assign(req.id, len(req.prompt),
-                                        req.max_new_tokens)
+    def _admit(self) -> list[TokenEvent]:
+        """Offer slots (and prefill pages) to waiting requests in the
+        scheduler's order; prefill the admitted wave in one batch."""
+        if not self.waiting:
+            return []
+        admitted: list[tuple[int, RequestState]] = []
+        for state in self.scheduler.admission_order(self.waiting):
+            n_prefill = len(state.prefill_tokens())
+            idx = self.slots.try_assign(
+                state.rid, n_prefill,
+                max(state.params.max_new_tokens - state.generated, 1))
             if idx is None:
-                still_waiting.append(req)
+                if not self.scheduler.allow_skip:
+                    break      # head-of-line blocking (FCFS no-starvation)
                 continue
-            self.by_slot[idx] = req
-            self.results[req.id] = _Done(tokens=[])
-            admitted.append((idx, req))
-        self.queue = still_waiting
+            state.phase = Phase.PREFILLING
+            state.slot = idx
+            self.by_slot[idx] = state
+            admitted.append((idx, state))
+            self.stats.admitted += 1
         if not admitted:
-            return
+            return []
+        self.waiting = [s for s in self.waiting if s.slot is None]
+        self._note_page_pressure()
         if self.prefill_chunk:
-            self._prefill_chunked(admitted)
-        else:
-            self._prefill_batched(admitted)
+            return self._prefill_chunked(admitted)
+        return self._prefill_batched(admitted)
 
     # -- chunked + batched prefill (dense-KV families) -------------------------
 
-    def _prefill_chunked(self, items: list[tuple[int, Request]]) -> None:
+    def _prefill_chunked(
+            self, items: list[tuple[int, RequestState]]) -> list[TokenEvent]:
         """Stream all admitted prompts through the chunk-append path.
 
         Each step processes one ``(num_slots, chunk)`` call: admitted rows
         consume their next chunk, every other slot is a spectator
         (``chunk_lens == 0`` — nothing written). One compiled shape total.
+        Re-admitted (preempted) requests prefill ``prompt + generated``,
+        rebuilding exactly the KV an uninterrupted run would hold.
         """
         c = self.prefill_chunk
+        seqs = {idx: state.prefill_tokens() for idx, state in items}
         progress = {idx: 0 for idx, _ in items}
-        plens = {idx: max(len(req.prompt), 1) for idx, req in items}
+        plens = {idx: max(len(seqs[idx]), 1) for idx, _ in items}
         final_logits: dict[int, jax.Array] = {}
         n_steps = -(-max(plens.values()) // c)
-        for step in range(n_steps):
+        for _ in range(n_steps):
             tokens = np.zeros((self.num_slots, c), np.int32)
             chunk_lens = np.zeros((self.num_slots,), np.int32)
             lengths = self.slots.lengths()
-            for idx, req in items:
+            for idx, _state in items:
                 done = progress[idx]
                 cl = min(plens[idx] - done, c)
                 if cl <= 0:
                     continue
-                avail = min(max(len(req.prompt) - done, 0), cl)
+                avail = min(max(len(seqs[idx]) - done, 0), cl)
                 if avail:
-                    tokens[idx, :avail] = req.prompt[done:done + avail]
+                    tokens[idx, :avail] = seqs[idx][done:done + avail]
                 chunk_lens[idx] = cl          # p=0 feeds one pad token
                 lengths[idx] = done           # prefill progress, not final P
-            args = [self.params, jnp.asarray(tokens), jnp.asarray(chunk_lens),
-                    self.cache]
-            if self.cache_kind == "paged":
-                args.append(jnp.asarray(self.slots.block_tables()))
-            args.append(jnp.asarray(lengths))
-            logits, self.cache = self._chunk(*args)
-            for idx, req in items:
+            logits, self.cache = self._chunk(
+                self.params, jnp.asarray(tokens), jnp.asarray(chunk_lens),
+                self.cache, self.slots.block_tables(), jnp.asarray(lengths))
+            for idx, _state in items:
                 if chunk_lens[idx]:
                     progress[idx] += int(chunk_lens[idx])
                     if progress[idx] == plens[idx]:
                         final_logits[idx] = logits[idx:idx + 1]
-        for idx, req in items:
-            tok = int(self._sample(final_logits[idx], req)[0])
-            self._emit(idx, req, tok, wrote_kv=False)
+        events = []
+        for idx, state in items:
+            tok = int(self._sample(final_logits[idx], state)[0])
+            state.phase = Phase.RUNNING
+            events.append(self._emit(idx, state, tok, wrote_kv=False))
+        return events
 
     # -- batched single-shot prefill (recurrent/ring families) ------------------
 
     def _prefill_fn(self, padded: int):
         if padded not in self._prefill_cache:
-            spec = self.api.cache_spec(self.num_slots, self.max_seq)
+            spec = self.api.cache_spec(
+                DenseLayout(self.num_slots, self.max_seq))
 
             def fn(params, tokens, lengths):
                 cache = jax.tree.map(
@@ -252,19 +409,22 @@ class Engine:
             self._prefill_cache[padded] = jax.jit(fn)
         return self._prefill_cache[padded]
 
-    def _prefill_batched(self, items: list[tuple[int, Request]]) -> None:
+    def _prefill_batched(
+            self, items: list[tuple[int, RequestState]]) -> list[TokenEvent]:
         """One padded prefill call for the whole admission wave; each row's
         cache entry is inserted at its slot index afterwards."""
-        pmax = max(len(req.prompt) for _, req in items)
+        seqs = {idx: state.prefill_tokens() for idx, state in items}
+        pmax = max(len(s) for s in seqs.values())
         padded = -(-max(pmax, 1) // PROMPT_BUCKET) * PROMPT_BUCKET
         toks = np.zeros((self.num_slots, padded), np.int32)
         lens = np.zeros((self.num_slots,), np.int32)
-        for row, (idx, req) in enumerate(items):
-            toks[row, :len(req.prompt)] = req.prompt
-            lens[row] = len(req.prompt)
+        for row, (idx, _state) in enumerate(items):
+            toks[row, :len(seqs[idx])] = seqs[idx]
+            lens[row] = len(seqs[idx])
         logits, cache_new = self._prefill_fn(padded)(
             self.params, jnp.asarray(toks), jnp.asarray(lens))
-        for row, (idx, req) in enumerate(items):
+        events = []
+        for row, (idx, state) in enumerate(items):
             row_cache = jax.tree.map(
                 lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1),
                 cache_new)
@@ -273,45 +433,121 @@ class Engine:
                     big, small.astype(big.dtype), idx, axis=1),
                 self.cache, row_cache,
             )
-            tok = int(self._sample(logits[row:row + 1], req)[0])
-            self._emit(idx, req, tok, wrote_kv=False)
+            tok = int(self._sample(logits[row:row + 1], state)[0])
+            state.phase = Phase.RUNNING
+            events.append(self._emit(idx, state, tok, wrote_kv=False))
+        return events
 
     # -- decode ----------------------------------------------------------------
 
-    def _decode_tick(self) -> list[tuple[int, int]]:
+    def _grow_or_preempt(self) -> None:
+        """Lazy page growth for every resident sequence: each decode tick
+        writes one KV position, so slot ``i`` must cover ``length + 1``.
+        When the pool is dry the scheduler names a victim — possibly the
+        growing sequence itself, so e.g. FCFS really does evict the newest
+        arrival rather than whichever old resident happens to share the
+        tick. The victim's pages are freed and its state goes back to the
+        queue (relocation-free — re-admission re-prefills through fresh
+        block tables)."""
+        for idx, state in list(self.by_slot.items()):
+            if self.by_slot.get(idx) is not state:
+                continue                      # became a victim this tick
+            while not self.slots.ensure(idx, self.slots.slots[idx].length + 1):
+                victim = self.scheduler.pick_victim(list(self.by_slot.values()))
+                if victim is None or (victim is state
+                                      and len(self.by_slot) == 1):
+                    # admission's whole-footprint bound makes a lone
+                    # sequence always satisfiable — defensive only
+                    raise RuntimeError(
+                        "page pool exhausted with no preemptable victim")
+                self._preempt(victim)
+                if victim is state:
+                    break                     # evicted itself; skip growth
+        self._note_page_pressure()
+
+    def _decode_tick(self) -> list[TokenEvent]:
+        self._grow_or_preempt()
+        if not self.by_slot:
+            return []
         lengths = jnp.asarray(self.slots.lengths())
         tokens = np.zeros((self.num_slots,), np.int32)
-        for idx, req in self.by_slot.items():
-            tokens[idx] = self.results[req.id].tokens[-1]
-        if self.cache_kind == "paged":
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(self.slots.block_tables()), lengths)
-        else:
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, lengths)
-        emitted = []
+        for idx, state in self.by_slot.items():
+            tokens[idx] = state.tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache,
+            self.slots.block_tables(), lengths)
+        events = []
         for idx in list(self.by_slot):
-            req = self.by_slot[idx]
-            tok = int(self._sample(logits[idx:idx + 1], req)[0])
-            emitted.append((req.id, tok))
-            self._emit(idx, req, tok)
-        return emitted
+            state = self.by_slot[idx]
+            tok = int(self._sample(logits[idx:idx + 1], state)[0])
+            events.append(self._emit(idx, state, tok))
+        return events
 
     # -- bookkeeping -----------------------------------------------------------
 
-    def _sample(self, logits: jax.Array, req: Request) -> jax.Array:
-        self.key, sub = jax.random.split(self.key)
+    def _preempt(self, state: RequestState) -> None:
+        idx = state.slot
+        self.by_slot.pop(idx, None)
+        self.slots.release(idx)
+        state.phase = Phase.PREEMPTED
+        state.slot = None
+        state.preemptions += 1
+        self.stats.preemptions += 1
+        self.waiting.append(state)
+
+    def _sample(self, logits: jax.Array, state: RequestState) -> jax.Array:
+        p = state.params
         return sample(
-            logits, sub, temperature=req.temperature, top_k=req.top_k,
-            vocab_size=self.cfg.vocab_size,
+            logits, state.next_key(), temperature=p.temperature,
+            top_k=p.top_k, top_p=p.top_p, vocab_size=self.cfg.vocab_size,
         )
 
-    def _emit(self, idx: int, req: Request, tok: int,
-              *, wrote_kv: bool = True) -> None:
-        self.results[req.id].tokens.append(tok)
+    def _emit(self, idx: int, state: RequestState, tok: int,
+              *, wrote_kv: bool = True) -> TokenEvent:
+        """Account one sampled token: stop/budget checks, event record,
+        slot release on finish. The stop token itself joins the output
+        only when ``SamplingParams.include_stop`` asks for it, and never
+        burns ``max_new_tokens`` budget."""
+        p = state.params
+        if state.first_token_time is None:
+            state.first_token_time = time.perf_counter()
+            state.first_token_tick = self.ticks
+        if tok in p.stop_tokens:
+            if p.include_stop:
+                state.tokens.append(tok)
+                self.slots.tick(idx, wrote_kv=wrote_kv)
+            return self._retire(idx, state, FinishReason.STOP)
+        state.tokens.append(tok)
         self.slots.tick(idx, wrote_kv=wrote_kv)
-        eos = req.eos_token is not None and tok == req.eos_token
-        if self.slots.done(idx, eos):
-            self.slots.release(idx)
-            del self.by_slot[idx]
+        if (state.generated >= p.max_new_tokens
+                or self.slots.slots[idx].length >= self.max_seq):
+            return self._retire(idx, state, FinishReason.LENGTH)
+        ev = TokenEvent(state.rid, tok, state.generated - 1)
+        state.events.append(ev)
+        return ev
+
+    def _retire(self, idx: int, state: RequestState,
+                reason: FinishReason) -> TokenEvent:
+        """Release the slot and record the terminal event. The event
+        mirrors ``state.tokens`` exactly: it carries the last *kept*
+        token (so a stop token excluded by ``include_stop=False`` never
+        reaches the stream either), or ``token=None`` at the next index
+        when the request ends without keeping one."""
+        self.slots.release(idx)
+        self.by_slot.pop(idx, None)
+        state.finish(reason)
+        self.stats.finished += 1
+        if reason is FinishReason.STOP and not state.params.include_stop:
+            ev = TokenEvent(state.rid, None, state.generated,
+                            finished=True, finish_reason=reason)
+        else:
+            ev = TokenEvent(state.rid, state.tokens[-1] if state.tokens
+                            else None, max(state.generated - 1, 0),
+                            finished=True, finish_reason=reason)
+        state.events.append(ev)
+        return ev
+
+    def _note_page_pressure(self) -> None:
+        if self.pool is not None:
+            self.stats.peak_pages_used = max(
+                self.stats.peak_pages_used, self.pool.used_pages)

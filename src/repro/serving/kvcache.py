@@ -66,6 +66,18 @@ class SlotManager:
     def release(self, idx: int) -> None:
         self.slots[idx] = self._empty_slot()
 
+    def ensure(self, idx: int, positions: int) -> bool:
+        """Grow backing storage for slot ``idx`` to ``positions`` KV
+        entries. Dense slots pre-reserve ``max_seq`` — always True; the
+        paged manager overrides this with lazy page allocation."""
+        return positions <= self.max_seq
+
+    def block_tables(self):
+        """The layout's optional addressing operand for the jitted steps:
+        None for dense slot storage; the paged manager returns the
+        (num_slots, max_pages_per_seq) int32 logical→physical map."""
+        return None
+
     def lengths(self) -> np.ndarray:
         return np.array([s.length for s in self.slots], np.int32)
 
@@ -80,9 +92,3 @@ class SlotManager:
         if wrote_kv:
             s.length += 1
         s.generated += 1
-
-    def done(self, idx: int, eos: bool) -> bool:
-        s = self.slots[idx]
-        return (not s.free) and (
-            eos or s.generated >= s.max_new or s.length >= self.max_seq
-        )

@@ -1,9 +1,30 @@
-"""Token sampling: greedy / temperature / top-k (pure JAX, vocab-padded
-logits are masked by the caller or here via ``vocab_size``)."""
+"""Token sampling: greedy / temperature / top-k / top-p (pure JAX;
+vocab-padded logits are masked by the caller or here via ``vocab_size``).
+
+The engine drives this with a *per-request* PRNG key
+(:class:`repro.serving.request.SamplingParams` carries an optional seed),
+so one request's sampling order can never perturb another's — a
+precondition for preemption being output-invariant under sampling.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def _top_p_mask(logits: jax.Array, top_p: float) -> jax.Array:
+    """Nucleus filter: keep the smallest prefix of tokens (by descending
+    probability) whose cumulative probability reaches ``top_p``. The
+    highest-probability token always survives (the exclusive cumsum of the
+    top token is 0 < top_p)."""
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs      # exclusive cumsum
+    keep = cum_before < top_p                            # (B, V) sorted order
+    # logit threshold = smallest kept logit; everything below is cut
+    kth = jnp.min(jnp.where(keep, sorted_logits, jnp.inf),
+                  axis=-1, keepdims=True)
+    return jnp.where(logits < kth, -jnp.inf, logits)
 
 
 def sample(
@@ -12,6 +33,7 @@ def sample(
     *,
     temperature: float = 0.0,
     top_k: int = 0,
+    top_p: float = 1.0,
     vocab_size: int = 0,
 ) -> jax.Array:
     """Returns (B,) int32 next tokens."""
@@ -25,4 +47,6 @@ def sample(
     if top_k > 0:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        logits = _top_p_mask(logits, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

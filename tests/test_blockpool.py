@@ -1,7 +1,8 @@
 """Block-paged KV cache: pool/free-list invariants (property-based via the
-hypothesis shim), block-table consistency, and paged-vs-dense engine
-equivalence — greedy outputs must be token-identical, including runs where
-slot release + re-admission recycles pages."""
+hypothesis shim), lazy growth, block-table consistency, and paged-vs-dense
+engine equivalence through the unified KVLayout path — greedy outputs must
+be token-identical, including runs where overcommit forces preemption and
+re-admission recycles pages."""
 import jax
 import numpy as np
 import pytest
@@ -10,11 +11,44 @@ from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout, PagedLayout, pages_for
 from repro.serving.blockpool import BlockPool, PagedSlotManager
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
 
 settings.register_profile("fast", max_examples=20, deadline=None)
 settings.load_profile("fast")
+
+
+# ---------------------------------------------------------------------------
+# KVLayout: the one shape/addressing descriptor both cache kinds share
+# ---------------------------------------------------------------------------
+
+
+def test_kvlayout_shapes_and_operands():
+    dense = DenseLayout(num_slots=4, max_seq=256)
+    paged = PagedLayout(num_pages=16, page_size=64)
+    assert dense.kv_shape(2, 8, 64) == (2, 4, 256, 8, 64)
+    assert paged.kv_shape(2, 8, 64) == (2, 16, 64, 8, 64)
+    assert not dense.is_paged and paged.is_paged
+    assert paged.pages_for(0) == 0
+    assert paged.pages_for(64) == 1
+    assert paged.pages_for(65) == 2
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    for layout in (dense, PagedLayout(8, 32)):
+        spec = api.cache_spec(layout)
+        cache = api.init_cache(layout)
+        assert jax.tree.map(lambda s: s.shape, spec) == \
+            jax.tree.map(lambda a: a.shape, cache)
+
+
+def test_recurrent_family_rejects_paged_layout():
+    cfg = configs.smoke(configs.get("rwkv6-1.6b"))
+    api = get_model(cfg)
+    assert not api.supports_paged
+    with pytest.raises(ValueError):
+        api.init_cache(PagedLayout(8, 32))
 
 
 # ---------------------------------------------------------------------------
@@ -55,10 +89,50 @@ def test_blockpool_pages_for():
 
 
 # ---------------------------------------------------------------------------
-# PagedSlotManager: random admit/tick/release lifecycles keep every
-# cross-structure invariant (no double allocation, free-list conservation,
-# block-table <-> pool consistency)
+# PagedSlotManager: lazy admission + ensure()-growth; random lifecycles
+# keep every cross-structure invariant (no double allocation, free-list
+# conservation, block-table <-> pool consistency)
 # ---------------------------------------------------------------------------
+
+
+def test_lazy_admission_reserves_prefill_footprint_plus_headroom():
+    pool = BlockPool(num_pages=8, page_size=8)
+    mgr = PagedSlotManager(2, max_seq=64, pool=pool)
+    idx = mgr.try_assign(0, prompt_len=20, max_new=30)
+    assert idx is not None
+    # prefill footprint (3 pages) + one decode growth page — NOT the
+    # worst-case ceil(50/8) = 7
+    assert pool.used_pages == pages_for(20, 8) + 1   # 4
+    # growth is page-at-a-time through ensure()
+    assert mgr.ensure(idx, 32)                        # inside headroom
+    assert pool.used_pages == 4
+    assert mgr.ensure(idx, 33)                        # crosses into page 5
+    assert pool.used_pages == 5
+    mgr.check()
+
+
+def test_lazy_admission_headroom_capped_at_total_footprint():
+    pool = BlockPool(num_pages=8, page_size=8)
+    mgr = PagedSlotManager(2, max_seq=64, pool=pool)
+    # prompt+max_new fits the prefill pages exactly: no headroom page
+    idx = mgr.try_assign(0, prompt_len=14, max_new=2)   # 16 pos = 2 pages
+    assert idx is not None
+    assert pool.used_pages == 2
+    mgr.check()
+
+
+def test_ensure_reports_dry_pool_without_corrupting_state():
+    pool = BlockPool(num_pages=4, page_size=8)
+    mgr = PagedSlotManager(2, max_seq=32, pool=pool)
+    a = mgr.try_assign(0, prompt_len=16, max_new=8)   # 2 + headroom = 3
+    b = mgr.try_assign(1, prompt_len=4, max_new=1)    # 1 page (capped)
+    assert a is not None and b is not None
+    assert pool.free_pages == 0
+    assert not mgr.ensure(a, 25)                      # pool dry
+    mgr.check()                                       # nothing leaked
+    mgr.release(b)                                    # preemption mechanics
+    assert mgr.ensure(a, 25)                          # freed page picked up
+    mgr.check()
 
 
 @given(st.integers(0, 10_000))
@@ -74,14 +148,21 @@ def test_paged_manager_random_lifecycle(seed):
     rid = 0
     for _ in range(40):
         op = rng.random()
-        if op < 0.5:
+        if op < 0.4:
             prompt = int(rng.integers(1, max(max_seq // 2, 2)))
             max_new = int(rng.integers(1, max_seq - prompt + 1))
+            if pages_for(prompt + max_new, page_size) > num_pages:
+                continue                      # would raise by contract
             idx = mgr.try_assign(rid, prompt, max_new)
             if idx is not None:
                 assert idx not in live, "slot double-assigned"
                 live.append(idx)
                 rid += 1
+        elif op < 0.6 and live:
+            idx = live[rng.integers(len(live))]
+            # lazy growth to a random target; failure must be side-effect
+            # free (the preempt-and-retry contract)
+            mgr.ensure(idx, int(rng.integers(1, max_seq + 1)))
         elif op < 0.8 and live:
             idx = live[rng.integers(len(live))]
             mgr.tick(idx, wrote_kv=bool(rng.random() < 0.9))
@@ -98,8 +179,8 @@ def test_paged_manager_random_lifecycle(seed):
 def test_block_tables_sentinel_and_ownership():
     pool = BlockPool(num_pages=16, page_size=8)
     mgr = PagedSlotManager(3, max_seq=64, pool=pool)
-    a = mgr.try_assign(0, prompt_len=20, max_new=4)   # 3 pages
-    b = mgr.try_assign(1, prompt_len=5, max_new=3)    # 1 page
+    a = mgr.try_assign(0, prompt_len=20, max_new=4)   # 3 pages (capped)
+    b = mgr.try_assign(1, prompt_len=5, max_new=3)    # 1 page (capped)
     assert a is not None and b is not None
     bt = mgr.block_tables()
     assert bt.shape == (3, 8)                          # 64 / 8 logical blocks
@@ -114,16 +195,11 @@ def test_block_tables_sentinel_and_ownership():
     assert pool.free_pages == 16 - 1
 
 
-def test_paged_manager_rejects_oversized_request():
-    mgr = PagedSlotManager(1, max_seq=32, pool=BlockPool(8, 8))
-    with pytest.raises(ValueError):
-        mgr.try_assign(0, prompt_len=30, max_new=8)
-
-
 def test_paged_manager_rejects_request_larger_than_pool():
-    """A request whose page footprint exceeds the whole (overcommitted)
-    pool must raise, not return None — None would make the engine's
-    admission loop retry forever (livelock, ticks never advance)."""
+    """A request whose worst-case page footprint exceeds the whole
+    (overcommitted) pool must raise at admission, not lazily admit — once
+    it ran alone there would be no preemptable victim for its guaranteed
+    mid-decode growth failure (livelock)."""
     mgr = PagedSlotManager(1, max_seq=512, pool=BlockPool(2, 64))
     with pytest.raises(ValueError):
         mgr.try_assign(0, prompt_len=200, max_new=100)  # needs 5 > 2 pages
@@ -132,24 +208,26 @@ def test_paged_manager_rejects_request_larger_than_pool():
 def test_paged_manager_admission_blocks_on_pool_not_slots():
     # plenty of slots, tiny pool: admission must wait on pages
     pool = BlockPool(num_pages=2, page_size=8)
-    mgr = PagedSlotManager(4, max_seq=32, pool=pool)
-    assert mgr.try_assign(0, prompt_len=8, max_new=8) is not None  # 2 pages
-    assert mgr.try_assign(1, prompt_len=1, max_new=1) is None      # no pages
+    mgr = PagedSlotManager(4, max_seq=16, pool=pool)
+    assert mgr.try_assign(0, prompt_len=15, max_new=1) is not None  # 2 pages
+    assert mgr.try_assign(1, prompt_len=1, max_new=1) is None       # no pages
     mgr.release(0)
     assert mgr.try_assign(1, prompt_len=1, max_new=1) is not None
 
 
 # ---------------------------------------------------------------------------
-# Engine equivalence: paged greedy decode is token-identical to dense
+# Engine equivalence through the unified KVLayout path: paged greedy decode
+# is token-identical to dense — with page recycling AND forced preemption
 # ---------------------------------------------------------------------------
 
 
-def _engines(arch, **kw):
+def _engines(arch, *, page_size=32, num_pages=None, scheduler="fcfs", **kw):
     cfg = configs.smoke(configs.get(arch))
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
     dense = Engine(cfg, params, cache_kind="dense", **kw)
-    paged = Engine(cfg, params, cache_kind="paged", page_size=32, **kw)
+    paged = Engine(cfg, params, cache_kind="paged", page_size=page_size,
+                   num_pages=num_pages, scheduler=scheduler, **kw)
     return cfg, dense, paged
 
 
@@ -157,9 +235,9 @@ def _engines(arch, **kw):
     "arch", ["qwen2-0.5b",
              pytest.param("dbrx-132b", marks=pytest.mark.slow)])
 def test_paged_engine_token_identical_to_dense(arch):
-    """Greedy outputs match bitwise across cache kinds, through a workload
-    where 5 requests share 2 slots — finished sequences release their pages
-    and re-admitted requests recycle them mid-run."""
+    """Greedy outputs match across cache kinds, through a workload where
+    5 requests share 2 slots — finished sequences release their pages and
+    re-admitted requests recycle them mid-run."""
     cfg, dense, paged = _engines(arch, num_slots=2, max_seq=256,
                                  prefill_chunk=32)
     rng = np.random.default_rng(3)
@@ -167,8 +245,7 @@ def test_paged_engine_token_identical_to_dense(arch):
                for n in (9, 23, 70, 5)]
 
     def reqs():
-        return [Request(id=i, prompt=p, max_new_tokens=4)
-                for i, p in enumerate(prompts)]
+        return [(p, SamplingParams(max_new_tokens=4)) for p in prompts]
 
     out_dense = dense.run(reqs())
     out_paged = paged.run(reqs())
@@ -178,26 +255,54 @@ def test_paged_engine_token_identical_to_dense(arch):
     assert paged.pool.free_pages == paged.pool.num_pages
 
 
+@pytest.mark.parametrize("scheduler", ["fcfs", "sjf", "pagefair"])
+def test_overcommitted_paged_engine_preempts_and_matches_dense(scheduler):
+    """The acceptance bar: an overcommitted pool (too small for the
+    resident batch's total footprint) forces mid-decode preemption —
+    pages freed, state re-queued, re-prefilled — and the greedy output
+    still matches an un-preempted dense run exactly, under every
+    scheduler policy."""
+    cfg, dense, paged = _engines(
+        "qwen2-0.5b", num_slots=2, max_seq=64, prefill_chunk=16,
+        page_size=16, num_pages=4, scheduler=scheduler)
+    rng = np.random.default_rng(3)
+    # admission footprints (prefill + headroom) are 2 pages each = the
+    # whole pool under any admission order; both sequences then need a
+    # third page past position 32 mid-decode, so every policy must
+    # preempt at least once
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (9, 10)]
+    reqs = [(p, SamplingParams(max_new_tokens=26)) for p in prompts]
+    out_dense = dense.run(list(reqs))
+    out_paged = paged.run(list(reqs))
+    assert paged.stats.preemptions > 0, "pool was never under pressure"
+    assert out_dense == out_paged
+    assert any(paged.requests[r].preemptions > 0 for r in out_paged)
+    assert paged.pool.used_pages == 0          # lazy growth leaked nothing
+    assert paged.stats.peak_pages_used <= paged.pool.num_pages
+
+
 def test_paged_engine_page_recycling_visible():
     """With a pool sized for ~one request, back-to-back requests must reuse
     the same physical pages (recycle through the free list) and still match
     the dense engine."""
     cfg, dense, paged = _engines(
-        "qwen2-0.5b", num_slots=1, max_seq=64, prefill_chunk=16)
+        "qwen2-0.5b", num_slots=1, max_seq=64, prefill_chunk=16,
+        page_size=16)
     rng = np.random.default_rng(5)
     prompts = [rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
                for _ in range(2)]
     pages_used = []
     outs = {}
     for i, p in enumerate(prompts):
-        paged.submit(Request(id=i, prompt=p, max_new_tokens=3))
+        rid = paged.submit(p, SamplingParams(max_new_tokens=3))
         paged.step()                       # admit + prefill + first tick
         pages_used.append(tuple(paged.slots.slots[0].pages))
-        while paged.queue or paged.by_slot:
+        while not paged.requests[rid].finished:
             paged.step()
-        outs[i] = paged.results[i].tokens
-    out_dense = dense.run([Request(id=i, prompt=p, max_new_tokens=3)
-                           for i, p in enumerate(prompts)])
+        outs[rid] = paged.requests[rid].tokens
+    out_dense = dense.run([(p, SamplingParams(max_new_tokens=3))
+                           for p in prompts])
     assert outs == out_dense
     assert set(pages_used[1]) & set(pages_used[0]), \
         "request 1 did not recycle request 0's freed pages"

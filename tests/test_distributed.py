@@ -292,12 +292,13 @@ def test_seq_sharded_decode_matches_single():
         from repro.distributed.sharding import make_rules, make_shard_fn, named
         from repro.launch.mesh import make_mesh_from_config
         from repro.models.api import get_model
+        from repro.models.kvlayout import DenseLayout
         from repro.models.layers import LayerCtx
 
         cfg = configs.smoke(configs.get("qwen2-0.5b"))
         api = get_model(cfg)
         params = api.init_params(jax.random.PRNGKey(0))
-        cache = api.init_cache(4, 128)
+        cache = api.init_cache(DenseLayout(4, 128))
         toks = jnp.array([1, 2, 3, 4], jnp.int32)
         lens = jnp.array([7, 60, 100, 13], jnp.int32)
         # warm the cache with junk KV so attention reads something real

@@ -14,6 +14,7 @@ import pytest
 from repro import configs
 from repro.config import ShapeConfig
 from repro.models.api import get_model, make_synthetic_batch
+from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
 
 TINY = ShapeConfig("tiny", 64, 2, "train")
@@ -50,7 +51,7 @@ def test_arch_smoke_decode_step(arch):
     api = get_model(cfg)
     ctx = _ctx(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
-    cache = api.init_cache(2, 128)
+    cache = api.init_cache(DenseLayout(2, 128))
     logits, new_cache = api.decode_step(
         ctx, params, jnp.array([3, 5], jnp.int32), cache,
         jnp.array([4, 9], jnp.int32))
@@ -79,7 +80,7 @@ def test_decode_matches_prefill(arch):
     max_seq = 64
 
     # incremental path
-    cache = api.init_cache(1, max_seq)
+    cache = api.init_cache(DenseLayout(1, max_seq))
     lengths = jnp.array([len(prompt)], jnp.int32)
     logits, cache = api.prefill(
         ctx, params, jnp.asarray(prompt)[None], lengths, cache)
@@ -97,7 +98,7 @@ def test_decode_matches_prefill(arch):
     # exact arithmetic); require argmax equality only when decisive.
     for k in range(1, 4):
         seq = np.concatenate([prompt, np.asarray(toks[:k], np.int32)])
-        cache2 = api.init_cache(1, max_seq)
+        cache2 = api.init_cache(DenseLayout(1, max_seq))
         l2 = jnp.array([len(seq)], jnp.int32)
         logits2, _ = api.prefill(ctx, params, jnp.asarray(seq)[None], l2,
                                  cache2)
@@ -127,12 +128,12 @@ def test_prefill_is_padding_invariant(arch):
 
     lo, cache_a = api.prefill(
         ctx, params, jnp.asarray(prompt)[None], lengths,
-        api.init_cache(1, 128))
+        api.init_cache(DenseLayout(1, 128)))
     padded = np.concatenate([prompt, rng.integers(
         1, cfg.vocab_size, size=45).astype(np.int32)])
     lp, cache_b = api.prefill(
         ctx, params, jnp.asarray(padded)[None], lengths,
-        api.init_cache(1, 128))
+        api.init_cache(DenseLayout(1, 128)))
     np.testing.assert_allclose(
         np.asarray(lo, np.float32), np.asarray(lp, np.float32),
         rtol=2e-2, atol=2e-2)

@@ -1,5 +1,6 @@
-"""Serving engine: continuous batching, slot lifecycle, sampling, and
-engine-vs-prefill consistency (greedy decode must match teacher forcing)."""
+"""Serving engine: request lifecycle, continuous batching, sampling,
+streaming/abort, and engine-vs-prefill consistency (greedy decode must
+match teacher forcing)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +8,10 @@ import pytest
 
 from repro import configs
 from repro.models.api import get_model
-from repro.serving.engine import Engine, Request
+from repro.models.kvlayout import DenseLayout
+from repro.serving.engine import Engine
 from repro.serving.kvcache import SlotManager
+from repro.serving.request import FinishReason, SamplingParams
 from repro.serving.sampling import sample
 
 
@@ -28,6 +31,7 @@ def test_slot_manager_lifecycle():
     assert list(sm.lengths()) == [4, 4]
     sm.tick(a)
     assert list(sm.lengths()) == [5, 4]
+    assert sm.block_tables() is None            # dense layout: no operand
     sm.release(a)
     assert sm.try_assign(12, 4, 8) == 0          # slot reused
     with pytest.raises(ValueError):
@@ -37,12 +41,12 @@ def test_slot_manager_lifecycle():
 def test_engine_continuous_batching_queueing():
     cfg, eng = _engine("qwen2-0.5b", num_slots=2, max_seq=128)
     rng = np.random.default_rng(0)
-    reqs = [Request(id=i,
-                    prompt=rng.integers(1, 100, size=5 + i).astype(np.int32),
-                    max_new_tokens=4) for i in range(5)]
+    reqs = [(rng.integers(1, 100, size=5 + i).astype(np.int32),
+             SamplingParams(max_new_tokens=4)) for i in range(5)]
     out = eng.run(reqs)
     assert set(out) == set(range(5))
     assert all(len(v) == 4 for v in out.values())
+    assert all(eng.finish_reason(r) is FinishReason.LENGTH for r in out)
 
 
 @pytest.mark.parametrize(
@@ -60,8 +64,7 @@ def test_engine_matches_teacher_forcing(arch):
     rng = np.random.default_rng(2)
     prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
                for n in (9, 23)]
-    out = eng.run([Request(id=i, prompt=p, max_new_tokens=3)
-                   for i, p in enumerate(prompts)])
+    out = eng.run([(p, SamplingParams(max_new_tokens=3)) for p in prompts])
     for i, prompt in enumerate(prompts):
         toks = out[i]
         for k in range(3):
@@ -69,7 +72,7 @@ def test_engine_matches_teacher_forcing(arch):
             # one padded teacher shape -> one jit compile for all (i, k)
             padded = np.zeros((64,), np.int32)
             padded[:len(seq)] = seq
-            cache = api.init_cache(1, 256)
+            cache = api.init_cache(DenseLayout(1, 256))
             logits, _ = api.prefill(
                 ctx, params, jnp.asarray(padded)[None],
                 jnp.array([len(seq)], jnp.int32), cache)
@@ -90,8 +93,7 @@ def test_engine_chunked_prefill_matches_teacher_forcing():
     rng = np.random.default_rng(7)
     prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
                for n in (5, 16, 23, 61)]    # below / at / across chunk edges
-    out = eng.run([Request(id=i, prompt=p, max_new_tokens=2)
-                   for i, p in enumerate(prompts)])
+    out = eng.run([(p, SamplingParams(max_new_tokens=2)) for p in prompts])
     for i, prompt in enumerate(prompts):
         toks = out[i]
         for k in range(2):
@@ -99,7 +101,7 @@ def test_engine_chunked_prefill_matches_teacher_forcing():
             # one padded teacher shape -> one jit compile for all (i, k)
             padded = np.zeros((64,), np.int32)
             padded[:len(seq)] = seq
-            cache = api.init_cache(1, 256)
+            cache = api.init_cache(DenseLayout(1, 256))
             logits, _ = api.prefill(
                 ctx, eng.params, jnp.asarray(padded)[None],
                 jnp.array([len(seq)], jnp.int32), cache)
@@ -107,23 +109,93 @@ def test_engine_chunked_prefill_matches_teacher_forcing():
             assert want == toks[k], (i, k)
 
 
-def test_engine_eos_and_slot_reuse():
-    cfg, eng = _engine("qwen2-0.5b", num_slots=1, max_seq=128)
+def test_engine_stop_token_and_finish_reason():
+    """A sampled stop token ends the request with reason ``stop``; the
+    token joins the output only under ``include_stop=True`` and never
+    burns ``max_new_tokens`` budget; the freed slot is reused."""
     rng = np.random.default_rng(0)
-    # find the first greedy token, then use it as EOS for request 1
-    probe = eng.run([Request(id=0, prompt=rng.integers(1, 50, 8).astype(
-        np.int32), max_new_tokens=1)])
-    eos = probe[0][0]
-    eng2_cfg, eng2 = _engine("qwen2-0.5b", num_slots=1, max_seq=128)
-    reqs = [
-        Request(id=0, prompt=rng.integers(1, 50, 8).astype(np.int32),
-                max_new_tokens=10, eos_token=None),
-        Request(id=1, prompt=rng.integers(1, 50, 8).astype(np.int32),
-                max_new_tokens=10),
-    ]
-    out = eng2.run(reqs)
-    assert len(out[0]) == 10 and len(out[1]) == 10
-    del eos
+    prompt = rng.integers(1, 50, 8).astype(np.int32)
+    # find the greedy continuation, then use its second token as the stop
+    cfg, probe = _engine("qwen2-0.5b", num_slots=1, max_seq=128)
+    toks = probe.run([(prompt, SamplingParams(max_new_tokens=4))])[0]
+    stop = toks[1]
+
+    _, eng = _engine("qwen2-0.5b", num_slots=1, max_seq=128)
+    out = eng.run([
+        (prompt, SamplingParams(max_new_tokens=10, stop_tokens=(stop,))),
+        (prompt, SamplingParams(max_new_tokens=10, stop_tokens=(stop,),
+                                include_stop=True)),
+        (prompt, SamplingParams(max_new_tokens=10)),
+    ])
+    assert out[0] == toks[:1]                    # stop excluded
+    assert out[1] == toks[:2]                    # stop included
+    assert len(out[2]) == 10                     # no stop -> full budget
+    assert eng.finish_reason(0) is FinishReason.STOP
+    assert eng.finish_reason(1) is FinishReason.STOP
+    assert eng.finish_reason(2) is FinishReason.LENGTH
+    # the event stream mirrors run(): an excluded stop token never reaches
+    # it (terminal event is token=None), an included one does
+    for rid in out:
+        streamed = [e.token for e in eng.requests[rid].events
+                    if e.token is not None]
+        assert streamed == out[rid], rid
+    assert eng.requests[0].events[-1].token is None
+    assert eng.requests[1].events[-1].token == stop
+
+
+def test_engine_single_token_requests_drain_queue():
+    """max_new_tokens=1 requests finish inside prefill, leaving the batch
+    empty while others wait — the engine must keep admitting (not report a
+    stall) until the queue drains."""
+    cfg, eng = _engine("qwen2-0.5b", num_slots=1, max_seq=64)
+    rng = np.random.default_rng(2)
+    out = eng.run([(rng.integers(1, 100, 6).astype(np.int32),
+                    SamplingParams(max_new_tokens=1)) for _ in range(3)])
+    assert all(len(v) == 1 for v in out.values())
+    assert all(eng.finish_reason(r) is FinishReason.LENGTH for r in out)
+
+
+def test_engine_generate_streams_and_aborts():
+    """generate() yields TokenEvents incrementally (final event carries
+    finished + reason); abort() cancels a co-resident request mid-flight
+    and frees its slot for the queue."""
+    cfg, eng = _engine("qwen2-0.5b", num_slots=2, max_seq=128)
+    rng = np.random.default_rng(1)
+    victim = eng.submit(rng.integers(1, 100, 12).astype(np.int32),
+                        SamplingParams(max_new_tokens=50))
+    events = []
+    for ev in eng.generate(rng.integers(1, 100, 9).astype(np.int32),
+                           SamplingParams(max_new_tokens=6)):
+        events.append(ev)
+        if ev.index == 2:
+            assert eng.abort(victim)
+    assert [e.index for e in events] == list(range(6))
+    assert events[-1].finished
+    assert events[-1].finish_reason is FinishReason.LENGTH
+    assert all(not e.finished for e in events[:-1])
+    assert eng.finish_reason(victim) is FinishReason.ABORT
+    vic = eng.requests[victim]
+    assert 0 < vic.generated < 50
+    # streamed tokens match the state's record
+    stream_rid = events[0].rid
+    assert [e.token for e in events] == eng.requests[stream_rid].tokens
+
+
+def test_engine_per_request_seed_isolation():
+    """Sampled requests own their PRNG stream: the same (prompt, seed)
+    draws the same tokens no matter how its batch-mates sample."""
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, 100, 10).astype(np.int32)
+    other = rng.integers(1, 100, 14).astype(np.int32)
+    sp = SamplingParams(max_new_tokens=5, temperature=0.8, top_k=20, seed=7)
+
+    def crowd(other_sp):
+        _, eng = _engine("qwen2-0.5b", num_slots=2, max_seq=128)
+        return eng.run([(other, other_sp), (prompt, sp)])[1]
+
+    a = crowd(SamplingParams(max_new_tokens=8, temperature=1.0, seed=123))
+    b = crowd(SamplingParams(max_new_tokens=3, temperature=0.3, seed=999))
+    assert a == b
 
 
 def test_sampling_modes():
@@ -140,8 +212,54 @@ def test_sampling_modes():
     assert set(toks) == {1}
 
 
+def test_sampling_top_p_distribution():
+    """Nucleus sampling: the kept set is exactly the smallest prefix whose
+    cumulative probability reaches top_p, and the empirical distribution
+    over many draws tracks the renormalized probabilities."""
+    # probs 0.5 / 0.25 / 0.125 / 0.0625 / 0.0625
+    logits = jnp.log(jnp.asarray([[0.5, 0.25, 0.125, 0.0625, 0.0625]]))
+    draws = [int(sample(logits, jax.random.PRNGKey(i), temperature=1.0,
+                        top_p=0.5)[0]) for i in range(40)]
+    assert set(draws) == {0}                    # nucleus = top token only
+    draws = [int(sample(logits, jax.random.PRNGKey(i), temperature=1.0,
+                        top_p=0.8)[0]) for i in range(400)]
+    assert set(draws) <= {0, 1, 2}              # 0.5+0.25+0.125 >= 0.8
+    freq0 = draws.count(0) / len(draws)
+    assert 0.45 <= freq0 <= 0.70                # ~0.5/0.875 = 0.57
+    # top_p -> 1 keeps everything reachable
+    draws = [int(sample(logits, jax.random.PRNGKey(i), temperature=1.0,
+                        top_p=1.0)[0]) for i in range(400)]
+    assert set(draws) == {0, 1, 2, 3, 4}
+
+
 def test_engine_respects_max_seq_budget():
+    """Unservable requests are rejected at submit() — before any
+    batch-mate claims a slot — for both the max_seq and the page-pool
+    worst-case bounds."""
     cfg, eng = _engine("qwen2-0.5b", num_slots=1, max_seq=32)
     with pytest.raises(ValueError):
-        eng.run([Request(id=0, prompt=np.arange(1, 30, dtype=np.int32),
-                         max_new_tokens=10)])
+        eng.run([(np.arange(1, 30, dtype=np.int32),
+                  SamplingParams(max_new_tokens=10))])
+    assert not eng.requests and not eng.waiting      # nothing half-admitted
+    cfg2, paged = _engine("qwen2-0.5b", num_slots=1, max_seq=512,
+                          cache_kind="paged", page_size=64, num_pages=2)
+    with pytest.raises(ValueError):
+        paged.submit(np.arange(1, 200, dtype=np.int32),
+                     SamplingParams(max_new_tokens=100))   # 5 > 2 pages
+
+
+def test_engine_evicts_finished_state():
+    """Long-lived servers can drop retained per-request state once
+    consumed; unfinished requests must be aborted first."""
+    cfg, eng = _engine("qwen2-0.5b", num_slots=1, max_seq=64)
+    rng = np.random.default_rng(0)
+    out = eng.run([(rng.integers(1, 100, 6).astype(np.int32),
+                    SamplingParams(max_new_tokens=2)) for _ in range(2)])
+    assert eng.evict(0) == out[0]
+    assert 0 not in eng.requests
+    waiting_rid = eng.submit(rng.integers(1, 100, 6).astype(np.int32))
+    with pytest.raises(ValueError):
+        eng.evict(waiting_rid)                       # not finished
+    eng.abort(waiting_rid)
+    assert eng.evict_finished() == 2                 # rid 1 + the aborted
+    assert not eng.requests

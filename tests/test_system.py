@@ -14,7 +14,8 @@ from repro.config import RunConfig, ShapeConfig
 from repro.core.dispatch import tune_table
 from repro.models.api import get_model
 from repro.models.layers import LayerCtx
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
 from repro.training.checkpoint import CheckpointManager
 from repro.training.loop import train_loop
 from repro.training.train_state import TrainState, make_train_step
@@ -54,10 +55,8 @@ def test_train_checkpoint_serve_roundtrip():
                      table=table)
         rng = np.random.default_rng(0)
         out = eng.run([
-            Request(id=i,
-                    prompt=rng.integers(1, cfg.vocab_size, 9 + i
-                                        ).astype(np.int32),
-                    max_new_tokens=4)
+            (rng.integers(1, cfg.vocab_size, 9 + i).astype(np.int32),
+             SamplingParams(max_new_tokens=4))
             for i in range(3)
         ])
         assert set(out) == {0, 1, 2}
