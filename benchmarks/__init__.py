@@ -4,7 +4,7 @@
   * decode_engine     — decode-phase engine comparison (Fig. 1/10/12/13)
   * prefill_engine    — prefill-phase comparison (Fig. 11)
   * flat_gemm_sweep   — flat-GEMM B_N trade-off (Fig. 7, Eq. 5)
-  * dispatch_table    — heuristic-dataflow inflection points (Fig. 9)
+  * dispatch_table    — plan-tuning sweep: per-op decisions + Fig. 9 inflections
   * roofline_report   — §Roofline terms from the dry-run artifacts
 
 ``python -m benchmarks.run`` executes all of them.

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from benchmarks.common import fmt_row, time_jitted
 from repro import configs
 from repro.config import SoftmaxPhiConfig
+from repro.core.plan import make_plan
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
@@ -54,7 +55,7 @@ def run(quick: bool = False) -> list[dict]:
                        if phi_active else SoftmaxPhiConfig(enabled=False))
             c = dataclasses.replace(cfg, softmax_phi=phi_cfg)
             api_c = get_model(c)
-            ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
+            ctx = LayerCtx(cfg=c, plan=make_plan(fallback=False))
             fn = _serve_fn(c, api_c, ctx)
             layout = DenseLayout(b, s)
             t = time_jitted(

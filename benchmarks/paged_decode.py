@@ -43,7 +43,7 @@ def run(quick: bool = False) -> dict:
     cfg = configs.smoke(configs.get("qwen2-0.5b"))
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
-    ctx = LayerCtx(cfg=cfg, use_pallas=False)
+    ctx = LayerCtx(cfg=cfg)
 
     num_slots = 4 if quick else 8
     max_seq = 512 if quick else 1024

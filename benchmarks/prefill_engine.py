@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from benchmarks.common import fmt_row, time_jitted
 from repro import configs
 from repro.config import SoftmaxPhiConfig
+from repro.core.plan import make_plan
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout
 from repro.models.layers import LayerCtx
@@ -31,7 +32,7 @@ def run(quick: bool = False) -> list[dict]:
             c = dataclasses.replace(cfg0, softmax_phi=phi_cfg)
             api = get_model(c)
             params = api.init_params(jax.random.PRNGKey(0))
-            ctx = LayerCtx(cfg=c, use_pallas=False, fallback=False)
+            ctx = LayerCtx(cfg=c, plan=make_plan(fallback=False))
             toks = jnp.ones((b, plen), jnp.int32)
             lengths = jnp.full((b,), plen, jnp.int32)
             cache = api.init_cache(DenseLayout(b, plen))

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro import configs
 from repro.config import SoftmaxPhiConfig
-from repro.core import dispatch
+from repro.core import plan as plan_mod
 from repro.kernels import ops, ref
 
 # ---------------------------------------------------------------------------
@@ -23,8 +23,7 @@ v_cache = jax.random.normal(ks[2], (b, s, hk, d), jnp.float32)
 lengths = jnp.array([300, 512], jnp.int32)
 
 phi_cfg = SoftmaxPhiConfig(phi=0.0, band=(-40.0, 40.0))   # calibrated φ
-out = ops.attention_decode(q, k_cache, v_cache, lengths,
-                           phi_cfg=phi_cfg, use_pallas=False)
+out = ops.attention_decode(q, k_cache, v_cache, lengths, phi_cfg=phi_cfg)
 want = ref.attention_decode_ref(q, k_cache, v_cache, lengths)
 np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
 print(f"   async == sync result, max |Δ| = "
@@ -44,11 +43,14 @@ print(f"   (3, 512) @ (512, 1024) via M_pad=8 tile: OK, out {y.shape}")
 # ---------------------------------------------------------------------------
 # T3 — heuristic dataflow: offline table, runtime lookup
 # ---------------------------------------------------------------------------
-print("== T3: heuristic dispatch table (llama2-7b) ==")
-table = dispatch.tune_table(configs.get("llama2-7b"))
-for (kk, nn), e in sorted(table.entries.items()):
+print("== T3: tuned execution plan (llama2-7b) ==")
+plan = plan_mod.tune(configs.get("llama2-7b"))
+for (kk, nn), e in sorted(plan.matmul.entries.items()):
     print(f"   [K={kk:>6}, N={nn:>6}]  M1={e.m1:<4} M2={e.m2:<4} "
           f"(M<M1: VPU-GEMV, M<M2: flat-GEMM, else XLA dot)")
 m = 4
-impl = table.pick(m, 4096, 12288)
+impl = plan.matmul.pick(m, 4096, 12288)
 print(f"   decode batch {m} routes QKV-proj to {impl.value}")
+print(f"   plan: {plan.describe()}")
+print(f"   round-trips: "
+      f"{plan_mod.ExecutionPlan.from_json(plan.to_json()) == plan}")

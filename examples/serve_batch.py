@@ -9,7 +9,7 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core.dispatch import tune_table
+from repro.core.plan import tune
 from repro.models.api import get_model
 from repro.serving.engine import Engine
 from repro.serving.request import SamplingParams
@@ -20,9 +20,9 @@ def main():
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
 
-    # T3: offline dispatch table wired into every matmul of the engine
-    table = tune_table(cfg)
-    eng = Engine(cfg, params, num_slots=4, max_seq=512, table=table)
+    # T3: offline-tuned execution plan wired into every op of the engine
+    plan = tune(cfg)
+    eng = Engine(cfg, params, num_slots=4, max_seq=512, plan=plan)
 
     rng = np.random.default_rng(0)
     requests = [

@@ -42,7 +42,7 @@ def main():
         checkpoint_dir=args.ckpt or tempfile.mkdtemp(prefix="repro_ex_"),
     )
     api = get_model(cfg)
-    ctx = LayerCtx(cfg=cfg, use_pallas=False)
+    ctx = LayerCtx(cfg=cfg)
     step = jax.jit(make_train_step(api, ctx, run), donate_argnums=(0,))
 
     res = train_loop(

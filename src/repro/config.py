@@ -229,7 +229,11 @@ class RunConfig:
 
     microbatch: int = 0              # 0 = no gradient accumulation
     remat: str = "selective"         # none | selective | full
-    use_pallas_kernels: bool = True  # False -> pure-XLA reference path
+    # kernel dispatch: a repro.core.plan.ExecutionPlan (None = untuned
+    # default); hosts with hard constraints override knobs on top of it
+    # (the dry-run forces backend="xla", fallback=False)
+    plan: Optional[object] = None
+    sync_softmax: bool = False       # force the pre-T1 synchronized scheme
     seq_shard_attention: bool = True  # T1-enabled split-KV decode sharding
     zero1: bool = True               # shard optimizer state over data axis
     grad_compression: str = "none"   # none | int8_ef
@@ -245,6 +249,6 @@ class RunConfig:
     max_decode_steps: int = 32
     temperature: float = 0.0
     # shape-dependent scheduling knobs used by the perf loop
-    decode_kv_block: int = 512       # KV chunk per pallas grid step
+    # (decode block_k lives in the plan: plan.attention_decode.block_k)
     flat_gemm_bn: int = 0            # 0 = auto (cost model picks)
     vocab_chunk: int = 0             # 0 = no chunking of the LM head / loss

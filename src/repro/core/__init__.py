@@ -3,7 +3,9 @@
   * T1 — :mod:`repro.core.softmax` (unified-max partial softmax + combines)
           and :mod:`repro.core.phi` (phi calibration / per-arch registry).
   * T2 — surfaced through :mod:`repro.kernels.flat_gemm`.
-  * T3 — :mod:`repro.core.dispatch` (heuristic dataflow lookup table).
+  * T3 — :mod:`repro.core.dispatch` (heuristic dataflow cost models) and
+          :mod:`repro.core.plan` (the tuned, serializable
+          :class:`~repro.core.plan.ExecutionPlan` every op dispatches by).
   * :mod:`repro.core.attention` — the attention front door the model zoo uses.
 """
-from repro.core import dispatch, phi, softmax  # noqa: F401
+from repro.core import dispatch, phi, plan, softmax  # noqa: F401

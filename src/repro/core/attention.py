@@ -13,7 +13,7 @@ value φ, and the cross-shard combine is
     plus a rescale multiply on every shard, every token, every layer.
 
 The per-shard math runs the Pallas decode kernel on TPU
-(``use_pallas=True``) or the jnp oracle on CPU. The GSPMD-automatic path
+(a ``backend="pallas"`` plan) or the jnp oracle on CPU. The GSPMD-automatic path
 (ops.attention_decode + sharding constraints) compiles to the same
 schedule; this explicit version is the auditable artifact and the unit
 of the attention hillclimb in EXPERIMENTS.md §Perf.
@@ -71,11 +71,17 @@ def decode_attention_sharded(
     lengths: jax.Array,    # (B,)
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
+    scheme: str = "unified_max",
     scale: Optional[float] = None,
     model_axis: str = "model",
     batch_axes: tuple = ("data",),
 ) -> jax.Array:
-    """Split-KV decode attention over the ``model`` mesh axis."""
+    """Split-KV decode attention over the ``model`` mesh axis.
+
+    ``scheme`` mirrors the plan's ``attention_decode.scheme`` knob: the
+    async T1 combine needs both an active φ config and a
+    ``"unified_max"`` request; either veto runs the sync baseline.
+    """
     d = q.shape[-1]
     scale = scale if scale is not None else d ** -0.5
     s_global = k_cache.shape[1]
@@ -83,7 +89,7 @@ def decode_attention_sharded(
     assert s_global % tp == 0, (s_global, tp)
     s_loc = s_global // tp
 
-    use_async = phi_cfg.active
+    use_async = phi_cfg.active and scheme == "unified_max"
 
     def body(q_l, k_l, v_l, len_l):
         idx = jax.lax.axis_index(model_axis)
@@ -113,11 +119,14 @@ def decode_attention_sharded(
     return fn(q, k_cache, v_cache, lengths)
 
 
-def make_decode_attention_fn(mesh, rules, phi_cfg):
-    """Adapter producing a ``LayerCtx.decode_attention_fn``."""
+def make_decode_attention_fn(mesh, rules, phi_cfg,
+                             scheme: str = "unified_max"):
+    """Adapter producing a ``LayerCtx.decode_attention_fn``; pass the
+    plan's ``attention_decode.scheme`` so the override honors it."""
     return functools.partial(
         decode_attention_sharded, mesh,
         phi_cfg=phi_cfg,
+        scheme=scheme,
         model_axis=rules.model_axis,
         batch_axes=tuple(rules.act_batch_axes),
     )

@@ -1,4 +1,4 @@
-"""T3 — Heuristic dataflow with hardware resource adaptation (paper §5).
+"""T3 — Heuristic dataflow cost models and decision flows (paper §5).
 
 The paper's observation: a transformer has only four GEMM ``[K, N]`` shapes
 (QKV, O, FFN-up, FFN-down; MoE adds the per-expert pair), and only ``M``
@@ -9,10 +9,17 @@ finds two inflection points
     M₁ ≤ M < M₂       → ImplB  (Pallas flat GEMM, minimal M-padding — T2)
     M₂ ≤ M            → ImplC  (XLA dot_general — cuBLAS/CUTLASS analogue)
 
-and the runtime consults a lookup table — zero dispatch overhead.
+and the runtime consults a zero-overhead lookup. This module holds the
+*decision machinery*: the per-impl cost models (:func:`predict_time` for
+GEMM, :func:`predict_decode_time` for the decode-attention KV grid), the
+sweep flows (:func:`find_inflections`, :func:`find_block_k`,
+:func:`find_chunk_threshold`), and the measurement backends. The tuned
+decisions themselves live in :class:`repro.core.plan.ExecutionPlan` —
+build one with :func:`repro.core.plan.tune`, which drives every flow here
+and serializes the result with provenance.
 
-Profiling backend: on a real TPU, pass ``measure=wallclock_measure`` to
-:func:`tune_table` and the inflection points come from timings. In this
+Profiling backend: on a real TPU, pass ``measure="wallclock"`` to
+``plan.tune`` and the GEMM inflection points come from timings. In this
 CPU-only container the default backend is the analytical v5e roofline model
 below — the decision *structure* is identical and unit-tested for the
 invariants the paper relies on (piecewise dominance, monotone crossover).
@@ -21,8 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import json
-from typing import Callable, Dict, Iterable, Tuple
+from typing import Callable, Iterable
 
 from repro import hardware
 from repro.config import ModelConfig
@@ -121,8 +127,17 @@ def predict_time(
 MeasureFn = Callable[[Impl, int, int, int], float]
 
 
-def wallclock_measure_factory(dtype="bfloat16") -> MeasureFn:
-    """Real-hardware timing hook (used when running on an actual TPU)."""
+def wallclock_measure_factory(dtype="bfloat16", *, warmup: int = 3,
+                              iters: int = 10) -> MeasureFn:
+    """Real-hardware timing hook (used when running on an actual TPU).
+
+    Discipline: independent PRNG keys for the two operands (a shared key
+    would correlate x and w and flatter the reduction), ``warmup``
+    post-compile calls to settle caches/autotuning, then ``iters`` timed
+    dispatches each blocked to completion — timing N async dispatches
+    against one trailing ``block_until_ready`` would measure queue depth,
+    not kernel time.
+    """
     import time
 
     import jax
@@ -132,9 +147,9 @@ def wallclock_measure_factory(dtype="bfloat16") -> MeasureFn:
     from repro.kernels import gemv as gv
 
     def measure(impl: Impl, m: int, k: int, n: int) -> float:
-        key = jax.random.PRNGKey(0)
-        x = jax.random.normal(key, (m, k), dtype=dtype)
-        w = jax.random.normal(key, (k, n), dtype=dtype)
+        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (m, k), dtype=dtype)
+        w = jax.random.normal(kw, (k, n), dtype=dtype)
         if impl is Impl.GEMV:
             f = jax.jit(lambda a, b: gv.gemv(a, b))
         elif impl is Impl.FLAT_GEMM:
@@ -142,66 +157,45 @@ def wallclock_measure_factory(dtype="bfloat16") -> MeasureFn:
         else:
             f = jax.jit(lambda a, b: jnp.dot(a, b))
         f(x, w).block_until_ready()  # compile
-        t0 = time.perf_counter()
-        for _ in range(10):
-            r = f(x, w)
-        r.block_until_ready()
-        return (time.perf_counter() - t0) / 10
+        for _ in range(warmup):
+            f(x, w).block_until_ready()
+        total = 0.0
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            f(x, w).block_until_ready()
+            total += time.perf_counter() - t0
+        return total / iters
 
     return measure
 
 
 # ---------------------------------------------------------------------------
-# Offline decision flow (paper Fig. 9(b)) → lookup table
+# Offline decision flows (paper Fig. 9(b)) → plan entries
 # ---------------------------------------------------------------------------
 
 M_SWEEP = (1, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 1024)
 
 
-@dataclasses.dataclass
+def pick_impl(m: int, m1: int, m2: int) -> Impl:
+    """The piecewise routing ladder every GEMM decision reduces to."""
+    if m < m1:
+        return Impl.GEMV
+    if m < m2:
+        return Impl.FLAT_GEMM
+    return Impl.XLA_DOT
+
+
+@dataclasses.dataclass(frozen=True)
 class DispatchEntry:
+    """One tuned [K, N] inflection record (a matmul-plan entry)."""
+
     k: int
     n: int
     m1: int  # first M where ImplB beats ImplA
     m2: int  # first M where ImplC beats ImplB
 
     def pick(self, m: int) -> Impl:
-        if m < self.m1:
-            return Impl.GEMV
-        if m < self.m2:
-            return Impl.FLAT_GEMM
-        return Impl.XLA_DOT
-
-
-class DispatchTable:
-    """Lookup table keyed by [K, N] (paper Fig. 9(c))."""
-
-    def __init__(self, entries: Dict[Tuple[int, int], DispatchEntry]):
-        self.entries = entries
-
-    def pick(self, m: int, k: int, n: int) -> Impl:
-        e = self.entries.get((k, n))
-        if e is None:
-            # unseen shape: conservative static policy
-            return Impl.GEMV if m <= 2 else (
-                Impl.FLAT_GEMM if m < 128 else Impl.XLA_DOT)
-        return e.pick(m)
-
-    def to_json(self) -> str:
-        return json.dumps(
-            {f"{k},{n}": dataclasses.asdict(e)
-             for (k, n), e in self.entries.items()},
-            indent=2,
-        )
-
-    @staticmethod
-    def from_json(s: str) -> "DispatchTable":
-        raw = json.loads(s)
-        entries = {}
-        for key, d in raw.items():
-            k, n = (int(x) for x in key.split(","))
-            entries[(k, n)] = DispatchEntry(**d)
-        return DispatchTable(entries)
+        return pick_impl(m, self.m1, self.m2)
 
 
 def find_inflections(
@@ -230,15 +224,72 @@ def find_inflections(
     return DispatchEntry(k=k, n=n, m1=m1, m2=max(m2, m1))
 
 
-def tune_table(
-    cfg: ModelConfig, *,
-    measure: MeasureFn | None = None,
+# ---------------------------------------------------------------------------
+# Decode-attention block_k decision flow (find_inflections beyond GEMM)
+# ---------------------------------------------------------------------------
+
+BLOCK_K_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+# per-grid-step issue/bookkeeping bubble of the decode kernel's KV loop
+_GRID_STEP_OVERHEAD_S = 5e-7
+
+
+def predict_decode_time(
+    block_k: int, s: int, kv_dim: int, *,
+    dtype_bytes: int = 2,
     spec: hardware.HardwareSpec = hardware.DEFAULT,
-) -> DispatchTable:
-    entries = {}
-    for gs in model_gemm_shapes(cfg):
-        if (gs.k, gs.n) not in entries:
-            entries[(gs.k, gs.n)] = find_inflections(
-                gs.k, gs.n, measure=measure, spec=spec
-            )
-    return DispatchTable(entries)
+) -> float:
+    """Roofline time for one decode-attention call at KV length ``s``.
+
+    The grid loops over ``ceil(s / block_k)`` KV tiles; each tile streams
+    K and V rows (padding included — a tile past ``s`` still DMAs), so a
+    large ``block_k`` amortizes per-step overhead but pays padded traffic
+    when ``s`` is short, and is capped by the double-buffered VMEM claim.
+    """
+    steps = -(-s // block_k)
+    rows = steps * block_k
+    mem = 2 * rows * kv_dim * dtype_bytes / spec.hbm_bw      # K + V streams
+    vmem = 2 * 2 * block_k * kv_dim * dtype_bytes            # dbl-buffered K+V
+    if vmem > spec.vmem_bytes // 2:
+        return float("inf")
+    return mem + steps * _GRID_STEP_OVERHEAD_S
+
+
+def find_block_k(
+    s: int, kv_dim: int, *,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+    candidates: Iterable[int] = BLOCK_K_CANDIDATES,
+) -> int:
+    """Pick the decode KV grid block for a representative KV length."""
+    best, best_t = None, float("inf")
+    for bk in sorted(candidates):
+        t = predict_decode_time(bk, s, kv_dim, spec=spec)
+        if t < best_t:
+            best, best_t = bk, t
+    if best is None:
+        raise ValueError(f"no feasible block_k among {tuple(candidates)}")
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Prefill chunking-threshold decision flow
+# ---------------------------------------------------------------------------
+
+CHUNK_THRESHOLD_CANDIDATES = (1024, 2048, 4096, 8192, 16384, 32768)
+
+
+def find_chunk_threshold(
+    num_heads: int, *,
+    dtype_bytes: int = 4,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+    budget_frac: float = 0.25,
+) -> int:
+    """Largest sequence length whose materialized per-sequence (H, S, S)
+    f32 score tensor still fits a ``budget_frac`` slice of HBM; beyond it
+    the blockwise T1 scheme must take over (live memory ≈ (H, Bq, S))."""
+    budget = spec.hbm_bytes * budget_frac
+    best = CHUNK_THRESHOLD_CANDIDATES[0]
+    for s in CHUNK_THRESHOLD_CANDIDATES:
+        if num_heads * s * s * dtype_bytes <= budget:
+            best = s
+    return best

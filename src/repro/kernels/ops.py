@@ -1,13 +1,18 @@
-"""Jit'd public wrappers around the Pallas kernels, with T3 dispatch.
+"""Jit'd public wrappers around the Pallas kernels, dispatched by plan.
 
-``matmul`` is the single GEMM entry point used by the model zoo: it routes a
-(M, K) × (K, N) workload to ImplA/ImplB/ImplC per the heuristic dataflow
-table (or an explicit ``impl=``). ``attention_prefill`` / ``attention_decode``
-wrap the fused attention kernels with the T1 overflow fallback.
+``matmul`` is the single GEMM entry point used by the model zoo: it routes
+a (M, K) × (K, N) workload to ImplA/ImplB/ImplC per the plan's tuned
+[K, N] inflection entries (or an explicit ``impl=``). The attention front
+doors wrap the fused kernels with the T1 overflow fallback.
 
-Every wrapper takes ``use_pallas`` — the CPU container cannot lower Mosaic
-kernels, so the XLA reference path (``ref.py`` math) is used for dry-runs and
-end-to-end CPU runs, while kernels are validated with ``interpret=True``.
+Every wrapper takes exactly one ``plan=`` operand — an
+:class:`~repro.core.plan.ExecutionPlan` (``None`` = the untuned
+``DEFAULT_PLAN``) deciding backend (``"pallas"`` kernels vs. the XLA
+reference math in ``ref.py`` — the CPU container cannot lower Mosaic, so
+the default plan is XLA and kernels are validated with
+``interpret=True``), softmax scheme, decode ``block_k``, the chunked
+prefill threshold, and whether the ``lax.cond`` overflow-recompute branch
+is emitted. Plans choose *which* implementation runs, never the math.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SoftmaxPhiConfig
-from repro.core.dispatch import DispatchTable, Impl
+from repro.core.dispatch import Impl
+from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
 from repro.kernels import ref
 from repro.kernels.decode_attention import (
     decode_attention_sync,
@@ -33,6 +39,12 @@ from repro.kernels.gemv import gemv
 _INTERPRET = jax.default_backend() == "cpu"
 
 
+def _unified(phi_cfg: SoftmaxPhiConfig, scheme: str) -> bool:
+    """T1 unified-max runs only when the model has a calibrated φ *and*
+    the plan asks for it; either veto falls back to the sync scheme."""
+    return phi_cfg.active and scheme == "unified_max"
+
+
 # ---------------------------------------------------------------------------
 # GEMM front door (T3)
 # ---------------------------------------------------------------------------
@@ -42,11 +54,11 @@ def matmul(
     x: jax.Array,
     w: jax.Array,
     *,
-    table: Optional[DispatchTable] = None,
+    plan: Optional[ExecutionPlan] = None,
     impl: Optional[Impl] = None,
-    use_pallas: bool = True,
 ) -> jax.Array:
-    """Dispatch-aware GEMM. x: (..., K), w: (K, N)."""
+    """Plan-dispatched GEMM. x: (..., K), w: (K, N)."""
+    mp = (plan or DEFAULT_PLAN).matmul
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
@@ -56,13 +68,9 @@ def matmul(
     x2 = x.reshape(m, k)
 
     if impl is None:
-        if table is not None:
-            impl = table.pick(m, k, n)
-        else:
-            impl = Impl.GEMV if m <= 2 else (
-                Impl.FLAT_GEMM if m < 128 else Impl.XLA_DOT)
+        impl = mp.pick(m, k, n)
 
-    if not use_pallas or impl is Impl.XLA_DOT:
+    if mp.backend != "pallas" or impl is Impl.XLA_DOT:
         out = ref.flat_gemm_ref(x2, w)
     elif impl is Impl.GEMV:
         out = gemv(x2, w, interpret=_INTERPRET)
@@ -77,15 +85,17 @@ def fused_ffn(
     w_up: jax.Array,     # (K, N)
     *,
     activation: str = "swiglu",
-    use_pallas: bool = True,
+    plan: Optional[ExecutionPlan] = None,
 ) -> jax.Array:
-    """act(x @ w_gate) * (x @ w_up) — fused epilogue kernel on TPU
-    (kernels/fused_ffn.py), oracle math on the XLA path."""
+    """act(x @ w_gate) * (x @ w_up) — the single fused epilogue kernel
+    when the plan's ``fused_ffn`` entry says ``fused`` on the Pallas
+    backend (kernels/fused_ffn.py), oracle math otherwise."""
+    fp = (plan or DEFAULT_PLAN).fused_ffn
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w_gate.shape[-1]
     x2 = x.reshape(-1, k)
-    if use_pallas:
+    if fp.fused and fp.backend == "pallas":
         from repro.kernels.fused_ffn import fused_ffn_up
         out = fused_ffn_up(x2, w_gate, w_up, activation=activation,
                            interpret=_INTERPRET)
@@ -99,12 +109,6 @@ def fused_ffn(
 # ---------------------------------------------------------------------------
 
 
-# quadratic (B,H,S,S) scores are only materialized below this sequence
-# length on the XLA path; above it the blockwise T1 scheme keeps live
-# memory ≈ (B,H,block_q,S) — mandatory for the 32k dry-run cells.
-CHUNKED_PREFILL_MIN_SEQ = 2048
-
-
 def attention_prefill(
     q: jax.Array,   # (B, Sq, HQ, D)
     k: jax.Array,   # (B, Sk, HK, D)
@@ -113,25 +117,31 @@ def attention_prefill(
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
     causal: bool = True,
     sliding_window: int = 0,
-    use_pallas: bool = True,
-    fallback: bool = True,
+    plan: Optional[ExecutionPlan] = None,
 ) -> jax.Array:
     """Prefill attention with T1 + overflow recomputation fallback.
 
-    ``fallback=False`` drops the ``lax.cond`` recompute branch (used by the
-    dry-run so cost_analysis doesn't double-count the attention; the
-    calibrated φ band makes the branch probability ≈ 0 — paper §3).
+    The plan's ``attention_prefill`` entry decides: the softmax scheme
+    (``unified_max`` needs an active φ config), the chunking threshold —
+    quadratic (B,H,S,S) scores are only materialized on the XLA path below
+    it; above, the blockwise T1 scheme keeps live memory ≈ (B,H,block_q,S),
+    mandatory for the 32k dry-run cells — and whether the ``lax.cond``
+    recompute branch is emitted (``fallback=False`` is dry-run hygiene so
+    cost_analysis doesn't double-count; the calibrated φ band makes the
+    branch probability ≈ 0 — paper §3).
     """
-    if not use_pallas:
-        if q.shape[1] * k.shape[1] >= CHUNKED_PREFILL_MIN_SEQ ** 2:
+    ap = (plan or DEFAULT_PLAN).attention_prefill
+    unified = _unified(phi_cfg, ap.scheme)
+    if ap.backend != "pallas":
+        if q.shape[1] * k.shape[1] >= ap.chunk_threshold ** 2:
             return ref.attention_prefill_chunked(
                 q, k, v, causal=causal, sliding_window=sliding_window,
-                phi=phi_cfg.phi if phi_cfg.active else None,
+                phi=phi_cfg.phi if unified else None,
             )
         return ref.attention_prefill_ref(
             q, k, v, causal=causal, sliding_window=sliding_window
         )
-    if not phi_cfg.active:
+    if not unified:
         return flash_prefill(
             q, k, v, causal=causal, unified_max=False,
             sliding_window=sliding_window, interpret=_INTERPRET,
@@ -140,7 +150,7 @@ def attention_prefill(
         q, k, v, causal=causal, unified_max=True, phi=phi_cfg.phi,
         sliding_window=sliding_window, interpret=_INTERPRET,
     )
-    if not fallback:
+    if not ap.fallback:
         return out
     overflow = jnp.any(stat > phi_cfg.band[1])
 
@@ -161,26 +171,28 @@ def attention_decode(
     lengths: jax.Array,  # (B,)
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
-    block_k: int = 512,
-    use_pallas: bool = True,
-    fallback: bool = True,
+    plan: Optional[ExecutionPlan] = None,
     shard=None,
 ) -> jax.Array:
     """Decode attention with T1 + overflow recomputation fallback.
 
-    ``shard`` (optional, a LayerCtx.shard) pins the split-KV dataflow on
-    the XLA path: scores stay sequence-sharded and GSPMD combines the
-    per-shard (num, den) partials with a single additive all-reduce —
-    the pod-scale payoff of the unified-max softmax.
+    The plan's ``attention_decode`` entry decides scheme, the KV grid
+    ``block_k``, and the recompute branch. ``shard`` (optional, a
+    LayerCtx.shard) pins the split-KV dataflow on the XLA path: scores
+    stay sequence-sharded and GSPMD combines the per-shard (num, den)
+    partials with a single additive all-reduce — the pod-scale payoff of
+    the unified-max softmax.
     """
-    if not use_pallas:
-        if not phi_cfg.active:
+    dp = (plan or DEFAULT_PLAN).attention_decode
+    unified = _unified(phi_cfg, dp.scheme)
+    if dp.backend != "pallas":
+        if not unified:
             return ref.attention_decode_ref(
                 q, k_cache, v_cache, lengths, shard=shard)
         out, stat = ref.attention_decode_unified_max_ref(
             q, k_cache, v_cache, lengths, phi=phi_cfg.phi, shard=shard
         )
-        if not fallback:
+        if not dp.fallback:
             return out
         overflow = jnp.any(stat > phi_cfg.band[1])
         safe = functools.partial(
@@ -192,21 +204,21 @@ def attention_decode(
     # kernel layout: (B, HK, S, D)
     kt = k_cache.transpose(0, 2, 1, 3)
     vt = v_cache.transpose(0, 2, 1, 3)
-    if not phi_cfg.active:
+    if not unified:
         return decode_attention_sync(
-            q, kt, vt, lengths, block_k=block_k, interpret=_INTERPRET
+            q, kt, vt, lengths, block_k=dp.block_k, interpret=_INTERPRET
         )
     out, stat = decode_attention_unified_max(
-        q, kt, vt, lengths, phi=phi_cfg.phi, block_k=block_k,
+        q, kt, vt, lengths, phi=phi_cfg.phi, block_k=dp.block_k,
         interpret=_INTERPRET,
     )
-    if not fallback:
+    if not dp.fallback:
         return out
     overflow = jnp.any(stat > phi_cfg.band[1])
 
     def recompute(_):
         return decode_attention_sync(
-            q, kt, vt, lengths, block_k=block_k, interpret=_INTERPRET
+            q, kt, vt, lengths, block_k=dp.block_k, interpret=_INTERPRET
         )
 
     return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
@@ -220,28 +232,30 @@ def attention_decode_paged(
     lengths: jax.Array,       # (B,)
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
-    use_pallas: bool = True,
-    fallback: bool = True,
+    plan: Optional[ExecutionPlan] = None,
     shard=None,
 ) -> jax.Array:
     """Decode attention over a block-paged KV cache (T1 + overflow fallback).
 
-    Paged twin of :func:`attention_decode`: the KV cache is a flat page pool
-    shared by all sequences and each sequence's pages are named by its block
-    table. On the XLA path the pages are gathered into a dense per-sequence
-    view (bitwise identical to the dense path when NB*PS == max_seq); on the
-    Pallas path the block table is scalar-prefetched so the kernel DMAs
-    exactly the pages each sequence owns.
+    Paged twin of :func:`attention_decode`, governed by the plan's
+    ``paged`` entry: the KV cache is a flat page pool shared by all
+    sequences and each sequence's pages are named by its block table. On
+    the XLA backend the pages are gathered into a dense per-sequence view
+    (bitwise identical to the dense path when NB*PS == max_seq); on the
+    Pallas backend the block table is scalar-prefetched so the kernel
+    DMAs exactly the pages each sequence owns.
     """
-    if not use_pallas:
-        if not phi_cfg.active:
+    pp = (plan or DEFAULT_PLAN).paged
+    unified = _unified(phi_cfg, pp.scheme)
+    if pp.backend != "pallas":
+        if not unified:
             return ref.attention_decode_paged_ref(
                 q, k_pool, v_pool, block_tables, lengths, shard=shard)
         out, stat = ref.attention_decode_paged_unified_max_ref(
             q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
             shard=shard,
         )
-        if not fallback:
+        if not pp.fallback:
             return out
         overflow = jnp.any(stat > phi_cfg.band[1])
         safe = functools.partial(
@@ -250,7 +264,7 @@ def attention_decode_paged(
         )
         return jax.lax.cond(overflow, lambda _: safe(), lambda _: out, None)
 
-    if not phi_cfg.active:
+    if not unified:
         return paged_decode_attention_sync(
             q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
         )
@@ -258,7 +272,7 @@ def attention_decode_paged(
         q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
         interpret=_INTERPRET,
     )
-    if not fallback:
+    if not pp.fallback:
         return out
     overflow = jnp.any(stat > phi_cfg.band[1])
 
@@ -277,23 +291,23 @@ def attention_chunk(
     lengths: jax.Array,  # (B,) lengths before the chunk
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
-    use_pallas: bool = True,
-    fallback: bool = True,
+    plan: Optional[ExecutionPlan] = None,
 ) -> jax.Array:
     """Chunked-prefill attention: C tokens attend to prefix + chunk.
 
     The decode-shaped admission path: long prompts stream through this in
     fixed-size chunks instead of compiling one prefill per prompt bucket.
-    Runs the ref math on both paths today (the chunk GEMMs are MXU-shaped
-    already; a fused kernel is a ROADMAP follow-on), with the T1 scheme and
-    a safe-softmax recompute fallback matching :func:`attention_decode`.
+    Runs the ref math on both backends today (the chunk GEMMs are
+    MXU-shaped already; a fused kernel is a ROADMAP follow-on), with the
+    scheme and safe-softmax recompute fallback taken from the plan's
+    ``attention_prefill`` entry (this is a prefill-phase op).
     """
-    del use_pallas  # ref math on both paths (see docstring)
-    if not phi_cfg.active:
+    ap = (plan or DEFAULT_PLAN).attention_prefill
+    if not _unified(phi_cfg, ap.scheme):
         return ref.attention_chunk_ref(q, k_cache, v_cache, lengths, phi=None)
     out, stat = ref.attention_chunk_unified_max_ref(
         q, k_cache, v_cache, lengths, phi=phi_cfg.phi)
-    if not fallback:
+    if not ap.fallback:
         return out
     overflow = jnp.any(stat > phi_cfg.band[1])
     safe = functools.partial(
@@ -309,19 +323,16 @@ def attention_chunk_paged(
     lengths: jax.Array,
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
-    use_pallas: bool = True,
-    fallback: bool = True,
+    plan: Optional[ExecutionPlan] = None,
 ) -> jax.Array:
     """Paged twin of :func:`attention_chunk` (gather via block tables).
 
-    The gather materializes a dense (B, NB*PS) KV view per layer per chunk
-    step — fine for correctness and for CPU smoke, but it transiently costs
+    The plan's ``paged.gather_chunk`` mode names the materialization:
+    ``"dense"`` gathers a (B, NB*PS) KV view per layer per chunk step —
+    fine for correctness and CPU smoke, but it transiently costs
     dense-cache bytes during prefill; a fused chunk kernel over the pool
     (no gather) is the ROADMAP "chunk-attention kernel" follow-on.
     """
     k = ref.gather_paged_kv(k_pool, block_tables)
     v = ref.gather_paged_kv(v_pool, block_tables)
-    return attention_chunk(
-        q, k, v, lengths, phi_cfg=phi_cfg, use_pallas=use_pallas,
-        fallback=fallback,
-    )
+    return attention_chunk(q, k, v, lengths, phi_cfg=phi_cfg, plan=plan)

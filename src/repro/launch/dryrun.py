@@ -45,6 +45,7 @@ from repro.config import (
     MULTI_POD, SINGLE_POD, MeshConfig, ModelConfig, RunConfig, ShapeConfig,
     SHAPES, applicable_shapes,
 )
+from repro.core import plan as plan_mod
 from repro.distributed.sharding import Rules, make_rules, make_shard_fn, named
 from repro.launch.mesh import make_mesh_from_config
 from repro.models import api as model_api
@@ -63,13 +64,18 @@ def _ctx(cfg: ModelConfig, mesh, rules, run: RunConfig) -> LayerCtx:
         sizes = rules.axis_sizes
         for a in rules.batch_axes:
             groups *= sizes[a]
+    base = run.plan if run.plan is not None else plan_mod.make_plan()
+    ep = base.with_overrides(
+        backend="xla",     # Mosaic doesn't lower on CPU
+        fallback=False,    # no cond double-count in cost analysis
+        # pre-T1 baseline (Fig. 4(b)): synchronized softmax everywhere
+        scheme="sync" if run.sync_softmax else None,
+    )
     return LayerCtx(
         cfg=cfg,
         shard=make_shard_fn(mesh, rules),
-        use_pallas=False,          # XLA path: Mosaic doesn't lower on CPU
-        fallback=False,            # no cond double-count in cost analysis
+        plan=ep,
         moe_groups=groups,
-        decode_kv_block=run.decode_kv_block,
         mesh=mesh if run.grad_compression == "none" else None,
         rules=rules,
     )
@@ -308,12 +314,13 @@ def run_cell(
     probes: tuple[int, ...] = (1, 3),
     full: bool = True,
     sync_softmax: bool = False,
+    plan: Optional[plan_mod.ExecutionPlan] = None,
 ) -> dict:
     cfg = configs.get(arch)
+    if plan is not None:
+        run = dataclasses.replace(run, plan=plan)
     if sync_softmax:   # paper-faithful pre-T1 baseline (Fig. 4(b))
-        from repro.config import SoftmaxPhiConfig
-        cfg = dataclasses.replace(
-            cfg, softmax_phi=SoftmaxPhiConfig(phi=None, enabled=False))
+        run = dataclasses.replace(run, sync_softmax=True)
     shape = SHAPES[shape_name]
     mesh_name = "x".join(str(s) for s in mesh_cfg.shape)
     if sync_softmax:
@@ -386,9 +393,18 @@ def main() -> int:
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
     ap.add_argument("--sync-softmax", action="store_true",
-                    help="paper-faithful pre-T1 baseline: disable the "
-                         "unified-max softmax (synchronized scheme)")
+                    help="paper-faithful pre-T1 baseline: dispatch every "
+                         "attention op with the synchronized scheme")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="ExecutionPlan JSON to dispatch by (requires "
+                         "--arch: a plan's provenance pins one config)")
+    ap.add_argument("--tune", action="store_true",
+                    help="tune a fresh plan per arch before lowering "
+                         "(analytical backend; backend/fallback are still "
+                         "forced to xla/off for cost-analysis hygiene)")
     args = ap.parse_args()
+    if args.plan and not args.arch:
+        ap.error("--plan requires --arch (plan provenance pins one config)")
 
     os.makedirs(args.out, exist_ok=True)
     run = RunConfig(grad_compression=args.grad_compression)
@@ -397,6 +413,24 @@ def main() -> int:
         meshes.append(SINGLE_POD)
     if args.mesh in ("multi", "both"):
         meshes.append(MULTI_POD)
+
+    # resolve plans once per arch (a tune sweep / file parse per cell
+    # would be pure waste — cells only vary shape and mesh)
+    plans: dict[str, plan_mod.ExecutionPlan] = {}
+
+    def plan_for(arch: str) -> Optional[plan_mod.ExecutionPlan]:
+        if not (args.tune or args.plan):
+            return None
+        if arch not in plans:
+            cfg = configs.get(arch)
+            if args.tune:
+                tuned = plan_mod.tune(cfg)
+                if args.plan:   # serve.py semantics: tune + save to --plan
+                    tuned.save(args.plan)
+                plans[arch] = tuned
+            else:
+                plans[arch] = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
+        return plans[arch]
 
     failures = 0
     for mesh_cfg in meshes:
@@ -409,7 +443,8 @@ def main() -> int:
             t0 = time.time()
             rec = run_cell(arch, shape_name, mesh_cfg, mesh, run,
                            probes=probes, full=not args.no_full,
-                           sync_softmax=args.sync_softmax)
+                           sync_softmax=args.sync_softmax,
+                           plan=plan_for(arch))
             dt = time.time() - t0
             tag = "OK " if rec["ok"] else "FAIL"
             print(f"[{tag}] {mesh_name:<9} {arch:<16} {shape_name:<12} "

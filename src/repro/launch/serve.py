@@ -9,6 +9,11 @@ paged --overcommit 0.5`` provisions half the worst-case page pool (or set
 policy. The summary line reports per-phase throughput plus preemption and
 page-utilization counters — the scheduler-policy numbers the paper's
 heuristic-dataflow argument cares about.
+
+Kernel dispatch is plan-driven: ``--tune`` runs the offline T3 decision
+flow for the arch and saves a provenanced ``plans/<arch>-<hw>.json``;
+``--plan PATH`` serves with a previously tuned plan (stale plans — wrong
+hardware or config hash — are rejected at load).
 """
 import argparse
 import sys
@@ -41,8 +46,14 @@ def _parse():
                     help="chunked-prefill chunk size (dense-KV families)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0)
-    ap.add_argument("--use-dispatch-table", action="store_true",
-                    help="build the T3 lookup table and route matmuls")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="ExecutionPlan JSON to dispatch kernels by; "
+                         "rejected if its provenance (hardware/config "
+                         "hash) does not match this run")
+    ap.add_argument("--tune", action="store_true",
+                    help="tune a plan offline for this arch (T3 decision "
+                         "flow over every op), save it to --plan (default "
+                         "plans/<arch>-<hw>.json), and serve with it")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args()
 
@@ -53,7 +64,7 @@ def main() -> int:
     import numpy as np
 
     from repro import configs
-    from repro.core.dispatch import tune_table
+    from repro.core import plan as plan_mod
     from repro.models.api import get_model
     from repro.models.kvlayout import pages_for
     from repro.serving.engine import Engine
@@ -64,7 +75,16 @@ def main() -> int:
         cfg = configs.smoke(cfg)
     api = get_model(cfg)
     params = api.init_params(jax.random.PRNGKey(args.seed))
-    table = tune_table(cfg) if args.use_dispatch_table else None
+
+    plan = None
+    if args.tune:
+        plan = plan_mod.tune(cfg)
+        path = args.plan or plan_mod.default_plan_path(cfg)
+        plan.save(path)
+        print(f"tuned plan -> {path}\n  {plan.describe()}")
+    elif args.plan:
+        plan = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
+        print(f"loaded plan {args.plan}\n  {plan.describe()}")
 
     num_pages = args.num_pages
     if num_pages is None and args.cache_kind == "paged":
@@ -74,7 +94,7 @@ def main() -> int:
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                  cache_kind=args.cache_kind, page_size=args.page_size,
                  num_pages=num_pages, prefill_chunk=args.prefill_chunk,
-                 scheduler=args.scheduler, table=table, seed=args.seed)
+                 scheduler=args.scheduler, plan=plan, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature, top_p=args.top_p)

@@ -95,7 +95,6 @@ def main() -> int:
 
     api = get_model(cfg)
     ctx = LayerCtx(cfg=cfg, shard=make_shard_fn(mesh, rules),
-                   use_pallas=False,
                    moe_groups=1 if mesh is None else
                    max(dict(zip(mesh.axis_names, mesh.devices.shape)
                             ).get("data", 1), 1))

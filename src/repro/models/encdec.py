@@ -194,7 +194,7 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
         from repro.kernels import ops
         o = ops.attention_prefill(
             q, k, v, phi_cfg=ctx.phi_cfg, causal=True,
-            use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+            plan=ctx.plan,
         ).reshape(b, s, cfg.q_dim)
         xx = xx + ctx.matmul(o, p_i["attn"]["wo"])
         h = L.norm(cfg, p_i["cross_norm"], xx)
@@ -244,7 +244,7 @@ def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
         from repro.kernels import ops
         o = ops.attention_decode(
             q[:, 0], c_i["xk"], c_i["xv"], enc_lengths,
-            phi_cfg=ctx.phi_cfg, use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+            phi_cfg=ctx.phi_cfg, plan=ctx.plan,
         )
         xx = xx + ctx.matmul(o.reshape(b, 1, cfg.q_dim), p_i["cross"]["wo"])
         h = L.norm(cfg, p_i["mlp_norm"], xx)

@@ -199,13 +199,16 @@ def ring_decode_attention(
     lens = lengths[:, None, None]
     valid = (lens >= w) | (slots < lens)
     phi_cfg = ctx.phi_cfg
-    if phi_cfg.active:
+    dp = ctx.plan.attention_decode
+    if phi_cfg.active and dp.scheme == "unified_max":
         part = smx.async_partial(s, vf.swapaxes(1, 2), phi_cfg.phi, valid)
         out = part.num / part.den[..., None]
-        overflow = jnp.any(part.max_centered > phi_cfg.band[1])
-        sync = smx.sync_partial(s, vf.swapaxes(1, 2), valid)
-        safe = sync.num / jnp.where(sync.den == 0, 1, sync.den)[..., None]
-        out = jax.lax.cond(overflow, lambda: safe, lambda: out)
+        if dp.fallback:
+            overflow = jnp.any(part.max_centered > phi_cfg.band[1])
+            sync = smx.sync_partial(s, vf.swapaxes(1, 2), valid)
+            safe = sync.num / jnp.where(sync.den == 0, 1,
+                                        sync.den)[..., None]
+            out = jax.lax.cond(overflow, lambda: safe, lambda: out)
     else:
         part = smx.sync_partial(s, vf.swapaxes(1, 2), valid)
         out = part.num / jnp.where(part.den == 0, 1, part.den)[..., None]
@@ -295,8 +298,7 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
         from repro.kernels import ops
         o = ops.attention_prefill(
             q, k, v, phi_cfg=ctx.phi_cfg, causal=True,
-            sliding_window=cfg.sliding_window, use_pallas=ctx.use_pallas,
-            fallback=ctx.fallback,
+            sliding_window=cfg.sliding_window, plan=ctx.plan,
         )
         o = o.reshape(b, t, cfg.q_dim)
         attn_out = ctx.matmul(o, p_i["attn"]["wo"])

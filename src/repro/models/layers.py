@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, SoftmaxPhiConfig
-from repro.core.dispatch import DispatchTable
+from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
 from repro.kernels import ops
 
 Params = dict
@@ -31,12 +31,10 @@ class LayerCtx:
 
     cfg: ModelConfig
     shard: ShardFn = no_shard
-    table: Optional[DispatchTable] = None
-    use_pallas: bool = False
-    decode_kv_block: int = 512
-    # False drops the lax.cond overflow-recompute branch (dry-run hygiene:
-    # cost_analysis would count both branches; paper treats P(overflow)≈0)
-    fallback: bool = True
+    # every implementation decision — GEMM routing, softmax scheme, decode
+    # block_k, fallback branches, Pallas vs. XLA backend — lives in the
+    # plan (repro.core.plan); the untuned default is the XLA reference path
+    plan: ExecutionPlan = DEFAULT_PLAN
     # MoE routing group count (= data-parallel shard count at scale)
     moe_groups: int = 1
     # attention combine override, set by the distributed decode path
@@ -51,7 +49,7 @@ class LayerCtx:
         return self.cfg.softmax_phi
 
     def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
-        return ops.matmul(x, w, table=self.table, use_pallas=self.use_pallas)
+        return ops.matmul(x, w, plan=self.plan)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +198,7 @@ def attention_block(
         SoftmaxPhiConfig(enabled=False),
         causal=causal,
         sliding_window=cfg.sliding_window,
-        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        plan=ctx.plan,
     )
     o = ctx.shard(o.reshape(b, s, cfg.q_dim), "act_attn_out")
     return ctx.matmul(o, p["wo"])
@@ -239,8 +237,7 @@ def attention_decode_block(
             qd, cache_k, cache_v, new_len,
             phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
             SoftmaxPhiConfig(enabled=False),
-            block_k=ctx.decode_kv_block,
-            use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+            plan=ctx.plan,
             shard=ctx.shard,
         )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
@@ -314,7 +311,7 @@ def attention_decode_block_paged(
         q[:, 0], pool_k, pool_v, block_tables, new_len,
         phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
         SoftmaxPhiConfig(enabled=False),
-        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        plan=ctx.plan,
         shard=ctx.shard,
     )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
@@ -342,7 +339,7 @@ def attention_chunk_block(
         q, cache_k, cache_v, lengths,
         phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
         SoftmaxPhiConfig(enabled=False),
-        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        plan=ctx.plan,
     )
     o = ctx.shard(o.reshape(b, c, cfg.q_dim), "act_attn_out")
     return ctx.matmul(o, p["wo"]), cache_k, cache_v
@@ -367,7 +364,7 @@ def attention_chunk_block_paged(
         q, pool_k, pool_v, block_tables, lengths,
         phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
         SoftmaxPhiConfig(enabled=False),
-        use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        plan=ctx.plan,
     )
     o = ctx.shard(o.reshape(b, c, cfg.q_dim), "act_attn_out")
     return ctx.matmul(o, p["wo"]), pool_k, pool_v
@@ -396,11 +393,11 @@ def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
 def mlp_block(ctx: LayerCtx, p: Params, x: jax.Array) -> jax.Array:
     cfg = ctx.cfg
     if cfg.activation in ("swiglu", "geglu"):
-        if ctx.use_pallas:
+        if ctx.plan.fused_ffn.fused:
             # T2 extension: single fused kernel for gate+up+epilogue —
             # the (M, F) gate/up tensors never round-trip HBM
             h = ops.fused_ffn(x, p["w_gate"], p["w_up"],
-                              activation=cfg.activation, use_pallas=True)
+                              activation=cfg.activation, plan=ctx.plan)
             h = ctx.shard(h, "act_ffn")
         else:
             g = ctx.matmul(x, p["w_gate"])

@@ -381,7 +381,7 @@ def make_prefill_block(groups: int = 0):
         q, kk, v = L.attention_qkv(ctx, p["attn"], h, positions)
         o = ops.attention_prefill(
             q, kk, v, phi_cfg=ctx.phi_cfg, causal=True,
-            sliding_window=cfg.sliding_window, use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+            sliding_window=cfg.sliding_window, plan=ctx.plan,
         )
         o = ctx.shard(o.reshape(b, s, cfg.q_dim), "act_attn_out")
         x = x + ctx.matmul(o, p["attn"]["wo"])

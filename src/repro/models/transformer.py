@@ -128,7 +128,7 @@ def prefill_block(ctx: LayerCtx, p: Params, x: jax.Array,
     from repro.kernels import ops
     o = ops.attention_prefill(
         q, k, v, phi_cfg=ctx.phi_cfg, causal=True,
-        sliding_window=cfg.sliding_window, use_pallas=ctx.use_pallas, fallback=ctx.fallback,
+        sliding_window=cfg.sliding_window, plan=ctx.plan,
     )
     o = ctx.shard(o.reshape(b, s, cfg.q_dim), "act_attn_out")
     x = x + ctx.matmul(o, p["attn"]["wo"])

@@ -32,6 +32,12 @@ all first-class and swappable:
     relocation-free, and the rebuilt KV is exactly what an uninterrupted
     run would hold, so greedy outputs are preemption-invariant.
 
+  * **One dispatch surface.** Every kernel decision — GEMM routing,
+    softmax scheme, decode ``block_k``, backend — rides in the single
+    ``plan=`` operand (:class:`~repro.core.plan.ExecutionPlan`, tuned
+    offline by :func:`repro.core.plan.tune`); the engine never consults
+    per-op flags, and plans change which kernel runs, never the tokens.
+
   * **Streaming surface.** ``generate(prompt, params)`` yields
     :class:`~repro.serving.request.TokenEvent` as ticks produce them,
     ``abort(rid)`` cancels at any phase, and the classic blocking
@@ -55,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core.dispatch import DispatchTable
+from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
     pages_for
@@ -99,13 +105,13 @@ class Engine:
         num_pages: Optional[int] = None,
         prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
         scheduler: Union[str, Scheduler] = "fcfs",
-        table: Optional[DispatchTable] = None,
-        use_pallas: bool = False,
+        plan: Optional[ExecutionPlan] = None,
         seed: int = 0,
     ):
         self.cfg = cfg
         self.api = get_model(cfg)
-        self.ctx = LayerCtx(cfg=cfg, table=table, use_pallas=use_pallas)
+        self.plan = plan if plan is not None else DEFAULT_PLAN
+        self.ctx = LayerCtx(cfg=cfg, plan=self.plan)
         self.params = params
         self.num_slots = num_slots
         self.max_seq = max_seq

@@ -5,6 +5,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.core import dispatch as dsp
+from repro.core import plan as plan_mod
 
 settings.register_profile("fast", max_examples=20, deadline=None)
 settings.load_profile("fast")
@@ -55,32 +56,34 @@ def test_cost_model_limits():
     assert t_xla <= t_flat * 1.01
 
 
-def test_table_roundtrip_and_fallback():
-    cfg = configs.get("qwen2-0.5b")
-    table = dsp.tune_table(cfg)
-    s = table.to_json()
-    table2 = dsp.DispatchTable.from_json(s)
-    for (k, n), e in table.entries.items():
-        assert table2.entries[(k, n)].m1 == e.m1
-        assert table2.entries[(k, n)].m2 == e.m2
-    # unseen shape falls back to the static policy, never crashes
-    assert table.pick(1, 17, 23) is dsp.Impl.GEMV
-    assert table.pick(64, 17, 23) is dsp.Impl.FLAT_GEMM
-    assert table.pick(4096, 17, 23) is dsp.Impl.XLA_DOT
+def test_unseen_shape_uses_plan_default_policy():
+    """One source of truth: the plan's default ladder routes any [K, N]
+    the tuning sweep never saw (the old static m<=2 / m<128 policy)."""
+    plan = plan_mod.tune(configs.get("qwen2-0.5b"))
+    mp = plan.matmul
+    assert (17, 23) not in mp.entries
+    assert mp.pick(1, 17, 23) is dsp.pick_impl(1, mp.default_m1,
+                                               mp.default_m2)
+    # the untuned default plan carries the conservative static ladder
+    d = plan_mod.MatmulPlan()
+    assert d.pick(1, 17, 23) is dsp.Impl.GEMV
+    assert d.pick(64, 17, 23) is dsp.Impl.FLAT_GEMM
+    assert d.pick(4096, 17, 23) is dsp.Impl.XLA_DOT
 
 
-def test_matmul_routes_by_table():
-    """ops.matmul must produce oracle-equal results whatever impl it picks."""
+def test_matmul_routes_by_plan():
+    """ops.matmul must produce oracle-equal results whatever impl the
+    plan picks (here on the Pallas backend, interpret mode)."""
     import numpy as np
     from repro.kernels import ops, ref
     import jax
     cfg = configs.smoke(configs.get("qwen2-0.5b"))
-    table = dsp.tune_table(cfg)
+    plan = plan_mod.tune(cfg, backend="pallas")
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     for m in (1, 8, 200):
         x = jax.random.normal(k1, (m, 128), jnp.float32)
         w = jax.random.normal(k2, (128, 256), jnp.float32)
-        got = ops.matmul(x, w, table=table, use_pallas=True)
+        got = ops.matmul(x, w, plan=plan)
         np.testing.assert_allclose(got, ref.flat_gemm_ref(x, w),
                                    rtol=2e-4, atol=2e-4)
 
@@ -103,3 +106,42 @@ def test_measured_backend_hook():
     e = dsp.find_inflections(1024, 1024, measure=fake_measure)
     assert e.m1 == 8 and e.m2 == 128
     assert calls, "measure backend must be consulted"
+
+
+def test_block_k_decision_flow():
+    """find_block_k: feasible, from the candidate set, and nondecreasing
+    in the representative KV length (longer decode amortizes more grid
+    steps per byte — the beyond-GEMM analogue of the M1/M2 monotonicity)."""
+    kv_dim = 1024
+    prev = 0
+    for s in (64, 128, 256, 512, 1024, 4096, 32768, 262144):
+        bk = dsp.find_block_k(s, kv_dim)
+        assert bk in dsp.BLOCK_K_CANDIDATES
+        assert bk >= prev, (s, bk, prev)
+        prev = bk
+
+
+def test_chunk_threshold_decision_flow():
+    """More heads -> bigger materialized scores -> lower threshold."""
+    t_few = dsp.find_chunk_threshold(4)
+    t_many = dsp.find_chunk_threshold(64)
+    assert t_many <= t_few
+    assert t_few in dsp.CHUNK_THRESHOLD_CANDIDATES
+
+
+def test_wallclock_measure_runs_and_is_positive():
+    """The fixed timing hook: independent operand keys, warmup, per-iter
+    blocking — must return a sane positive time on any backend."""
+    measure = dsp.wallclock_measure_factory(dtype="float32", warmup=1,
+                                            iters=2)
+    t = measure(dsp.Impl.XLA_DOT, 4, 64, 64)
+    assert t > 0.0
+    assert t < 60.0
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "dbrx-132b"])
+def test_tuned_entries_cover_model_shapes(arch):
+    cfg = configs.get(arch)
+    plan = plan_mod.tune(cfg)
+    for gs in dsp.model_gemm_shapes(cfg):
+        assert (gs.k, gs.n) in plan.matmul.entries

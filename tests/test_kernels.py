@@ -305,8 +305,7 @@ def test_chunk_attention_overflow_falls_back_to_safe():
     q_big = jnp.asarray(rng.normal(size=(b, c, hq, d)), jnp.float32) * 50
     out = ops.attention_chunk(
         q_big, kc, vc, lens,
-        phi_cfg=SoftmaxPhiConfig(phi=0.0, band=(-1.0, 1.0)),
-        use_pallas=False)
+        phi_cfg=SoftmaxPhiConfig(phi=0.0, band=(-1.0, 1.0)))
     safe = ref.attention_chunk_ref(q_big, kc, vc, lens, phi=None)
     # the T1 scheme overflows to inf/nan on these logits, so a finite
     # output close to the safe oracle proves the recompute branch ran
@@ -317,8 +316,7 @@ def test_chunk_attention_overflow_falls_back_to_safe():
     q_small = jnp.asarray(rng.normal(size=(b, c, hq, d)), jnp.float32) * 0.01
     out2 = ops.attention_chunk(
         q_small, kc, vc, lens,
-        phi_cfg=SoftmaxPhiConfig(phi=0.0, band=(-40.0, 40.0)),
-        use_pallas=False)
+        phi_cfg=SoftmaxPhiConfig(phi=0.0, band=(-40.0, 40.0)))
     t1 = ref.attention_chunk_ref(q_small, kc, vc, lens, phi=0.0)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(t1),
                                rtol=1e-5, atol=1e-5)  # T1 branch kept

@@ -21,7 +21,7 @@ TINY = ShapeConfig("tiny", 64, 2, "train")
 
 
 def _ctx(cfg):
-    return LayerCtx(cfg=cfg, use_pallas=False)
+    return LayerCtx(cfg=cfg)
 
 
 def _zoo(archs, keep):

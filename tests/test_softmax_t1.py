@@ -139,8 +139,7 @@ def test_ops_decode_fallback_recovers_safe_result():
     vc = jax.random.normal(jax.random.PRNGKey(0), (b, s, hk, d))
     lengths = jnp.array([s], jnp.int32)
     phi_cfg = SoftmaxPhiConfig(phi=0.0, band=(-8.0, 8.0))
-    out = ops.attention_decode(q, kc, vc, lengths, phi_cfg=phi_cfg,
-                               use_pallas=False)
+    out = ops.attention_decode(q, kc, vc, lengths, phi_cfg=phi_cfg)
     want = ref.attention_decode_ref(q, kc, vc, lengths)
     np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
     assert bool(jnp.all(jnp.isfinite(out)))

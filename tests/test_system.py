@@ -11,7 +11,7 @@ import pytest
 
 from repro import configs
 from repro.config import RunConfig, ShapeConfig
-from repro.core.dispatch import tune_table
+from repro.core.plan import tune
 from repro.models.api import get_model
 from repro.models.layers import LayerCtx
 from repro.serving.engine import Engine
@@ -50,9 +50,9 @@ def test_train_checkpoint_serve_roundtrip():
             lambda: TrainState.create(api.init_params(jax.random.PRNGKey(0))))
         state = mgr.load_state(latest, like)
 
-        table = tune_table(cfg)   # T3 wired into the engine
+        plan = tune(cfg)   # T3 wired into the engine: one tuned surface
         eng = Engine(cfg, state.params, num_slots=2, max_seq=128,
-                     table=table)
+                     plan=plan)
         rng = np.random.default_rng(0)
         out = eng.run([
             (rng.integers(1, cfg.vocab_size, 9 + i).astype(np.int32),
