@@ -1,0 +1,128 @@
+"""Prefix sharing sweep: shared-prefix length x batch size -> pages,
+prefill work, admission capacity.
+
+The capacity story behind refcounted copy-on-write pages: N requests
+sharing a k-token system prompt should charge the pool ~``k/page_size``
+pages ONCE plus a private tail per request, instead of
+``N * k/page_size`` duplicates — and skip re-prefilling the shared
+positions entirely. This sweep runs the same shared-header workload
+through the streaming engine with ``prefix_sharing`` on and off and
+reports, per (prefix length, batch size) cell:
+
+  * peak physical pages used, on vs off (the collapse the refcounts buy),
+  * prompt positions admission skipped (prefill compute saved),
+  * COW forks (writes that had to privatize a shared page), and
+  * derived admission capacity: how many such requests a pool provisioned
+    at the sharing-off peak could host in each mode.
+
+Greedy outputs are asserted bit-identical between the two runs — the
+sweep measures an optimization, not a different model.
+
+Writes ``BENCH_prefix.json`` at the repo root so later PRs can track the
+trajectory (schema: {"rows": [...], "config": {...}}).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro import configs
+from repro.models.api import get_model
+from repro.models.kvlayout import pages_for
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_prefix.json")
+
+PAGE_SIZE = 16
+TAIL_LEN = 8          # private per-request suffix tokens
+MAX_NEW = 4
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== prefix_sharing: shared-prefix length x batch size ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    prefix_lens = (32,) if quick else (32, 64, 128)
+    batch_sizes = (2, 4) if quick else (2, 4, 8)
+    max_seq = 256
+
+    rng = np.random.default_rng(0)
+    widths = [8, 6, 10, 10, 9, 9, 8, 8]
+    print(fmt_row("prefix", "batch", "pages_off", "pages_on", "saved_tk",
+                  "forks", "cap_off", "cap_on", widths=widths))
+    rows = []
+    for k in prefix_lens:
+        header = rng.integers(1, cfg.vocab_size, size=k).astype(np.int32)
+        for n in batch_sizes:
+            prompts = [np.concatenate([header, rng.integers(
+                1, cfg.vocab_size, size=TAIL_LEN).astype(np.int32)])
+                for _ in range(n)]
+
+            def reqs():
+                return [(p, SamplingParams(max_new_tokens=MAX_NEW))
+                        for p in prompts]
+
+            outs = {}
+            engines = {}
+            for sharing in (False, True):
+                eng = Engine(cfg, params, num_slots=n, max_seq=max_seq,
+                             cache_kind="paged", page_size=PAGE_SIZE,
+                             prefill_chunk=PAGE_SIZE,
+                             prefix_sharing=sharing, seed=0)
+                outs[sharing] = eng.run(reqs())
+                engines[sharing] = eng
+            assert outs[True] == outs[False], \
+                "sharing changed greedy outputs — correctness bug"
+
+            off, on = engines[False], engines[True]
+            # admission capacity for a pool provisioned at the off-peak:
+            # every request reserves its admission footprint (prefill
+            # pages + one growth page, capped at the true total) without
+            # sharing; with sharing the header is charged once and each
+            # request adds only its private tail pages
+            budget = off.stats.peak_pages_used
+            per_req = min(pages_for(k + TAIL_LEN, PAGE_SIZE) + 1,
+                          pages_for(k + TAIL_LEN + MAX_NEW, PAGE_SIZE))
+            shared_pages = k // PAGE_SIZE
+            per_tail = max(per_req - shared_pages, 1)
+            cap_off = budget // per_req
+            cap_on = max((budget - shared_pages) // per_tail, 0)
+            row = dict(
+                prefix_len=k, batch=n, page_size=PAGE_SIZE,
+                tail_len=TAIL_LEN, max_new=MAX_NEW,
+                pages_off=off.stats.peak_pages_used,
+                pages_on=on.stats.peak_pages_used,
+                page_savings=1.0 - on.stats.peak_pages_used
+                / max(off.stats.peak_pages_used, 1),
+                shared_prefix_pages=on.stats.shared_prefix_pages,
+                saved_prefill_tokens=on.stats.saved_prefill_tokens,
+                cow_forks=on.stats.cow_forks,
+                capacity_off=cap_off, capacity_on=cap_on,
+            )
+            rows.append(row)
+            print(fmt_row(k, n, row["pages_off"], row["pages_on"],
+                          row["saved_prefill_tokens"], row["cow_forks"],
+                          cap_off, cap_on, widths=widths))
+
+    result = {
+        "config": dict(arch=cfg.name, page_size=PAGE_SIZE,
+                       tail_len=TAIL_LEN, max_new=MAX_NEW, max_seq=max_seq,
+                       prefix_lens=list(prefix_lens),
+                       batch_sizes=list(batch_sizes)),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  [prefix_sharing -> {os.path.normpath(OUT_PATH)}]")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -18,7 +18,7 @@ def main() -> int:
 
     from benchmarks import (attention_softmax, decode_engine, dispatch_table,
                             flat_gemm_sweep, paged_decode, prefill_engine,
-                            roofline_report, scheduler_sweep)
+                            prefix_sharing, roofline_report, scheduler_sweep)
 
     results = {}
     for name, mod in [
@@ -28,6 +28,7 @@ def main() -> int:
         ("decode_engine", decode_engine),
         ("paged_decode", paged_decode),
         ("scheduler_sweep", scheduler_sweep),
+        ("prefix_sharing", prefix_sharing),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:

@@ -9,12 +9,37 @@ Importing this module (for the side effect, like
 keeps the single stable-API idiom.
 
 Imported by :mod:`repro` itself so any entry point gets the alias.
+
+**Partial-manual support gate.** On the 0.4.x series the adapter makes
+partial-manual ``shard_map`` (``axis_names`` a strict subset of the mesh,
+``auto`` non-empty) *trace*, but the era's XLA SPMD partitioner dies in a
+``CHECK`` inside ``IsManualSubgroup`` when it meets the resulting
+partial-manual subgroups — a process **abort**, not a Python exception,
+so a single affected test kills the whole pytest run. ``PARTIAL_MANUAL_OK``
+records (before the shim installs, while the distinction is still
+observable) whether the running jax has the native stable API — the same
+releases whose partitioner handles partial-manual subgroups. Test modules
+gate the four multi-device paths that need partial-manual collectives
+(crosspod int8 allreduce, pipeline grad, split-KV collective claim,
+manual MoE dispatch) on this flag so the slow lane *completes* on old
+jax instead of being killed mid-run.
 """
 from __future__ import annotations
 
 import jax
 
-if not hasattr(jax, "shard_map"):  # pragma: no cover - version dependent
+#: True when jax ships the stable ``jax.shard_map`` natively — the proxy
+#: for "the XLA partitioner survives partial-manual subgroups". Recorded
+#: before the adapter below installs the attribute, which would otherwise
+#: erase the signal.
+PARTIAL_MANUAL_OK: bool = hasattr(jax, "shard_map")
+
+#: skip/xfail message shared by the gated test modules
+PARTIAL_MANUAL_REASON = (
+    "old-jax XLA SPMD partitioner aborts (IsManualSubgroup CHECK) on "
+    "partial-manual shard_map; needs native jax.shard_map")
+
+if not PARTIAL_MANUAL_OK:  # pragma: no cover - version dependent
     from jax.experimental.shard_map import shard_map as _exp_shard_map
 
     def _shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,

@@ -6,9 +6,12 @@
 Pool pressure and preemption are drivable from the CLI: ``--cache-kind
 paged --overcommit 0.5`` provisions half the worst-case page pool (or set
 ``--num-pages`` exactly), and ``--scheduler`` picks the admission/victim
-policy. The summary line reports per-phase throughput plus preemption and
-page-utilization counters — the scheduler-policy numbers the paper's
-heuristic-dataflow argument cares about.
+policy. ``--prefix-sharing`` (with ``--shared-prefix N`` to synthesize a
+common system prompt) maps identical page-aligned prompt prefixes onto
+refcounted copy-on-write pages. The summary line reports per-phase
+throughput plus preemption, page-utilization, and prefix-sharing counters
+— the scheduler-policy numbers the paper's heuristic-dataflow argument
+cares about.
 
 Kernel dispatch is plan-driven: ``--tune`` runs the offline T3 decision
 flow for the arch and saves a provenanced ``plans/<arch>-<hw>.json``;
@@ -42,6 +45,14 @@ def _parse():
     ap.add_argument("--scheduler", default="fcfs",
                     choices=["fcfs", "sjf", "pagefair"],
                     help="admission/preemption policy")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="map identical page-aligned prompt prefixes onto "
+                         "shared refcounted pages (copy-on-write; paged "
+                         "cache only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "synthetic prompt (system-prompt workload — makes "
+                         "--prefix-sharing visible in the summary)")
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="chunked-prefill chunk size (dense-KV families)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -94,13 +105,16 @@ def main() -> int:
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                  cache_kind=args.cache_kind, page_size=args.page_size,
                  num_pages=num_pages, prefill_chunk=args.prefill_chunk,
-                 scheduler=args.scheduler, plan=plan, seed=args.seed)
+                 scheduler=args.scheduler, plan=plan,
+                 prefix_sharing=args.prefix_sharing, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature, top_p=args.top_p)
+    header = rng.integers(1, cfg.vocab_size,
+                          size=args.shared_prefix).astype(np.int32)
     reqs = [
-        (rng.integers(1, cfg.vocab_size,
-                      size=args.prompt_len).astype(np.int32), sp)
+        (np.concatenate([header, rng.integers(
+            1, cfg.vocab_size, size=args.prompt_len).astype(np.int32)]), sp)
         for _ in range(args.requests)
     ]
 
@@ -116,6 +130,10 @@ def main() -> int:
         util = eng.stats.peak_pages_used / eng.pool.num_pages
         line += (f", peak pages {eng.stats.peak_pages_used}"
                  f"/{eng.pool.num_pages} = {util:.0%}")
+    if args.prefix_sharing:
+        line += (f", {eng.stats.shared_prefix_pages} shared pages, "
+                 f"{eng.stats.saved_prefill_tokens} prefill tokens saved, "
+                 f"{eng.stats.cow_forks} COW forks")
     print(line + ")")
     for rid in sorted(out)[:4]:
         print(f"  req {rid}: {out[rid]} "

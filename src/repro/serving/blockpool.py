@@ -1,12 +1,34 @@
-"""Block-paged KV cache management (host side).
+"""Block-paged KV cache management (host side): a refcounted page pool
+with copy-on-write prefix sharing.
 
-The paper's §3/Fig. 2 critique of static dataflow applies to memory as much
-as compute: a dense ``(num_slots, max_seq)`` cache provisions every slot for
-the worst-case sequence, so short requests strand capacity and admission is
-bounded by slots, not by actual KV bytes. This module replaces that with a
-**block pool**: KV storage is a flat array of fixed-size pages shared by all
-sequences, each sequence owns an ordered list of page ids (its *block
-table*), and pages cycle through an explicit LIFO free-list on release.
+The paper's §3/Fig. 2 critique of static dataflow applies to memory as
+much as compute: a dense ``(num_slots, max_seq)`` cache provisions every
+slot for the worst-case sequence, so short requests strand capacity and
+admission is bounded by slots, not by actual KV bytes. This module
+replaces that with a **block pool**: KV storage is a flat array of
+fixed-size pages shared by all sequences, each sequence owns an ordered
+list of page ids (its *block table*), and pages cycle through an explicit
+LIFO free-list.
+
+Pages are **refcounted**, which buys two things on top of plain paging:
+
+  * **Prefix sharing.** N requests with the same system prompt /
+    few-shot header map their page-aligned common prefix onto *one*
+    physical copy: admission consults a
+    :class:`~repro.serving.prefix.PrefixIndex` (hash chain of page-sized
+    token chunks -> live page), bumps the refcount of every matched page
+    (:meth:`BlockPool.share`), and prefills only the unshared suffix.
+    ``free`` decrements; a page returns to the free list — and leaves the
+    index — only when its last owner lets go, so a victim's release never
+    tears pages out from under the sequences still reading them.
+
+  * **Copy-on-write.** Shared pages are immutable: the first write into a
+    page with refcount > 1 forks it — the manager allocates a fresh page,
+    patches the writer's block table, and drops one ref
+    (:meth:`PagedSlotManager.fork_for_write`); the engine copies the
+    ``(layers, page_size, kv_heads, head_dim)`` slab on device. Everything
+    downstream (decode, preemption, release) then treats the fork like any
+    privately owned page.
 
 Device layout (see :func:`repro.models.transformer.init_cache` with a
 :class:`~repro.models.kvlayout.PagedLayout`):
@@ -16,26 +38,35 @@ Device layout (see :func:`repro.models.transformer.init_cache` with a
 Logical position ``p`` of the sequence in slot ``s`` lives at physical
 ``(block_tables[s, p // page_size], p % page_size)``. Block tables are a
 dense ``(num_slots, max_pages_per_seq)`` int32 array handed to the jitted
-decode/prefill-chunk steps each tick; unassigned entries hold the
-out-of-bounds sentinel ``num_pages`` — KV scatters through them are
-dropped (``mode="drop"``), and reads clamp to a real page whose contents
-the attention length-mask discards. Correctness of empty slots in a
-partially occupied batch depends on that sentinel: a 0 entry would alias a
-real page another sequence may own.
+decode/prefill-chunk steps each tick — **cached device-side** by the
+manager and rebuilt only when some table actually changed (alloc, lazy
+growth, release, COW fork), so steady-state decode ticks reuse the
+device-resident operand. Unassigned entries hold the out-of-bounds
+sentinel ``num_pages`` — KV scatters through them are dropped
+(``mode="drop"``), and reads clamp to a real page whose contents the
+attention length-mask discards. Correctness of empty slots in a partially
+occupied batch depends on that sentinel: a 0 entry would alias a real
+page another sequence may own.
 
 Two classes:
 
-  * :class:`BlockPool` — the free-list allocator (no device state).
+  * :class:`BlockPool` — the refcounting free-list allocator (no device
+    state). Invariant: every page is either on the free list with
+    refcount 0, or allocated with refcount >= 1; the sum of refcounts
+    equals the ownership multiset across slot block tables
+    (:meth:`PagedSlotManager.check` enforces the cross-structure half).
   * :class:`PagedSlotManager` — drop-in replacement for
     :class:`repro.serving.kvcache.SlotManager` that additionally owns the
-    per-slot block tables. Allocation is **lazy**: admission reserves
-    pages for the tokens that will be prefilled (plus one decode growth
-    page of headroom), and each decode tick grows a sequence's table
-    page-by-page through :meth:`ensure` — so a
-    pool can be overcommitted below worst-case footprint and the engine's
-    scheduler preempts a victim (pages freed, request re-queued) when
-    :meth:`ensure` reports the pool dry. The block tables make preemption
-    relocation-free: a re-admitted sequence just gets fresh pages.
+    per-slot block tables and (optionally) the prefix index. Allocation
+    is **lazy**: admission reserves pages for the tokens that will
+    actually be prefilled (shared prefix excluded) plus one decode growth
+    page of headroom, and each decode tick grows a sequence's table
+    page-by-page through :meth:`ensure` — so a pool can be overcommitted
+    below worst-case footprint and the engine's scheduler preempts a
+    victim (refs dropped, request re-queued) when :meth:`ensure` reports
+    the pool dry. The block tables make preemption relocation-free: a
+    re-admitted sequence just gets fresh pages — or re-maps its shared
+    prefix if the pages survived through another owner.
 """
 from __future__ import annotations
 
@@ -47,10 +78,11 @@ import numpy as np
 from repro.models.kvlayout import pages_for  # noqa: F401  (re-export: the
 # one page ceil-div definition, shared with layouts/engine/benchmarks)
 from repro.serving.kvcache import Slot, SlotManager
+from repro.serving.prefix import PrefixIndex
 
 
 class BlockPool:
-    """Fixed-size page allocator over ``num_pages`` physical pages."""
+    """Refcounted fixed-size page allocator over ``num_pages`` pages."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages <= 0 or page_size <= 0:
@@ -59,7 +91,7 @@ class BlockPool:
         self.page_size = page_size
         # LIFO: a just-freed (hot) page is reused first
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}     # page -> refcount (>= 1)
 
     @property
     def free_pages(self) -> int:
@@ -67,42 +99,84 @@ class BlockPool:
 
     @property
     def used_pages(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    @property
+    def total_refs(self) -> int:
+        """Sum of refcounts = what a share-less pool would have used."""
+        return sum(self._ref.values())
+
+    def allocated_pages(self) -> set:
+        """Snapshot of page ids with refcount >= 1."""
+        return set(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_for(self, positions: int) -> int:
         """Pages needed to store ``positions`` KV entries."""
         return pages_for(positions, self.page_size)
 
     def alloc(self, n: int) -> Optional[list[int]]:
-        """Pop ``n`` pages off the free list; None if not enough remain."""
+        """Pop ``n`` pages off the free list (refcount 1 each); None if
+        not enough remain."""
         if n < 0:
             raise ValueError("cannot allocate a negative page count")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: list[int]) -> None:
+    def share(self, pages: list[int]) -> None:
+        """Add one owner to each (already allocated) page."""
         for p in pages:
-            if p not in self._used:
+            if p not in self._ref:
+                raise ValueError(f"cannot share unallocated page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: list[int]) -> list[int]:
+        """Drop one ref per page; pages reaching refcount 0 return to the
+        free list. Returns the pages that actually **died** — the caller
+        (slot manager) purges those from the prefix index so a stale key
+        can never resolve to a recycled page."""
+        for p in pages:
+            if p not in self._ref:
                 raise ValueError(f"double free / foreign page {p}")
-            self._used.remove(p)
-            self._free.append(p)
+        dead = []
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+                dead.append(p)
+        return dead
 
     def check(self) -> None:
         """Invariant check (used by the property tests): every page is on
-        exactly one side of the free/used split."""
+        exactly one side of the free/allocated split, and every allocated
+        page has a positive refcount."""
         free = set(self._free)
         assert len(free) == len(self._free), "free list holds duplicates"
-        assert not (free & self._used), "page both free and allocated"
-        assert free | self._used == set(range(self.num_pages)), \
+        assert not (free & set(self._ref)), "page both free and allocated"
+        assert free | set(self._ref) == set(range(self.num_pages)), \
             "page leaked out of the pool"
+        assert all(r >= 1 for r in self._ref.values()), \
+            "allocated page with refcount < 1"
 
 
 @dataclasses.dataclass
 class PagedSlot(Slot):
     pages: list = dataclasses.field(default_factory=list)
+    # prefix-sharing admission metadata (all zero when sharing is off)
+    shared_len: int = 0          # prefix positions mapped onto shared pages
+    prefill_start: int = 0       # first position the engine must prefill
+    prefill_level: int = 0       # same-wave ordering: prefill after every
+    #                              slot whose pending pages this one mapped
+    pending_fork: Optional[tuple] = None   # (src, dst): slab copy the
+    #                              engine owes before this slot's prefill
 
 
 class PagedSlotManager(SlotManager):
@@ -111,21 +185,49 @@ class PagedSlotManager(SlotManager):
     Inherits the ``SlotManager`` tick-loop interface (``lengths`` /
     ``tick`` and the admission scan) so the engine can switch cache kinds
     without touching its loop. Admission requires pages for the tokens
-    about to be prefilled plus one growth page; decode-time growth goes
-    through :meth:`ensure` (lazy allocation), and release returns every
-    page to the free list.
+    about to be prefilled plus one growth page — minus whatever prefix the
+    :class:`~repro.serving.prefix.PrefixIndex` maps onto existing pages
+    (``prefix_index=None`` disables sharing); decode-time growth goes
+    through :meth:`ensure` (lazy allocation), writes into shared pages
+    fork through :meth:`fork_for_write`, and release drops one ref per
+    page — the free list only sees pages whose last owner let go.
     """
 
-    def __init__(self, num_slots: int, max_seq: int, pool: BlockPool):
+    def __init__(self, num_slots: int, max_seq: int, pool: BlockPool,
+                 prefix_index: Optional[PrefixIndex] = None):
         self.pool = pool
+        self.prefix = prefix_index
+        if prefix_index is not None and \
+                prefix_index.page_size != pool.page_size:
+            raise ValueError("prefix index / pool page_size mismatch")
         self.max_pages_per_seq = pool.pages_for(max_seq)
+        # dense (num_slots, max_pages_per_seq) block-table operand, cached
+        # device-side; rebuilt only when a table changed (alloc / ensure /
+        # release / COW fork) so steady-state decode ticks reuse it
+        self._bt_cache = None
+        self._bt_dirty = True
         super().__init__(num_slots, max_seq)
 
     def _empty_slot(self) -> PagedSlot:
         return PagedSlot()
 
-    def _make_slot(self, request_id: int, prompt_len: int,
-                   max_new: int) -> Optional[PagedSlot]:
+    def try_assign(self, request_id: int, prompt_len: int, max_new: int,
+                   tokens=None) -> Optional[int]:
+        idx = super().try_assign(request_id, prompt_len, max_new,
+                                 tokens=tokens)
+        if idx is not None:
+            self._bt_dirty = True
+            if self.prefix is not None and tokens is not None:
+                # promise this slot's full prompt pages to later arrivals
+                # (entries pending at this slot's wave level until its
+                # prefill commits them)
+                self.prefix.register(
+                    tokens, self.slots[idx].pages,
+                    level=self.slots[idx].prefill_level)
+        return idx
+
+    def _make_slot(self, request_id: int, prompt_len: int, max_new: int,
+                   tokens=None) -> Optional[PagedSlot]:
         worst = self.pool.pages_for(prompt_len + max_new)
         if worst > self.pool.num_pages:
             # can never be satisfied, not even by an empty pool — raise like
@@ -135,18 +237,52 @@ class PagedSlotManager(SlotManager):
             raise ValueError(
                 f"request {request_id} needs {worst} pages > pool size "
                 f"{self.pool.num_pages} (page_size {self.pool.page_size})")
-        # lazy: reserve what prefill will write plus ONE decode growth page
-        # (capped at the request's true total footprint) — without the
-        # headroom a request admitted into a dry pool would pay the whole
-        # chunked prefill and be preempted on its very first decode write,
-        # thrashing one token per re-prefill. Further growth goes through
-        # ensure(), preempting on pool exhaustion.
+
+        ps = self.pool.page_size
+        shared: list[int] = []
+        level = 0
+        fork_src: Optional[int] = None
+        if self.prefix is not None and tokens is not None and prompt_len:
+            m = self.prefix.match(tokens)
+            shared = list(m.pages)
+            if shared and len(shared) * ps == prompt_len:
+                # prompt fully covered: the tail page still must yield the
+                # last-token logits, so the engine re-runs the final chunk.
+                # A committed tail is forked (COW — the rewrite lands in a
+                # private copy); a pending tail has no content to copy yet,
+                # so just prefill that page ourselves.
+                if m.tail_pending:
+                    shared.pop()
+                else:
+                    fork_src = shared.pop()
+            if m.pending_level >= 0:
+                level = m.pending_level + 1
+        n_shared = len(shared)
+        shared_len = (n_shared + (1 if fork_src is not None else 0)) * ps
+
+        # lazy: reserve what prefill will actually write (shared prefix
+        # excluded; the COW fork's destination counts as a write) plus ONE
+        # decode growth page (capped at the request's true total
+        # footprint) — without the headroom a request admitted into a dry
+        # pool would pay the whole chunked prefill and be preempted on its
+        # very first decode write, thrashing one token per re-prefill.
+        # Further growth goes through ensure(), preempting on exhaustion.
         need = min(self.pool.pages_for(prompt_len) + 1,
-                   self.pool.pages_for(prompt_len + max_new))
-        pages = self.pool.alloc(need)
-        if pages is None:
-            return None
-        return PagedSlot(request_id, prompt_len, 0, max_new, pages=pages)
+                   self.pool.pages_for(prompt_len + max_new)) - n_shared
+        fresh = self.pool.alloc(need)
+        if fresh is None:
+            return None                  # no refs taken — side-effect free
+        self.pool.share(shared)
+        slot = PagedSlot(request_id, prompt_len, 0, max_new,
+                         pages=shared + fresh,
+                         shared_len=shared_len, prefill_level=level)
+        if fork_src is not None:
+            # block table already points at the fork destination
+            # (pages[n_shared] = fresh[0]); the engine copies the slab
+            # before prefill, then re-runs the final chunk into it
+            slot.pending_fork = (fork_src, fresh[0])
+        slot.prefill_start = min(shared_len, prompt_len)
+        return slot
 
     def ensure(self, idx: int, positions: int) -> bool:
         """Grow slot ``idx``'s block table to cover ``positions`` KV
@@ -160,38 +296,102 @@ class PagedSlotManager(SlotManager):
         if got is None:
             return False
         s.pages.extend(got)
+        self._bt_dirty = True
         return True
+
+    def fork_for_write(self, idx: int, start: int, end: int):
+        """Copy-on-write hook: before slot ``idx`` writes KV positions
+        ``[start, end)``, fork every covered page whose refcount > 1 —
+        allocate a private destination, patch the block table, drop one
+        ref on the source. Returns the ``(src, dst)`` pairs whose
+        device slabs the engine must copy, or ``None`` when the pool is
+        dry — in which case every fork this call already made is rolled
+        back (table restored, ref re-taken, destination freed), so the
+        caller preempts and retries against unchanged state and can
+        never skip a pending slab copy."""
+        s = self.slots[idx]
+        ps = self.pool.page_size
+        forked: list[tuple[int, int, int]] = []     # (page idx, src, dst)
+        for pi in range(start // ps, (max(end, start + 1) - 1) // ps + 1):
+            if pi >= len(s.pages):
+                break                    # growth is ensure()'s job
+            src = s.pages[pi]
+            if self.pool.refcount(src) <= 1:
+                continue                 # private already — write in place
+            got = self.pool.alloc(1)
+            if got is None:
+                for pj, prev, dst in forked:
+                    s.pages[pj] = prev
+                    self.pool.share([prev])
+                    self.pool.free([dst])
+                self._bt_dirty = True
+                return None
+            dst = got[0]
+            self.pool.free([src])        # drop our ref; survivors keep it
+            s.pages[pi] = dst
+            self._bt_dirty = True
+            forked.append((pi, src, dst))
+        return [(src, dst) for _pi, src, dst in forked]
+
+    def commit_prefix(self, idx: int, tokens) -> None:
+        """Prefill for slot ``idx`` completed: the full prompt pages now
+        hold real KV, so pending index entries become matchable-safe and
+        this slot's own fresh full pages stay registered for the next
+        arrival."""
+        if self.prefix is not None:
+            self.prefix.commit(tokens)
 
     def release(self, idx: int) -> None:
         s = self.slots[idx]
         if s.pages:
-            self.pool.free(s.pages)
+            for page in self.pool.free(s.pages):
+                if self.prefix is not None:
+                    self.prefix.drop_page(page)
+            self._bt_dirty = True
         super().release(idx)
 
-    def block_tables(self) -> np.ndarray:
-        """Dense (num_slots, max_pages_per_seq) int32 block-table array.
+    def block_tables(self):
+        """Dense (num_slots, max_pages_per_seq) int32 block-table operand
+        for the jitted steps — a **cached device array**, rebuilt only
+        when some slot's table changed since the last call, so
+        steady-state decode ticks hand the model the same device-resident
+        buffer instead of re-uploading an unchanged table every tick.
 
         Unassigned entries hold the out-of-bounds sentinel ``num_pages``:
-        KV scatters through them are dropped (so an empty slot in the batch
-        can never corrupt a page another sequence owns) and reads clamp to
-        a real page whose contents the attention length-mask discards.
+        KV scatters through them are dropped (so an empty slot in the
+        batch can never corrupt a page another sequence owns) and reads
+        clamp to a real page whose contents the attention length-mask
+        discards.
         """
-        bt = np.full((len(self.slots), self.max_pages_per_seq),
-                     self.pool.num_pages, np.int32)
-        for i, s in enumerate(self.slots):
-            if s.pages:
-                bt[i, :len(s.pages)] = s.pages
-        return bt
+        if self._bt_dirty or self._bt_cache is None:
+            import jax.numpy as jnp
+            bt = np.full((len(self.slots), self.max_pages_per_seq),
+                         self.pool.num_pages, np.int32)
+            for i, s in enumerate(self.slots):
+                if s.pages:
+                    bt[i, :len(s.pages)] = s.pages
+            self._bt_cache = jnp.asarray(bt)
+            self._bt_dirty = False
+        return self._bt_cache
 
     def check(self) -> None:
-        """Cross-structure invariants for the property tests."""
+        """Cross-structure invariants for the property tests: free/ref
+        conservation in the pool, and — the refcount invariant — the
+        ownership multiset across slot block tables equals the pool's
+        refcounts exactly."""
         self.pool.check()
-        owned: list[int] = []
+        owned: dict[int, int] = {}
         for s in self.slots:
             if s.free:
                 assert not s.pages, "free slot still holds pages"
-            owned.extend(s.pages)
-        assert len(owned) == len(set(owned)), \
-            "page owned by two sequences (double allocation)"
-        assert set(owned) == self.pool._used, \
+            for p in s.pages:
+                owned[p] = owned.get(p, 0) + 1
+        for s in self.slots:
+            assert len(set(s.pages)) == len(s.pages), \
+                "one slot maps the same page twice (fork aliased)"
+        assert {p: self.pool.refcount(p) for p in owned} == owned, \
+            "refcounts out of sync with slot ownership multiset"
+        assert set(owned) == self.pool.allocated_pages(), \
             "pool used-set out of sync with slot block tables"
+        if self.prefix is not None:
+            self.prefix.check(self.pool.allocated_pages())

@@ -32,6 +32,17 @@ all first-class and swappable:
     relocation-free, and the rebuilt KV is exactly what an uninterrupted
     run would hold, so greedy outputs are preemption-invariant.
 
+  * **Prefix sharing + copy-on-write.** With ``prefix_sharing=True``
+    (paged only), admission consults a
+    :class:`~repro.serving.prefix.PrefixIndex` mapping page-aligned
+    token-chunk hash chains to live pages: a request whose prompt prefix
+    is already resident bumps refcounts instead of allocating, and
+    prefills only the unshared suffix. Shared pages are immutable — the
+    first write into one forks it (fresh page + device slab copy +
+    block-table patch), a victim's release only drops refs (surviving
+    sharers keep the pages), and chunk boundaries stay on the share-less
+    grid, so greedy outputs are bit-identical with sharing on or off.
+
   * **One dispatch surface.** Every kernel decision — GEMM routing,
     softmax scheme, decode ``block_k``, backend — rides in the single
     ``plan=`` operand (:class:`~repro.core.plan.ExecutionPlan`, tuned
@@ -68,6 +79,7 @@ from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
 from repro.models.layers import LayerCtx
 from repro.serving.blockpool import BlockPool, PagedSlotManager
 from repro.serving.kvcache import SlotManager
+from repro.serving.prefix import PrefixIndex
 from repro.serving.request import (FinishReason, Phase, RequestState,
                                    SamplingParams, TokenEvent)
 from repro.serving.sampling import sample
@@ -90,6 +102,12 @@ class EngineStats:
     aborted: int = 0
     preemptions: int = 0
     peak_pages_used: int = 0
+    # prefix sharing (all zero unless Engine(prefix_sharing=True))
+    shared_prefix_pages: int = 0     # page mappings served by refcount
+    #                                  bumps instead of fresh allocations
+    saved_prefill_tokens: int = 0    # prompt positions admission skipped
+    #                                  because their KV was already resident
+    cow_forks: int = 0               # shared pages privatized by a write
 
 
 class Engine:
@@ -106,6 +124,7 @@ class Engine:
         prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
+        prefix_sharing: bool = False,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -122,7 +141,12 @@ class Engine:
             prefill_chunk if self.api.supports_chunked_prefill else 0)
 
         self.layout: KVLayout
+        self.prefix: Optional[PrefixIndex] = None
         if cache_kind == "dense":
+            if prefix_sharing:
+                raise ValueError(
+                    "prefix_sharing needs refcounted pages; "
+                    "use cache_kind='paged'")
             self.layout = DenseLayout(num_slots, max_seq)
             self.slots: SlotManager = SlotManager(num_slots, max_seq)
             self.pool = None
@@ -135,6 +159,14 @@ class Engine:
                 raise ValueError(
                     "cache_kind='paged' requires chunked prefill "
                     "(prefill_chunk > 0)")
+            if prefix_sharing and page_size % self.prefill_chunk:
+                # shared prefixes are page-aligned; keeping every prefill
+                # chunk boundary on the same global c-grid as a share-less
+                # run is what makes outputs bit-identical (fp reductions
+                # split at identical positions), and that needs c | PS
+                raise ValueError(
+                    f"prefix_sharing requires page_size ({page_size}) to "
+                    f"be a multiple of prefill_chunk ({self.prefill_chunk})")
             # default pool = same KV bytes as the dense cache; size it
             # smaller to overcommit (lazy growth then preempts on dry pool)
             pool = BlockPool(
@@ -143,7 +175,10 @@ class Engine:
                 page_size,
             )
             self.layout = PagedLayout(pool.num_pages, page_size)
-            self.slots = PagedSlotManager(num_slots, max_seq, pool)
+            if prefix_sharing:
+                self.prefix = PrefixIndex(page_size)
+            self.slots = PagedSlotManager(num_slots, max_seq, pool,
+                                          prefix_index=self.prefix)
             self.pool = pool
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
@@ -173,6 +208,15 @@ class Engine:
                 self.ctx, p, t, cl, c, le, block_tables=bt),
             donate_argnums=(3,),
         ) if self.prefill_chunk else None
+        # COW fork: copy one page's (layers, page_size, kv_heads, head_dim)
+        # slab to a privately owned destination page (donated in-place
+        # update; src/dst trace as scalars so every fork reuses one
+        # compile)
+        self._copy_page = jax.jit(
+            lambda c, src, dst: jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), c),
+            donate_argnums=(0,),
+        ) if cache_kind == "paged" else None
         self._prefill_cache = {}  # bucketed P -> jitted batched prefill
 
     # -- public API -----------------------------------------------------------
@@ -326,15 +370,26 @@ class Engine:
 
     def _admit(self) -> list[TokenEvent]:
         """Offer slots (and prefill pages) to waiting requests in the
-        scheduler's order; prefill the admitted wave in one batch."""
+        scheduler's order; prefill the admitted wave in one batch.
+
+        With prefix sharing, admission hands the slot manager the exact
+        prefill tokens so the prefix index can map page-aligned shared
+        prefixes onto live pages (refcount bumps instead of allocations).
+        A request whose match includes pages *promised by an earlier
+        request in this same wave* is assigned a later prefill level —
+        the wave then prefills level by level, so shared pages are always
+        written before any sharer computes attention over them.
+        """
         if not self.waiting:
             return []
         admitted: list[tuple[int, RequestState]] = []
+        levels: dict[int, int] = {}
         for state in self.scheduler.admission_order(self.waiting):
-            n_prefill = len(state.prefill_tokens())
+            toks = state.prefill_tokens()
             idx = self.slots.try_assign(
-                state.rid, n_prefill,
-                max(state.params.max_new_tokens - state.generated, 1))
+                state.rid, len(toks),
+                max(state.params.max_new_tokens - state.generated, 1),
+                tokens=toks if self.prefix is not None else None)
             if idx is None:
                 if not self.scheduler.allow_skip:
                     break      # head-of-line blocking (FCFS no-starvation)
@@ -344,13 +399,63 @@ class Engine:
             self.by_slot[idx] = state
             admitted.append((idx, state))
             self.stats.admitted += 1
+            levels[idx] = 0
+            if self.prefix is not None:
+                slot = self.slots.slots[idx]
+                levels[idx] = slot.prefill_level
+                # the COW-fork destination is private, not shared
+                state.shared_len = slot.shared_len - (
+                    self.pool.page_size if slot.pending_fork else 0)
+                self.stats.shared_prefix_pages += \
+                    state.shared_len // self.pool.page_size
+                self.stats.saved_prefill_tokens += \
+                    self._chunk_start(idx, len(toks))
         if not admitted:
             return []
         self.waiting = [s for s in self.waiting if s.slot is None]
         self._note_page_pressure()
+        if self.prefix is not None:
+            self._apply_pending_forks(admitted)
         if self.prefill_chunk:
-            return self._prefill_chunked(admitted)
+            events: list[TokenEvent] = []
+            for lv in sorted(set(levels.values())):
+                events += self._prefill_chunked(
+                    [(i, s) for i, s in admitted if levels[i] == lv])
+            return events
         return self._prefill_batched(admitted)
+
+    def _apply_pending_forks(
+            self, admitted: list[tuple[int, RequestState]]) -> None:
+        """Perform the slab copies admission promised: a fully-covered
+        prompt forked its last shared page so the final-chunk re-run (the
+        write that recovers the last-token logits) lands in a private
+        copy. Sources are always committed pages, so copying before any
+        prefill of this wave is safe."""
+        for idx, _state in admitted:
+            slot = self.slots.slots[idx]
+            fork = getattr(slot, "pending_fork", None)
+            if fork:
+                src, dst = fork
+                self.cache = self._copy_page(self.cache, src, dst)
+                slot.pending_fork = None
+                self.stats.cow_forks += 1
+
+    def _chunk_start(self, idx: int, n_prefill: int) -> int:
+        """First position slot ``idx``'s chunked prefill must process.
+
+        The shared prefix is skipped, except that at least the final
+        prompt token must run (its logits seed decode). The start is
+        floored to the global chunk grid so every chunk boundary matches
+        a share-less run exactly — identical fp-reduction splits are what
+        keep greedy outputs bit-identical with sharing on vs off (the
+        re-run positions rewrite byte-identical KV, into the COW fork
+        when they fall inside a shared page).
+        """
+        start = getattr(self.slots.slots[idx], "prefill_start", 0)
+        if start <= 0:
+            return 0
+        start = min(start, max(n_prefill - 1, 0))
+        return (start // self.prefill_chunk) * self.prefill_chunk
 
     # -- chunked + batched prefill (dense-KV families) -------------------------
 
@@ -362,14 +467,19 @@ class Engine:
         consume their next chunk, every other slot is a spectator
         (``chunk_lens == 0`` — nothing written). One compiled shape total.
         Re-admitted (preempted) requests prefill ``prompt + generated``,
-        rebuilding exactly the KV an uninterrupted run would hold.
+        rebuilding exactly the KV an uninterrupted run would hold — unless
+        the prefix index still maps their prefix, in which case prefill
+        starts at the first unshared chunk boundary (``_chunk_start``) and
+        the shared pages are simply read through the block table.
         """
         c = self.prefill_chunk
         seqs = {idx: state.prefill_tokens() for idx, state in items}
-        progress = {idx: 0 for idx, _ in items}
+        progress = {idx: self._chunk_start(idx, len(seqs[idx]))
+                    for idx, _ in items}
         plens = {idx: max(len(seqs[idx]), 1) for idx, _ in items}
         final_logits: dict[int, jax.Array] = {}
-        n_steps = -(-max(plens.values()) // c)
+        n_steps = max(-(-(plens[idx] - progress[idx]) // c)
+                      for idx, _ in items)
         for _ in range(n_steps):
             tokens = np.zeros((self.num_slots, c), np.int32)
             chunk_lens = np.zeros((self.num_slots,), np.int32)
@@ -392,6 +502,11 @@ class Engine:
                     progress[idx] += int(chunk_lens[idx])
                     if progress[idx] == plens[idx]:
                         final_logits[idx] = logits[idx:idx + 1]
+        for idx, _state in items:
+            # full prompt pages now hold real KV: flip this slot's pending
+            # index entries so later arrivals (and later levels of this
+            # wave) may map them
+            self.slots.commit_prefix(idx, seqs[idx])
         events = []
         for idx, state in items:
             tok = int(self._sample(final_logits[idx], state)[0])
@@ -447,18 +562,34 @@ class Engine:
     # -- decode ----------------------------------------------------------------
 
     def _grow_or_preempt(self) -> None:
-        """Lazy page growth for every resident sequence: each decode tick
-        writes one KV position, so slot ``i`` must cover ``length + 1``.
-        When the pool is dry the scheduler names a victim — possibly the
-        growing sequence itself, so e.g. FCFS really does evict the newest
-        arrival rather than whichever old resident happens to share the
-        tick. The victim's pages are freed and its state goes back to the
-        queue (relocation-free — re-admission re-prefills through fresh
-        block tables)."""
+        """Lazy page growth (and COW forks) for every resident sequence:
+        each decode tick writes one KV position, so slot ``i`` must cover
+        ``length + 1`` — and if the page holding position ``length`` is
+        shared (refcount > 1), it must be forked before the scatter so
+        the write can never leak into a prefix other sequences read.
+        When the pool is dry (growth or fork), the scheduler names a
+        victim — possibly the growing sequence itself, so e.g. FCFS
+        really does evict the newest arrival rather than whichever old
+        resident happens to share the tick. The victim's refs are dropped
+        (shared pages survive through their other owners) and its state
+        goes back to the queue (relocation-free — re-admission
+        re-prefills through fresh block tables, re-mapping any shared
+        prefix that survived)."""
         for idx, state in list(self.by_slot.items()):
             if self.by_slot.get(idx) is not state:
                 continue                      # became a victim this tick
-            while not self.slots.ensure(idx, self.slots.slots[idx].length + 1):
+            while True:
+                length = self.slots.slots[idx].length
+                forks = None
+                if self.slots.ensure(idx, length + 1):
+                    forks = self.slots.fork_for_write(
+                        idx, length, length + 1)
+                if forks is not None:
+                    for src, dst in forks:
+                        self.cache = self._copy_page(self.cache, src, dst)
+                        self.stats.cow_forks += 1
+                    break
+                self._refresh_shared_lens()
                 victim = self.scheduler.pick_victim(list(self.by_slot.values()))
                 if victim is None or (victim is state
                                       and len(self.by_slot) == 1):
@@ -497,6 +628,7 @@ class Engine:
         self.slots.release(idx)
         state.phase = Phase.PREEMPTED
         state.slot = None
+        state.shared_len = 0          # recomputed if re-admission re-maps
         state.preemptions += 1
         self.stats.preemptions += 1
         self.waiting.append(state)
@@ -552,6 +684,21 @@ class Engine:
                             finished=True, finish_reason=reason)
         state.events.append(ev)
         return ev
+
+    def _refresh_shared_lens(self) -> None:
+        """Recompute every resident's ``shared_len`` from live refcounts
+        right before the scheduler ranks victims: sharing drifts after
+        admission (a leader finishing makes its follower the sole owner;
+        a later arrival makes a loner's pages shared), and a stale signal
+        would mis-rank eviction cost — ``exclusive_len`` must mean "pages
+        an eviction actually reclaims" at the moment of the decision."""
+        if self.prefix is None:
+            return
+        ps = self.pool.page_size
+        for idx, state in self.by_slot.items():
+            state.shared_len = ps * sum(
+                1 for p in self.slots.slots[idx].pages
+                if self.pool.refcount(p) > 1)
 
     def _note_page_pressure(self) -> None:
         if self.pool is not None:

@@ -43,20 +43,24 @@ class SlotManager:
         return Slot()
 
     def _make_slot(self, request_id: int, prompt_len: int,
-                   max_new: int) -> Optional[Slot]:
+                   max_new: int, tokens=None) -> Optional[Slot]:
         """Build the slot record for an admitted request; None = the
-        backing storage (e.g. a page pool) cannot host it right now."""
+        backing storage (e.g. a page pool) cannot host it right now.
+        ``tokens`` is the exact prefill token sequence — dense slots
+        ignore it; the paged manager matches its page-aligned prefix
+        against the prefix index (copy-on-write sharing)."""
         return Slot(request_id, prompt_len, 0, max_new)
 
     def try_assign(self, request_id: int, prompt_len: int,
-                   max_new: int) -> Optional[int]:
+                   max_new: int, tokens=None) -> Optional[int]:
         if prompt_len + max_new > self.max_seq:
             raise ValueError(
                 f"request {request_id} needs {prompt_len + max_new} > "
                 f"max_seq {self.max_seq}")
         for i, s in enumerate(self.slots):
             if s.free:
-                new = self._make_slot(request_id, prompt_len, max_new)
+                new = self._make_slot(request_id, prompt_len, max_new,
+                                      tokens=tokens)
                 if new is None:
                     return None
                 self.slots[i] = new
@@ -71,6 +75,17 @@ class SlotManager:
         entries. Dense slots pre-reserve ``max_seq`` — always True; the
         paged manager overrides this with lazy page allocation."""
         return positions <= self.max_seq
+
+    def fork_for_write(self, idx: int, start: int, end: int):
+        """Copy-on-write hook before writing KV positions [start, end):
+        dense slots are never shared — nothing to fork. The paged manager
+        forks pages with refcount > 1 and returns the (src, dst) slab
+        copies the engine owes the device cache."""
+        return []
+
+    def commit_prefix(self, idx: int, tokens) -> None:
+        """Prefill-completion hook (prefix-index bookkeeping); no-op for
+        dense slots."""
 
     def block_tables(self):
         """The layout's optional addressing operand for the jitted steps:

@@ -1,0 +1,201 @@
+"""Prefix index: page-aligned token-chunk hashes -> physical page ids.
+
+The CoDec observation (PAPERS.md) applied to our block pool: N requests
+that share a system prompt or few-shot header hold N identical copies of
+the same KV pages, so admission capacity — the thing lazy paging and the
+scheduler exist to maximize — is spent on duplicate bytes. This module is
+the lookup structure that lets admission *map* a new request's
+page-aligned prompt prefix onto pages some resident sequence already
+wrote, instead of allocating and re-prefilling them.
+
+Keys are a **hash chain over page-sized token chunks**: chunk ``i``'s key
+folds the exact tokens of positions ``[i*PS, (i+1)*PS)`` into the key of
+chunk ``i-1``, so a page is shared only when *every* preceding position
+matches too (position-dependent KV — RoPE, causal attention — makes a
+mid-sequence chunk non-reusable on its own). Entries also retain the raw
+chunk tokens and are compared exactly on lookup, so the *current* chunk
+can never alias; ancestry, however, rides in the key only as a 64-bit
+hash, so two different histories alias only on a full ``hash()``
+collision between their chains (~2^-64 per pair) — accepted odds, not an
+impossibility.
+
+Lifecycle contract (enforced by :meth:`check` and the property tests):
+
+  * Only **full** pages are ever registered — a partially written tail
+    page still receives decode writes and must stay private.
+  * An entry is ``pending`` from admission (pages promised, content not
+    yet written) until its owner's prefill completes (:meth:`commit`).
+    Same-wave followers may map pending pages but must prefill *after*
+    the level that writes them — ``pending_level`` carries the wave
+    ordering (see ``Engine._admit``).
+  * The index holds **no refcount** of its own: entries live exactly as
+    long as the page has owners. When the last owner releases and the
+    page returns to the free list, :meth:`drop_page` purges its entry —
+    a key can therefore never resolve to a recycled page.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One registered full page of prefix KV."""
+
+    page: int
+    chunk: Tuple[int, ...]            # exact tokens (collision guard)
+    pending_level: Optional[int]      # None = content committed
+
+
+@dataclasses.dataclass
+class Match:
+    """Result of :meth:`PrefixIndex.match` for one prompt."""
+
+    pages: List[int]                  # matched pages, position order
+    pending_level: int                # max pending level matched; -1 if all
+    #                                   matched pages are committed
+    tail_pending: bool                # is the *last* matched page pending?
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+
+class PrefixIndex:
+    """Chain-hashed map of page-aligned prompt chunks to live pages."""
+
+    def __init__(self, page_size: int):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.page_size = page_size
+        self._entries: Dict[Tuple[int, Tuple[int, ...]], _Entry] = {}
+        self._by_page: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        # one admission derives the chain three times (match at slot
+        # build, register at assignment, commit after prefill) — a small
+        # LRU keyed on the canonical token bytes collapses that to one
+        # O(prompt) pass
+        self._chain_cache: "OrderedDict[bytes, list]" = OrderedDict()
+        # observability counters (engine stats / benchmark read these)
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- key derivation ------------------------------------------------------
+
+    def _chunks(self, tokens: Sequence[int]) -> list:
+        """Chain keys, one per FULL page of ``tokens``, cached."""
+        toks = np.asarray(tokens).reshape(-1)
+        n_full = len(toks) // self.page_size
+        if not n_full:
+            return []
+        toks = np.asarray(toks[:n_full * self.page_size], np.int64)
+        blob = toks.tobytes()          # canonical dtype: no value aliasing
+        keys = self._chain_cache.get(blob)
+        if keys is None:
+            keys = []
+            parent = 0
+            for i in range(n_full):
+                chunk = tuple(
+                    int(t) for t in
+                    toks[i * self.page_size:(i + 1) * self.page_size])
+                key = (hash((parent, chunk)), chunk)
+                parent = key[0]
+                keys.append(key)
+            self._chain_cache[blob] = keys
+            if len(self._chain_cache) > 16:
+                self._chain_cache.popitem(last=False)
+        else:
+            self._chain_cache.move_to_end(blob)
+        return keys
+
+    # -- lookup / registration ----------------------------------------------
+
+    def match(self, tokens: Sequence[int]) -> Match:
+        """Longest indexed page-aligned prefix of ``tokens``.
+
+        Stops at the first missing chunk — the chain key makes any later
+        hit unreachable anyway. Returns the pages in position order plus
+        the pending-wave metadata admission needs.
+        """
+        pages: List[int] = []
+        pending = -1
+        tail_pending = False
+        for key in self._chunks(tokens):
+            e = self._entries.get(key)
+            if e is None or e.chunk != key[1]:
+                break
+            pages.append(e.page)
+            tail_pending = e.pending_level is not None
+            if e.pending_level is not None:
+                pending = max(pending, e.pending_level)
+        if pages:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return Match(pages=pages, pending_level=pending,
+                     tail_pending=tail_pending)
+
+    def register(self, tokens: Sequence[int], pages: Sequence[int],
+                 *, level: int = 0) -> int:
+        """Register every full page of ``tokens`` that is not indexed yet.
+
+        ``pages[i]`` must be the physical page holding chunk ``i``.
+        New entries are ``pending`` at ``level`` (promised at admission);
+        :meth:`commit` flips them once the owner's prefill wrote them.
+        Returns how many new entries were added.
+        """
+        added = 0
+        for i, key in enumerate(self._chunks(tokens)):
+            if key in self._entries:
+                continue                  # first registrant wins
+            page = int(pages[i])
+            if page in self._by_page:
+                # a page holds exactly one chunk of content; re-keying it
+                # would alias two prefixes onto one slab
+                continue
+            self._entries[key] = _Entry(page, key[1], pending_level=level)
+            self._by_page[page] = key
+            added += 1
+        return added
+
+    def commit(self, tokens: Sequence[int]) -> None:
+        """Mark every indexed full page of ``tokens`` as written.
+
+        Idempotent, and safe for a follower to call on chunks another
+        slot registered: wave ordering guarantees the content is on the
+        page by the time anyone whose prefill covered it completes.
+        """
+        for key in self._chunks(tokens):
+            e = self._entries.get(key)
+            if e is not None:
+                e.pending_level = None
+
+    def drop_page(self, page: int) -> None:
+        """Purge the entry for a page returning to the free list."""
+        key = self._by_page.pop(page, None)
+        if key is not None:
+            del self._entries[key]
+
+    # -- invariants ----------------------------------------------------------
+
+    def shared_page_ids(self) -> set:
+        return set(self._by_page)
+
+    def check(self, live_pages: set) -> None:
+        """Index invariants (called from ``PagedSlotManager.check``):
+        bijection between entries and pages, every indexed page alive,
+        chunks exactly one page long."""
+        assert len(self._entries) == len(self._by_page), \
+            "entry/page maps out of sync"
+        for key, e in self._entries.items():
+            assert self._by_page.get(e.page) == key, \
+                "page -> key back-pointer broken"
+            assert len(e.chunk) == self.page_size, \
+                "registered chunk is not exactly one page"
+            assert e.page in live_pages, \
+                f"index maps to freed page {e.page}"

@@ -87,6 +87,10 @@ class RequestState:
     finish_reason: Optional[FinishReason] = None
     slot: Optional[int] = None
     preemptions: int = 0
+    shared_len: int = 0              # resident prefix positions backed by
+    #                                  shared (refcount > 1 at admission)
+    #                                  pages — set by the engine at
+    #                                  admission, cleared on preemption
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     first_token_tick: Optional[int] = None
@@ -107,6 +111,15 @@ class RequestState:
         """KV positions this request occupies if resident now — the page
         footprint signal (PageBudgetFair)."""
         return len(self.prompt) + self.generated
+
+    @property
+    def exclusive_len(self) -> int:
+        """Positions backed by pages only this request owns — the
+        positions a preemption actually returns to the pool (shared
+        prefix pages survive the victim's release, and a re-admission
+        re-maps them instead of re-prefilling), so this is both the
+        reclaim value and the re-prefill cost of evicting this request."""
+        return max(self.total_len - self.shared_len, 0)
 
     # -- lifecycle ----------------------------------------------------------
 

@@ -22,7 +22,11 @@ Built-ins:
 
   * :class:`PageBudgetFair` — order by current KV footprint ascending
     (cheapest-to-host first — maximizes resident request count for a fixed
-    page budget). Victim: the largest footprint.
+    page budget). Victim: the largest *exclusive* footprint — prefix
+    sharing means evicting a sequence only reclaims pages nobody else
+    refcounts, and its shared prefix re-maps (rather than re-prefills) on
+    re-admission, so exclusive bytes are both the reclaim value and the
+    eviction cost.
 
 Preemption contract: ``pick_victim`` gets *every* resident sequence —
 including the one that needs pages this tick, so e.g. FCFS really evicts
@@ -94,7 +98,13 @@ class PageBudgetFair(Scheduler):
             waiting, key=lambda s: (s.total_len, s.arrival, s.rid))
 
     def pick_victim(self, candidates):
-        return max(candidates, key=lambda s: (s.total_len, s.rid),
+        # cost signal knows about prefix sharing: evicting a request only
+        # reclaims its *exclusively* owned pages (shared-prefix pages
+        # survive through the other owners, and re-admission re-maps them
+        # instead of re-prefilling) — so rank victims by exclusive
+        # footprint: most pages freed per eviction AND the cheapest
+        # re-prefill among equals
+        return max(candidates, key=lambda s: (s.exclusive_len, s.rid),
                    default=None)
 
 

@@ -80,6 +80,37 @@ def test_blockpool_double_free_raises():
         pool.free([99])                      # foreign page
 
 
+def test_blockpool_share_and_refcounted_free():
+    """A shared page is freed only when its LAST owner lets go: free()
+    decrements, reports exactly the pages that died, and keeps shared
+    pages allocated (no page freed while refcount > 0)."""
+    pool = BlockPool(num_pages=4, page_size=8)
+    a = pool.alloc(2)
+    assert [pool.refcount(p) for p in a] == [1, 1]
+    pool.share(a)                            # second owner
+    assert [pool.refcount(p) for p in a] == [2, 2]
+    assert pool.free(a) == []                # nobody died
+    assert pool.used_pages == 2 and pool.free_pages == 2
+    pool.check()
+    dead = pool.free(a)                      # last owner
+    assert sorted(dead) == sorted(a)
+    assert pool.free_pages == 4
+    with pytest.raises(ValueError):
+        pool.free(a)                         # refcount 0 = foreign again
+    with pytest.raises(ValueError):
+        pool.share([a[0]])                   # cannot share a free page
+    pool.check()
+
+
+def test_blockpool_total_refs_counts_sharing():
+    pool = BlockPool(num_pages=4, page_size=8)
+    a = pool.alloc(3)
+    pool.share(a[:2])
+    # 3 physical pages stand in for 5 share-less allocations
+    assert pool.used_pages == 3 and pool.total_refs == 5
+    pool.check()
+
+
 def test_blockpool_pages_for():
     pool = BlockPool(num_pages=4, page_size=16)
     assert pool.pages_for(0) == 0
@@ -182,7 +213,7 @@ def test_block_tables_sentinel_and_ownership():
     a = mgr.try_assign(0, prompt_len=20, max_new=4)   # 3 pages (capped)
     b = mgr.try_assign(1, prompt_len=5, max_new=3)    # 1 page (capped)
     assert a is not None and b is not None
-    bt = mgr.block_tables()
+    bt = np.asarray(mgr.block_tables())                # cached device array
     assert bt.shape == (3, 8)                          # 64 / 8 logical blocks
     pages_a = set(bt[a][bt[a] < pool.num_pages])
     pages_b = set(bt[b][bt[b] < pool.num_pages])
@@ -193,6 +224,32 @@ def test_block_tables_sentinel_and_ownership():
     assert (bt[free_row] == pool.num_pages).all()
     mgr.release(a)
     assert pool.free_pages == 16 - 1
+
+
+def test_block_tables_cached_until_invalidated():
+    """The dense block-table operand is device-cached: unchanged tables
+    return the *same* array object tick after tick (so the jitted decode
+    step reuses a device-resident operand instead of re-uploading), and
+    every mutation path — lazy growth, release, fresh assignment —
+    invalidates it."""
+    pool = BlockPool(num_pages=16, page_size=8)
+    mgr = PagedSlotManager(2, max_seq=64, pool=pool)
+    a = mgr.try_assign(0, prompt_len=9, max_new=20)    # 2 pages + headroom
+    bt0 = mgr.block_tables()
+    assert mgr.block_tables() is bt0                   # steady state: cached
+    mgr.tick(a)                                        # bookkeeping only
+    assert mgr.block_tables() is bt0
+    assert mgr.ensure(a, 24)                           # inside owned pages
+    assert mgr.block_tables() is bt0                   # no table change
+    assert mgr.ensure(a, 25)                           # grew one page
+    bt1 = mgr.block_tables()
+    assert bt1 is not bt0
+    assert np.asarray(bt1)[a][3] < pool.num_pages      # new page visible
+    mgr.release(a)
+    assert mgr.block_tables() is not bt1               # release invalidates
+    b = mgr.try_assign(1, prompt_len=5, max_new=3)
+    assert b is not None
+    assert (np.asarray(mgr.block_tables())[b] < pool.num_pages).sum() == 1
 
 
 def test_paged_manager_rejects_request_larger_than_pool():

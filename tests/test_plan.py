@@ -154,10 +154,12 @@ def test_greedy_identity_across_plans(smoke_model, cache_kind):
     """Token-identical greedy outputs across plans for the same config:
     a plan may change which kernel runs (GEMM routing, block_k, the
     fallback cond, chunk threshold) but never the math. Scheme/backend
-    swaps are excluded here — sync vs. unified-max and interpret-mode
-    kernels are value-close but not bitwise (covered by the closeness
-    tests in test_softmax_t1 / test_kernels), and near-uniform random
-    logits amplify fp ties into argmax flips."""
+    swaps are excluded from the *bitwise* guard — sync vs. unified-max
+    is value-close but not bitwise, and near-uniform random-init logits
+    amplify fp ties into argmax flips — so scheme variants get their own
+    check: ``test_scheme_swap_decode_logits_value_close`` below bounds
+    the decode-logit deviation with an atol tied to the activation
+    dtype's epsilon (not just "some other test somewhere")."""
     from repro.serving.engine import Engine
     from repro.serving.request import SamplingParams
     cfg, params = smoke_model
@@ -176,6 +178,57 @@ def test_greedy_identity_across_plans(smoke_model, cache_kind):
                      cache_kind=cache_kind, page_size=16, plan=p)
         outs.append(eng.run([(pr, sp) for pr in prompts]))
     assert outs[0] == outs[1] == outs[2]
+
+
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_scheme_swap_decode_logits_value_close(smoke_model, cache_kind):
+    """The real check behind the identity guard's scheme exclusion:
+    swapping the softmax scheme (sync <-> unified-max) may change the
+    *rounding* of decode logits, never their value. Bounds the deviation
+    on a warmed cache with an atol tied to the activation dtype — the
+    unified-max rescale is one extra multiply per element, so the two
+    schemes must agree to a small multiple of eps at logit scale."""
+    import jax.numpy as jnp
+
+    from repro.models.api import get_model
+    from repro.models.kvlayout import DenseLayout, PagedLayout
+    from repro.models.layers import LayerCtx
+    from repro.serving.blockpool import BlockPool, PagedSlotManager
+
+    cfg, params = smoke_model
+    api = get_model(cfg)
+    num_slots, max_seq, page_size = 4, 64, 16
+    lengths = jnp.array([7, 33, 60, 13], jnp.int32)
+    toks = jnp.array([3, 1, 4, 1], jnp.int32)
+
+    if cache_kind == "dense":
+        layout, bt = DenseLayout(num_slots, max_seq), None
+    else:
+        pool = BlockPool(num_slots * 4, page_size)
+        mgr = PagedSlotManager(num_slots, max_seq, pool)
+        for i, ln in enumerate(np.asarray(lengths)):
+            assert mgr.try_assign(i, int(ln), 1) is not None
+            assert mgr.ensure(i, int(ln) + 1)
+        layout, bt = PagedLayout(pool.num_pages, page_size), \
+            mgr.block_tables()
+    # warm the cache with noise so attention reduces over real values
+    cache = jax.tree.map(
+        lambda c: c + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(9), c.shape, c.dtype),
+        api.init_cache(layout))
+
+    outs = {}
+    for scheme in ("sync", "unified_max"):
+        ctx = LayerCtx(cfg=cfg, plan=make_plan(scheme=scheme))
+        logits, _ = api.decode_step(ctx, params, toks, cache, lengths,
+                                    block_tables=bt)
+        outs[scheme] = np.asarray(logits, np.float32)
+
+    eps = float(jnp.finfo(jnp.dtype(cfg.activation_dtype)).eps)
+    scale = float(np.abs(outs["sync"]).max())
+    atol = 32 * eps * max(scale, 1.0)
+    np.testing.assert_allclose(outs["unified_max"], outs["sync"],
+                               rtol=32 * eps, atol=atol)
 
 
 # ---------------------------------------------------------------------------
