@@ -1,0 +1,160 @@
+"""Chunked-prefill admission sweep: dense-gather vs fused chunk attention.
+
+The admission path every paged prefill (and every re-prefill after
+preemption) runs streams the prompt through ``prefill_chunk`` in
+fixed-size chunks. In the ``gather_chunk="dense"`` mode each chunk step
+materializes the full ``(B, NB*PS)`` KV view per layer — O(max table
+width) bytes regardless of how little is resident. The ``"fused"`` mode
+(PR 5) reads pages in place: the fused Pallas chunk kernel on TPU, a
+resident-bounded table (bucketed O(resident pages) gather, bitwise
+identical) on the XLA backend this container measures.
+
+Per (prompt length x batch x mode) the sweep reports:
+
+  * TTFT — submit-to-first-token wall clock through the real engine
+    (second wave of identical shapes, so compiles are excluded; CPU wall,
+    directional — the Pallas kernel path on TPU skips the gather
+    entirely), and
+  * KV bytes materialized per chunk step — the gather traffic the mode
+    pays per layer (zero for the in-place kernel; the sweep also reports
+    the kernel's in-place page reads for the roofline story).
+
+Greedy outputs are asserted bit-identical across dense / gather / fused
+before any number is reported. Writes ``BENCH_chunk.json`` at the repo
+root (schema: {"rows": [...], "config": {...}}).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro import configs
+from repro.core.plan import make_plan
+from repro.models.api import get_model
+from repro.models.kvlayout import pages_for, pow2_bucket
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_chunk.json")
+
+PAGE_SIZE = 64
+CHUNK = 64
+
+
+def _chunk_bytes(mode: str, prompt: int, max_seq: int, kv_bytes_per_pos: int,
+                 num_layers: int):
+    """(total, per-step avg) KV bytes materialized across one admission,
+    plus in-place page-read bytes for the fused kernel path."""
+    steps = -(-prompt // CHUNK)
+    full_pages = pages_for(max_seq, PAGE_SIZE)
+    per_layer_step = []
+    inplace = []
+    for i in range(steps):
+        resident = min((i + 1) * CHUNK, prompt)
+        pages = pages_for(resident, PAGE_SIZE)
+        if mode == "dense":
+            per_layer_step.append(full_pages * PAGE_SIZE * kv_bytes_per_pos)
+        else:
+            per_layer_step.append(
+                pow2_bucket(pages, hi=full_pages) * PAGE_SIZE
+                * kv_bytes_per_pos)
+        inplace.append(pages * PAGE_SIZE * kv_bytes_per_pos)
+    total = sum(per_layer_step) * num_layers
+    return total, total / (steps * num_layers), sum(inplace) * num_layers
+
+
+def _run_wave(eng, prompts, max_new):
+    rids = [eng.submit(p, SamplingParams(max_new_tokens=max_new))
+            for p in prompts]
+    t0 = time.perf_counter()
+    while any(not eng.requests[r].finished for r in rids):
+        eng.step()
+    _ = time.perf_counter() - t0
+    ttft = max(eng.requests[r].first_token_time - eng.requests[r].submit_time
+               for r in rids)
+    out = {r: list(eng.requests[r].tokens) for r in rids}
+    for r in rids:
+        eng.evict(r)
+    return ttft, list(out.values())
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== chunk_prefill: dense-gather vs fused chunk attention ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    max_seq = 512 if quick else 1024
+    prompt_lens = [128, 256] if quick else [128, 256, 512]
+    batches = [2] if quick else [1, 4]
+    max_new = 2
+    kv_bytes_per_pos = (2 * cfg.num_kv_heads * cfg.head_dim
+                        * np.dtype(cfg.activation_dtype).itemsize)
+
+    plans = {
+        "gather": make_plan(gather_chunk="dense"),
+        "fused": make_plan(gather_chunk="fused", fused_threshold=CHUNK),
+    }
+
+    widths = [8, 6, 8, 12, 12, 16]
+    print(fmt_row("prompt", "B", "mode", "ttft_ms", "MB/chunk",
+                  "speedup_vs_dense", widths=widths))
+    rows = []
+    rng = np.random.default_rng(0)
+    for batch in batches:
+        for p_len in prompt_lens:
+            prompts = [rng.integers(1, cfg.vocab_size, size=p_len)
+                       .astype(np.int32) for _ in range(batch)]
+            outs = {}
+            ttfts = {}
+            # dense slot-cache engine: the identity baseline
+            eng = Engine(cfg, params, num_slots=batch, max_seq=max_seq,
+                         cache_kind="dense", prefill_chunk=CHUNK)
+            _run_wave(eng, prompts, max_new)          # compile warmup
+            _, outs["dense"] = _run_wave(eng, prompts, max_new)
+            for mode, plan in plans.items():
+                eng = Engine(cfg, params, num_slots=batch, max_seq=max_seq,
+                             cache_kind="paged", page_size=PAGE_SIZE,
+                             prefill_chunk=CHUNK, plan=plan)
+                _run_wave(eng, prompts, max_new)      # compile warmup
+                ttfts[mode], outs[mode] = _run_wave(eng, prompts, max_new)
+            assert outs["dense"] == outs["gather"] == outs["fused"], \
+                "greedy outputs diverged across chunk modes"
+            for mode in plans:
+                total, per_step, inplace = _chunk_bytes(
+                    "dense" if mode == "gather" else "fused",
+                    p_len, max_seq, kv_bytes_per_pos, cfg.num_layers)
+                speedup = ttfts["gather"] / ttfts[mode]
+                print(fmt_row(p_len, batch, mode,
+                              f"{ttfts[mode]*1e3:.1f}",
+                              f"{per_step/2**20:.2f}",
+                              f"{speedup:.2f}x", widths=widths))
+                rows.append(dict(
+                    prompt_len=p_len, batch=batch, mode=mode,
+                    ttft_s=ttfts[mode],
+                    kv_bytes_materialized_total=total,
+                    kv_bytes_materialized_per_chunk=per_step,
+                    kv_bytes_read_in_place=inplace,
+                    speedup_vs_dense_gather=speedup,
+                    bit_identical=True,
+                ))
+
+    result = {
+        "config": dict(arch=cfg.name, max_seq=max_seq, page_size=PAGE_SIZE,
+                       chunk=CHUNK, num_layers=cfg.num_layers,
+                       backend=jax.default_backend()),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  [chunk_prefill -> {os.path.normpath(OUT_PATH)}]")
+    return result
+
+
+if __name__ == "__main__":
+    run()

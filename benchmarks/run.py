@@ -16,9 +16,10 @@ def main() -> int:
     ap.add_argument("--out", default="artifacts/bench_results.json")
     args = ap.parse_args()
 
-    from benchmarks import (attention_softmax, decode_engine, dispatch_table,
-                            flat_gemm_sweep, paged_decode, prefill_engine,
-                            prefix_sharing, roofline_report, scheduler_sweep)
+    from benchmarks import (attention_softmax, chunk_prefill, decode_engine,
+                            dispatch_table, flat_gemm_sweep, paged_decode,
+                            prefill_engine, prefix_sharing, roofline_report,
+                            scheduler_sweep)
 
     results = {}
     for name, mod in [
@@ -27,6 +28,7 @@ def main() -> int:
         ("dispatch_table", dispatch_table),
         ("decode_engine", decode_engine),
         ("paged_decode", paged_decode),
+        ("chunk_prefill", chunk_prefill),
         ("scheduler_sweep", scheduler_sweep),
         ("prefix_sharing", prefix_sharing),
         ("prefill_engine", prefill_engine),

@@ -293,3 +293,106 @@ def find_chunk_threshold(
         if num_heads * s * s * dtype_bytes <= budget:
             best = s
     return best
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill decision flows: dense-gather vs fused chunk kernel
+# (find_inflections for the admission path)
+# ---------------------------------------------------------------------------
+
+CHUNK_BLOCK_CANDIDATES = (8, 16, 32, 64, 128, 256)
+
+# per-admission-chunk-step dispatch/bookkeeping bubble (one jitted model
+# call per chunk step — host sample + device dispatch)
+_CHUNK_STEP_OVERHEAD_S = 2e-5
+
+
+def predict_chunk_prefill_time(
+    mode: str, prompt_len: int, table_positions: int, kv_dim: int, *,
+    chunk: int = 64,
+    page_size: int = 64,
+    dtype_bytes: int = 2,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> float:
+    """Roofline time for the *KV side* of one whole chunked-prefill
+    admission of a ``prompt_len`` prompt (the q-side GEMMs are identical
+    across modes and cancel out of the decision).
+
+    ``mode="dense"`` gathers the full ``(table_positions,)`` KV view per
+    chunk step per K/V: each step reads the pool pages, writes the dense
+    view, and reads it back for attention — 3x the table bytes, every
+    step, regardless of how little of the table is resident.
+
+    ``mode="fused"`` reads only the pages covering ``resident + chunk``
+    in place (scalar-prefetched block tables, no materialization), paying
+    a per-page grid-step bubble instead — the Kernel Looping trade.
+    """
+    steps = max(-(-prompt_len // chunk), 1)
+    if mode == "dense":
+        # K + V: pool read + dense-view write + attention read, per step
+        bytes_per_step = 2 * 3 * table_positions * kv_dim * dtype_bytes
+        return steps * (bytes_per_step / spec.hbm_bw
+                        + _CHUNK_STEP_OVERHEAD_S)
+    if mode == "fused":
+        total = 0.0
+        for i in range(steps):
+            resident = min((i + 1) * chunk, prompt_len)
+            pages = -(-resident // page_size)
+            bytes_step = 2 * pages * page_size * kv_dim * dtype_bytes
+            total += (bytes_step / spec.hbm_bw
+                      + pages * _GRID_STEP_OVERHEAD_S
+                      + _CHUNK_STEP_OVERHEAD_S)
+        return total
+    raise ValueError(f"unknown chunk mode {mode!r}")
+
+
+def find_fused_threshold(
+    max_seq: int, kv_dim: int, *,
+    chunk: int = 64,
+    page_size: int = 64,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> int:
+    """Smallest prompt length at which the fused chunk path beats the
+    dense gather (table provisioned at ``max_seq``); prompts below it keep
+    the one-compile full-table gather. Returns ``max_seq + 1`` when the
+    gather never loses (tiny tables)."""
+    p = chunk
+    while p <= max_seq:
+        t_dense = predict_chunk_prefill_time(
+            "dense", p, max_seq, kv_dim, chunk=chunk, page_size=page_size,
+            spec=spec)
+        t_fused = predict_chunk_prefill_time(
+            "fused", p, max_seq, kv_dim, chunk=chunk, page_size=page_size,
+            spec=spec)
+        if t_fused < t_dense:
+            return p
+        p *= 2
+    return max_seq + 1
+
+
+def find_chunk_block(
+    max_seq: int, kv_dim: int, *,
+    page_size: int = 64,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+    candidates: Iterable[int] = CHUNK_BLOCK_CANDIDATES,
+) -> int:
+    """Pick the prefill chunk size for the fused path at a representative
+    (``max_seq``-long) admission: large chunks amortize the per-step
+    dispatch bubble, small chunks keep early pages from re-streaming.
+    Only sizes that divide the page size are eligible — prefix sharing
+    needs every chunk boundary on the share-less page grid
+    (``page_size % prefill_chunk == 0``, enforced by the engine)."""
+    best, best_t = None, float("inf")
+    for c in sorted(candidates):
+        if page_size % c:
+            continue
+        t = predict_chunk_prefill_time(
+            "fused", max_seq, max_seq, kv_dim, chunk=c,
+            page_size=page_size, spec=spec)
+        if t < best_t:
+            best, best_t = c, t
+    if best is None:
+        raise ValueError(
+            f"no chunk size among {tuple(candidates)} sits on the "
+            f"page grid (page_size {page_size})")
+    return best

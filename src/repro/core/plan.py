@@ -12,7 +12,9 @@ selection a first-class tunable surface spanning the whole graph:
   * a registry of per-op decisions (``matmul`` inflections per [K, N],
     ``attention_decode`` scheme + ``block_k`` + fallback,
     ``attention_prefill`` chunking threshold + φ policy, ``fused_ffn``
-    fused/unfused, paged gather-path knobs);
+    fused/unfused, and the paged-path knobs — decode backend/scheme plus
+    the chunked-prefill ``gather_chunk`` mode with its tuned
+    ``fused_threshold`` / ``chunk_block`` companions);
   * one offline :func:`tune` flow (``measure="analytical"`` roofline
     models in this CPU container, ``measure="wallclock"`` on real
     hardware) that generalizes ``find_inflections`` beyond GEMM;
@@ -41,7 +43,7 @@ PLAN_VERSION = 1
 
 BACKENDS = ("xla", "pallas")
 SCHEMES = ("sync", "unified_max")
-GATHER_MODES = ("dense",)  # chunk-path page materialization (future: fused)
+GATHER_MODES = ("dense", "fused")  # chunk-path page access discipline
 
 
 class PlanError(ValueError):
@@ -155,18 +157,48 @@ class FusedFFNPlan:
 @dataclasses.dataclass(frozen=True)
 class PagedPlan:
     """Block-paged KV path knobs: Pallas scalar-prefetch kernels vs. the
-    XLA gather view for paged decode, and the chunked-prefill gather
-    materialization mode."""
+    XLA gather view for paged decode, and the chunked-prefill page-access
+    discipline.
+
+    ``gather_chunk`` names how chunked prefill reads resident KV:
+
+      * ``"dense"`` — gather the full ``(B, NB*PS)`` per-sequence view
+        per layer per chunk step (one compiled shape, but O(table width)
+        materialized bytes every step — the pre-fused path).
+      * ``"fused"`` — no full-width materialization. On the Pallas
+        backend the fused chunk kernel
+        (:mod:`repro.kernels.chunk_attention`) reads K/V pages in place
+        via scalar-prefetched block tables; on the XLA backend the
+        engine bounds the block-table operand to a bucketed
+        O(resident pages) width (bitwise identical — trailing masked
+        pages contribute exact zeros) so the remaining gather is
+        O(resident KV), not O(max_seq).
+
+    ``fused_threshold`` is the tuned gather-vs-fused inflection: prompts
+    shorter than it keep the one-compile dense gather (the fused path's
+    per-wave shape changes and per-page grid bubbles only pay off once
+    enough of the table is *not* resident); prompts at/above it run the
+    fused discipline. ``chunk_block`` is the tuned prefill chunk size
+    (``Engine(prefill_chunk=None)`` adopts it); it must divide the page
+    size so prefix-sharing chunk boundaries stay on the share-less grid.
+    Tuned by
+    :func:`repro.core.dispatch.find_fused_threshold` /
+    :func:`repro.core.dispatch.find_chunk_block`.
+    """
 
     backend: str = "xla"
     scheme: str = "unified_max"
     fallback: bool = True
     gather_chunk: str = "dense"
+    fused_threshold: int = 256
+    chunk_block: int = 64
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "paged.backend")
         _check(self.scheme, SCHEMES, "paged.scheme")
         _check(self.gather_chunk, GATHER_MODES, "paged.gather_chunk")
+        _check_pos(self.fused_threshold, "paged.fused_threshold")
+        _check_pos(self.chunk_block, "paged.chunk_block")
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +292,10 @@ class ExecutionPlan:
                 f"fallback={d.fallback}] "
                 f"prefill[{p.scheme}, chunk>={p.chunk_threshold}] "
                 f"ffn[{'fused' if self.fused_ffn.fused else 'unfused'}] "
-                f"paged[{self.paged.backend}/{self.paged.gather_chunk}]")
+                f"paged[{self.paged.backend}/{self.paged.gather_chunk}"
+                + (f">={self.paged.fused_threshold}"
+                   if self.paged.gather_chunk == "fused" else "")
+                + f", chunk={self.paged.chunk_block}]")
 
     # -- serialization -------------------------------------------------------
 
@@ -394,6 +429,9 @@ def make_plan(
     block_k: int = 512,
     chunk_threshold: int = 2048,
     fused_ffn: Optional[bool] = None,
+    gather_chunk: str = "dense",
+    fused_threshold: int = 256,
+    chunk_block: int = 64,
 ) -> ExecutionPlan:
     """Build an untuned plan with uniform knobs — the hand-rolled
     counterpart of :func:`tune` for hosts that only need to pin backends
@@ -409,7 +447,10 @@ def make_plan(
             backend=backend, scheme=scheme, fallback=fallback,
             chunk_threshold=chunk_threshold),
         fused_ffn=FusedFFNPlan(backend=backend, fused=fused_ffn),
-        paged=PagedPlan(backend=backend, scheme=scheme, fallback=fallback),
+        paged=PagedPlan(backend=backend, scheme=scheme, fallback=fallback,
+                        gather_chunk=gather_chunk,
+                        fused_threshold=fused_threshold,
+                        chunk_block=chunk_block),
     )
 
 
@@ -441,6 +482,7 @@ def tune(
     measure: MeasureLike = "analytical",
     backend: str = "xla",
     decode_seq: int = 32768,
+    page_size: int = 64,
 ) -> ExecutionPlan:
     """Profile every op decision offline and emit a provenanced plan.
 
@@ -449,7 +491,9 @@ def tune(
     decisions always use the analytical models, which is what the
     wallclock backend can't reach without a device anyway). ``decode_seq``
     is the representative decode KV length the ``block_k`` sweep
-    optimizes for.
+    optimizes for; ``page_size`` anchors the paged chunked-prefill
+    decisions (``chunk_block`` and the dense-gather vs fused-kernel
+    ``fused_threshold`` inflection).
     """
     _check(backend, BACKENDS, "backend")
     gemm_measure, measure_name = _resolve_measure(measure)
@@ -468,6 +512,12 @@ def tune(
     block_k = dispatch.find_block_k(
         min(decode_seq, cfg.max_seq_len), cfg.kv_dim, spec=spec)
     threshold = dispatch.find_chunk_threshold(cfg.num_heads, spec=spec)
+    rep_seq = min(decode_seq, cfg.max_seq_len)
+    chunk_block = dispatch.find_chunk_block(
+        rep_seq, cfg.kv_dim, page_size=page_size, spec=spec)
+    fused_threshold = dispatch.find_fused_threshold(
+        rep_seq, cfg.kv_dim, chunk=chunk_block, page_size=page_size,
+        spec=spec)
 
     plan = ExecutionPlan(
         matmul=MatmulPlan(backend=backend, default_m1=default.m1,
@@ -480,7 +530,10 @@ def tune(
             backend=backend,
             fused=backend == "pallas"
             and cfg.activation in ("swiglu", "geglu")),
-        paged=PagedPlan(backend=backend, scheme=scheme),
+        paged=PagedPlan(backend=backend, scheme=scheme,
+                        gather_chunk="fused",
+                        fused_threshold=fused_threshold,
+                        chunk_block=chunk_block),
         provenance=PlanProvenance(
             backend=backend,
             hardware=hardware_hash(spec), hardware_name=spec.name,

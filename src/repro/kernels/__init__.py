@@ -4,6 +4,10 @@ Modules:
   * decode_attention — T1 async-softmax split-KV decode kernel (+ sync
                        baseline), plus block-paged variants that gather KV
                        through scalar-prefetched block tables
+  * chunk_attention  — fused paged chunk-prefill attention: flash-style
+                       causal chunk attention reading K/V pages in place
+                       via scalar-prefetched block tables (sync &
+                       unified-max)
   * flash_prefill    — fused causal prefill attention (sync & unified-max)
   * flat_gemm        — T2 minimal-pad double-buffered flat GEMM
   * fused_ffn        — T2 extension: fused flat-GEMM SwiGLU FFN-up epilogue
@@ -12,6 +16,10 @@ Modules:
   * ref              — pure-jnp oracles for all of the above
 """
 from repro.kernels import ref  # noqa: F401
+from repro.kernels.chunk_attention import (  # noqa: F401
+    paged_chunk_attention_sync,
+    paged_chunk_attention_unified_max,
+)
 from repro.kernels.decode_attention import (  # noqa: F401
     decode_attention_sync,
     decode_attention_unified_max,

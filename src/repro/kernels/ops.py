@@ -26,6 +26,10 @@ from repro.config import SoftmaxPhiConfig
 from repro.core.dispatch import Impl
 from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
 from repro.kernels import ref
+from repro.kernels.chunk_attention import (
+    paged_chunk_attention_sync,
+    paged_chunk_attention_unified_max,
+)
 from repro.kernels.decode_attention import (
     decode_attention_sync,
     decode_attention_unified_max,
@@ -325,14 +329,44 @@ def attention_chunk_paged(
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
     plan: Optional[ExecutionPlan] = None,
 ) -> jax.Array:
-    """Paged twin of :func:`attention_chunk` (gather via block tables).
+    """Paged twin of :func:`attention_chunk`, governed by the plan's
+    ``paged`` entry (scheme, fallback, and ``gather_chunk`` mode).
 
-    The plan's ``paged.gather_chunk`` mode names the materialization:
-    ``"dense"`` gathers a (B, NB*PS) KV view per layer per chunk step —
-    fine for correctness and CPU smoke, but it transiently costs
-    dense-cache bytes during prefill; a fused chunk kernel over the pool
-    (no gather) is the ROADMAP "chunk-attention kernel" follow-on.
+    ``gather_chunk="fused"`` on the Pallas backend runs the fused chunk
+    kernel (:mod:`repro.kernels.chunk_attention`): K/V pages are read in
+    place through scalar-prefetched block tables — no dense ``(B, NB*PS)``
+    view is ever materialized — with the T1 unified-max scheme and the
+    sync-kernel overflow recompute, exactly the decode kernel's contract.
+
+    Every other combination gathers the *caller-supplied* table into a
+    dense view and reuses :func:`attention_chunk`: on the XLA backend the
+    fused mode's win is realized upstream — ``Engine._prefill_chunked``
+    bounds the table to O(resident pages), and because trailing masked
+    pages contribute exact zeros, the bounded gather is bitwise identical
+    to the full one (so greedy outputs match across modes by
+    construction).
     """
+    pp = (plan or DEFAULT_PLAN).paged
+    if pp.backend == "pallas" and pp.gather_chunk == "fused":
+        unified = _unified(phi_cfg, pp.scheme)
+        if not unified:
+            return paged_chunk_attention_sync(
+                q, k_pool, v_pool, block_tables, lengths,
+                interpret=_INTERPRET)
+        out, stat = paged_chunk_attention_unified_max(
+            q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
+            interpret=_INTERPRET)
+        if not pp.fallback:
+            return out
+        overflow = jnp.any(stat > phi_cfg.band[1])
+
+        def recompute(_):
+            return paged_chunk_attention_sync(
+                q, k_pool, v_pool, block_tables, lengths,
+                interpret=_INTERPRET)
+
+        return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
+
     k = ref.gather_paged_kv(k_pool, block_tables)
     v = ref.gather_paged_kv(v_pool, block_tables)
     return attention_chunk(q, k, v, lengths, phi_cfg=phi_cfg, plan=plan)

@@ -321,10 +321,89 @@ def attention_chunk_paged_ref(
     phi: float | None = None,
     scale: float | None = None,
 ) -> jax.Array:
-    """Chunked-prefill attention over a block-paged cache (gather + ref)."""
+    """Chunked-prefill attention over a block-paged cache (gather + ref).
+
+    Bounded-table identity: trailing table columns whose pages carry only
+    causally-masked positions contribute exact zeros to every (num, den)
+    partial, so slicing them off (``block_tables[:, :bound]``) leaves the
+    result bitwise unchanged — the engine's fused-mode resident bound
+    rests on this (and the bit-identity tests enforce it).
+    """
     k = gather_paged_kv(k_pool, block_tables)
     v = gather_paged_kv(v_pool, block_tables)
     return attention_chunk_ref(q, k, v, lengths, phi=phi, scale=scale)
+
+
+def attention_chunk_paged_fused_ref(
+    q: jax.Array,             # (B, C, HQ, D)
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB)
+    lengths: jax.Array,       # (B,) lengths *before* the chunk
+    *,
+    phi: float | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Page-blocked oracle for the fused chunk kernel
+    (:mod:`repro.kernels.chunk_attention`): accumulates one order-
+    independent ``(num, den)`` partial per page, mirroring the kernel's
+    grid walk — the T1 unified-max scheme when ``phi`` is set, the
+    two-pass safe scheme (global max first, then the page walk) when
+    ``phi`` is None. Returns ``(out, stat)``; ``stat: (B, HK)`` is the max
+    centered logit (zeros for the safe scheme).
+    """
+    b, c, hq, d = q.shape
+    num_pages, ps, hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    groups = hq // hk
+    scale = scale if scale is not None else d ** -0.5
+    bt = jnp.minimum(block_tables, num_pages - 1)
+    qg = q.reshape(b, c, hk, groups, d).astype(jnp.float32) * scale
+
+    qpos = lengths[:, None] + jnp.arange(c)[None, :]        # (B, C)
+    num = jnp.zeros((b, c, hk, groups, d), jnp.float32)
+    den = jnp.zeros((b, hk, groups, c), jnp.float32)
+    stat = jnp.full((b, hk), -jnp.inf, jnp.float32)
+
+    if phi is None:
+        # safe scheme: one extra pass for the global row max
+        m = jnp.full((b, hk, groups, c), -jnp.inf, jnp.float32)
+        for i in range(nb):
+            kpg = jnp.take(k_pool, bt[:, i], axis=0)        # (B, PS, HK, D)
+            s = jnp.einsum("bchgd,bkhd->bhgck", qg,
+                           kpg.astype(jnp.float32))
+            kpos = i * ps + jnp.arange(ps)
+            valid = (kpos[None, None, None, None, :]
+                     <= qpos[:, None, None, :, None])
+            m = jnp.maximum(
+                m, jnp.max(jnp.where(valid, s, -jnp.inf), axis=-1))
+        center = m[..., None]
+    else:
+        center = phi
+
+    for i in range(nb):
+        kpg = jnp.take(k_pool, bt[:, i], axis=0)            # (B, PS, HK, D)
+        vpg = jnp.take(v_pool, bt[:, i], axis=0)
+        s = jnp.einsum("bchgd,bkhd->bhgck", qg, kpg.astype(jnp.float32))
+        kpos = i * ps + jnp.arange(ps)
+        valid = (kpos[None, None, None, None, :]
+                 <= qpos[:, None, None, :, None])           # (B,1,1,C,PS)
+        centered = s - center
+        e = jnp.where(valid, jnp.exp(centered), 0.0)
+        num = num + jnp.einsum("bhgck,bkhd->bchgd", e,
+                               vpg.astype(jnp.float32))
+        den = den + jnp.sum(e, axis=-1)
+        if phi is not None:
+            stat = jnp.maximum(
+                stat,
+                jnp.max(jnp.where(valid, centered, -jnp.inf),
+                        axis=(2, 3, 4)))
+    den_q = den.transpose(0, 3, 1, 2)[..., None]            # (B, C, HK, G, 1)
+    den_q = jnp.where(den_q == 0.0, 1.0, den_q)
+    out = (num / den_q).reshape(b, c, hq, d).astype(q.dtype)
+    if phi is None:
+        stat = jnp.zeros((b, hk), jnp.float32)
+    return out, stat
 
 
 def attention_prefill_chunked(

@@ -16,7 +16,10 @@ cares about.
 Kernel dispatch is plan-driven: ``--tune`` runs the offline T3 decision
 flow for the arch and saves a provenanced ``plans/<arch>-<hw>.json``;
 ``--plan PATH`` serves with a previously tuned plan (stale plans — wrong
-hardware or config hash — are rejected at load).
+hardware or config hash — are rejected at load). ``--gather-chunk
+dense|fused`` overrides the plan's chunked-prefill page-access mode
+(fused = the chunk-attention kernel over the pool / resident-bounded
+tables on XLA — see ``repro.kernels.chunk_attention``).
 """
 import argparse
 import sys
@@ -53,8 +56,16 @@ def _parse():
                     help="prepend this many identical tokens to every "
                          "synthetic prompt (system-prompt workload — makes "
                          "--prefix-sharing visible in the summary)")
-    ap.add_argument("--prefill-chunk", type=int, default=64,
-                    help="chunked-prefill chunk size (dense-KV families)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill chunk size (dense-KV families); "
+                         "default: the plan's tuned paged.chunk_block")
+    ap.add_argument("--gather-chunk", choices=["dense", "fused"],
+                    default=None,
+                    help="override the plan's chunked-prefill page access "
+                         "mode: 'dense' gathers the full (B, NB*PS) KV "
+                         "view per chunk step, 'fused' reads pages in "
+                         "place (fused kernel on the Pallas backend, "
+                         "resident-bounded tables on XLA)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--plan", default=None, metavar="PATH",
@@ -89,13 +100,20 @@ def main() -> int:
 
     plan = None
     if args.tune:
-        plan = plan_mod.tune(cfg)
+        plan = plan_mod.tune(cfg, page_size=args.page_size)
         path = args.plan or plan_mod.default_plan_path(cfg)
         plan.save(path)
         print(f"tuned plan -> {path}\n  {plan.describe()}")
     elif args.plan:
         plan = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
         print(f"loaded plan {args.plan}\n  {plan.describe()}")
+
+    if args.gather_chunk is not None:
+        import dataclasses
+        base = plan if plan is not None else plan_mod.DEFAULT_PLAN
+        plan = dataclasses.replace(
+            base, paged=dataclasses.replace(
+                base.paged, gather_chunk=args.gather_chunk))
 
     num_pages = args.num_pages
     if num_pages is None and args.cache_kind == "paged":

@@ -35,6 +35,18 @@ def pages_for(positions: int, page_size: int) -> int:
     return -(-max(positions, 0) // page_size)
 
 
+def pow2_bucket(n: int, lo: int = 1, hi: Union[int, None] = None) -> int:
+    """Round ``n`` up to a power-of-two bucket (floor ``lo``, capped at
+    ``hi``) — the one rounding that keeps jit shape families logarithmic
+    (the engine's resident-bounded block tables and batched-prefill
+    padding) and lets the benchmarks mirror the engine's bucketing
+    exactly."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b if hi is None else min(b, hi)
+
+
 @dataclasses.dataclass(frozen=True)
 class DenseLayout:
     """Slot-dense KV storage: every slot reserves ``max_seq`` positions."""

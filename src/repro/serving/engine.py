@@ -60,6 +60,15 @@ whole admission wave in one ``(num_slots, chunk)`` call) and batched
 single-shot for recurrent/ring families; decode runs the whole slot batch
 every tick (continuous batching), keeping the decode-phase GEMMs at
 M = num_slots — the regime the paper's T2/T3 optimize.
+
+With a paged cache and ``plan.paged.gather_chunk == "fused"``, waves whose
+prompts reach the tuned ``fused_threshold`` run the fused chunk-attention
+discipline: the block-table operand is bounded to a bucketed
+O(resident pages) width per step (``_chunk_tables``), the Pallas backend
+reads K/V pages in place through the fused chunk kernel, and the XLA
+backend's gather shrinks to the bounded width — bitwise identical to the
+full gather (trailing masked pages contribute exact zeros), so greedy
+outputs match across {dense, gather, fused} × {sharing on/off}.
 """
 from __future__ import annotations
 
@@ -75,7 +84,7 @@ from repro.config import ModelConfig
 from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
-    pages_for
+    pages_for, pow2_bucket
 from repro.models.layers import LayerCtx
 from repro.serving.blockpool import BlockPool, PagedSlotManager
 from repro.serving.kvcache import SlotManager
@@ -121,7 +130,7 @@ class Engine:
         cache_kind: str = "dense",
         page_size: int = DEFAULT_PAGE_SIZE,
         num_pages: Optional[int] = None,
-        prefill_chunk: int = DEFAULT_PREFILL_CHUNK,
+        prefill_chunk: Optional[int] = DEFAULT_PREFILL_CHUNK,
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
         prefix_sharing: bool = False,
@@ -136,7 +145,10 @@ class Engine:
         self.max_seq = max_seq
         self.scheduler = get_scheduler(scheduler)
         # chunked prefill needs the chunk-append model path (dense-KV
-        # families); others fall back to batched single-shot prefill
+        # families); others fall back to batched single-shot prefill.
+        # prefill_chunk=None adopts the plan's tuned chunk size.
+        if prefill_chunk is None:
+            prefill_chunk = self.plan.paged.chunk_block
         self.prefill_chunk = (
             prefill_chunk if self.api.supports_chunked_prefill else 0)
 
@@ -218,6 +230,10 @@ class Engine:
             donate_argnums=(0,),
         ) if cache_kind == "paged" else None
         self._prefill_cache = {}  # bucketed P -> jitted batched prefill
+        # last-uploaded device copies of the small int operands the chunk
+        # loop would otherwise re-upload every step (chunk_lens is usually
+        # identical across a wave's steps; lengths only moves wave rows)
+        self._operand_cache: dict[str, tuple[bytes, jax.Array]] = {}
 
     # -- public API -----------------------------------------------------------
 
@@ -459,24 +475,69 @@ class Engine:
 
     # -- chunked + batched prefill (dense-KV families) -------------------------
 
+    def _upload_i32(self, name: str, arr: np.ndarray) -> jax.Array:
+        """Device copy of a small int operand, re-uploaded only when its
+        contents changed since the previous call under the same name —
+        the chunk loop's ``chunk_lens`` is usually identical across a
+        wave's steps and would otherwise round-trip every step."""
+        prev = self._operand_cache.get(name)
+        key = arr.tobytes()
+        if prev is not None and prev[0] == key:
+            return prev[1]
+        dev = jnp.asarray(arr)
+        self._operand_cache[name] = (key, dev)
+        return dev
+
+    def _chunk_tables(self, fused: bool, hi: int):
+        """Block-table operand for one chunk step.
+
+        In the plan's fused chunk mode the dense table is sliced to a
+        power-of-two page bound covering ``hi`` (the wave's highest
+        position written or read this step), so the chunk op's KV side is
+        O(resident pages) instead of O(max table width): the fused Pallas
+        kernel grids over exactly those pages, and the XLA gather
+        materializes only them. Trailing pages carry only causally-masked
+        positions, so the truncation is bitwise-neutral (spectator rows
+        whose resident KV exceeds the bound produce garbage either way —
+        their logits are dropped and nothing is written). Bucketing keeps
+        the number of distinct compiled shapes logarithmic.
+        """
+        bt = self.slots.block_tables()
+        if bt is None or not fused:
+            return bt
+        full = self.slots.max_pages_per_seq
+        bound = pow2_bucket(pages_for(hi, self.pool.page_size), hi=full)
+        if bound >= full:
+            return bt
+        return bt[:, :bound]
+
     def _prefill_chunked(
             self, items: list[tuple[int, RequestState]]) -> list[TokenEvent]:
         """Stream all admitted prompts through the chunk-append path.
 
         Each step processes one ``(num_slots, chunk)`` call: admitted rows
         consume their next chunk, every other slot is a spectator
-        (``chunk_lens == 0`` — nothing written). One compiled shape total.
-        Re-admitted (preempted) requests prefill ``prompt + generated``,
-        rebuilding exactly the KV an uninterrupted run would hold — unless
-        the prefix index still maps their prefix, in which case prefill
-        starts at the first unshared chunk boundary (``_chunk_start``) and
-        the shared pages are simply read through the block table.
+        (``chunk_lens == 0`` — nothing written). One compiled shape total
+        in the dense-gather mode; the fused mode trades that for a
+        log-bounded family of resident-bounded table widths
+        (``_chunk_tables``) so admission stops paying O(max table width)
+        KV materialization per step. Re-admitted (preempted) requests
+        prefill ``prompt + generated``, rebuilding exactly the KV an
+        uninterrupted run would hold — unless the prefix index still maps
+        their prefix, in which case prefill starts at the first unshared
+        chunk boundary (``_chunk_start``) and the shared pages are simply
+        read through the block table.
         """
         c = self.prefill_chunk
         seqs = {idx: state.prefill_tokens() for idx, state in items}
         progress = {idx: self._chunk_start(idx, len(seqs[idx]))
                     for idx, _ in items}
         plens = {idx: max(len(seqs[idx]), 1) for idx, _ in items}
+        # gather-vs-fused inflection by prompt length (plan-tuned): short
+        # waves keep the one-compile full-width gather
+        pp = self.plan.paged
+        fused = (self.pool is not None and pp.gather_chunk == "fused"
+                 and max(plens.values()) >= pp.fused_threshold)
         final_logits: dict[int, jax.Array] = {}
         n_steps = max(-(-(plens[idx] - progress[idx]) // c)
                       for idx, _ in items)
@@ -484,6 +545,7 @@ class Engine:
             tokens = np.zeros((self.num_slots, c), np.int32)
             chunk_lens = np.zeros((self.num_slots,), np.int32)
             lengths = self.slots.lengths()
+            hi = 0
             for idx, _state in items:
                 done = progress[idx]
                 cl = min(plens[idx] - done, c)
@@ -494,9 +556,12 @@ class Engine:
                     tokens[idx, :avail] = seqs[idx][done:done + avail]
                 chunk_lens[idx] = cl          # p=0 feeds one pad token
                 lengths[idx] = done           # prefill progress, not final P
+                hi = max(hi, done + cl)
             logits, self.cache = self._chunk(
-                self.params, jnp.asarray(tokens), jnp.asarray(chunk_lens),
-                self.cache, self.slots.block_tables(), jnp.asarray(lengths))
+                self.params, jnp.asarray(tokens),
+                self._upload_i32("chunk_lens", chunk_lens),
+                self.cache, self._chunk_tables(fused, hi),
+                self._upload_i32("chunk_lengths", lengths))
             for idx, _state in items:
                 if chunk_lens[idx]:
                     progress[idx] += int(chunk_lens[idx])
@@ -533,10 +598,17 @@ class Engine:
     def _prefill_batched(
             self, items: list[tuple[int, RequestState]]) -> list[TokenEvent]:
         """One padded prefill call for the whole admission wave; each row's
-        cache entry is inserted at its slot index afterwards."""
+        cache entry is inserted at its slot index afterwards. Prompts pad
+        to a power-of-two bucket (min ``PROMPT_BUCKET``) so distinct tail
+        lengths share a logarithmic family of compiles instead of
+        re-jitting at every 64-token multiple."""
         seqs = {idx: state.prefill_tokens() for idx, state in items}
         pmax = max(len(s) for s in seqs.values())
-        padded = -(-max(pmax, 1) // PROMPT_BUCKET) * PROMPT_BUCKET
+        # never pad past what plain 64-multiple rounding could reach
+        # (pmax <= max_seq is enforced at submit)
+        padded = pow2_bucket(
+            pmax, lo=PROMPT_BUCKET,
+            hi=-(-self.max_seq // PROMPT_BUCKET) * PROMPT_BUCKET)
         toks = np.zeros((self.num_slots, padded), np.int32)
         lens = np.zeros((self.num_slots,), np.int32)
         for row, (idx, _state) in enumerate(items):
@@ -606,7 +678,7 @@ class Engine:
         self._grow_or_preempt()
         if not self.by_slot:
             return []
-        lengths = jnp.asarray(self.slots.lengths())
+        lengths = self.slots.lengths_device()
         tokens = np.zeros((self.num_slots,), np.int32)
         for idx, state in self.by_slot.items():
             tokens[idx] = state.tokens[-1]

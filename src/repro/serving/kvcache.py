@@ -37,6 +37,14 @@ class SlotManager:
     def __init__(self, num_slots: int, max_seq: int):
         self.max_seq = max_seq
         self.slots = [self._empty_slot() for _ in range(num_slots)]
+        # device-side cache of the per-tick lengths operand (same
+        # invalidation discipline as the paged manager's block-table
+        # cache): rebuilt only when some slot's length actually changed
+        # (assign / release / tick), so spectator-heavy phases — chunked
+        # prefill steps where only the wave rows move, idle ticks — reuse
+        # the device-resident buffer instead of re-uploading it
+        self._len_dev = None
+        self._len_dirty = True
 
     # hooks overridden by the paged manager (blockpool.PagedSlotManager)
     def _empty_slot(self) -> Slot:
@@ -64,11 +72,13 @@ class SlotManager:
                 if new is None:
                     return None
                 self.slots[i] = new
+                self._len_dirty = True
                 return i
         return None
 
     def release(self, idx: int) -> None:
         self.slots[idx] = self._empty_slot()
+        self._len_dirty = True
 
     def ensure(self, idx: int, positions: int) -> bool:
         """Grow backing storage for slot ``idx`` to ``positions`` KV
@@ -96,6 +106,18 @@ class SlotManager:
     def lengths(self) -> np.ndarray:
         return np.array([s.length for s in self.slots], np.int32)
 
+    def lengths_device(self):
+        """The (num_slots,) int32 lengths operand as a **cached device
+        array** — the jitted decode step's per-tick companion to
+        :meth:`block_tables`. Rebuilt (one host→device upload) only when
+        a slot's length changed since the last call; unchanged ticks and
+        repeat reads hand back the same device-resident buffer."""
+        if self._len_dirty or self._len_dev is None:
+            import jax.numpy as jnp
+            self._len_dev = jnp.asarray(self.lengths())
+            self._len_dirty = False
+        return self._len_dev
+
     def active(self) -> np.ndarray:
         return np.array([not s.free for s in self.slots], np.bool_)
 
@@ -106,4 +128,5 @@ class SlotManager:
         s = self.slots[idx]
         if wrote_kv:
             s.length += 1
+            self._len_dirty = True
         s.generated += 1
