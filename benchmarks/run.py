@@ -17,9 +17,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (attention_softmax, chunk_prefill, decode_engine,
-                            dispatch_table, flat_gemm_sweep, paged_decode,
-                            prefill_engine, prefix_sharing, roofline_report,
-                            scheduler_sweep)
+                            dispatch_table, flat_gemm_sweep, group_decode,
+                            paged_decode, prefill_engine, prefix_sharing,
+                            roofline_report, scheduler_sweep)
 
     results = {}
     for name, mod in [
@@ -31,6 +31,7 @@ def main() -> int:
         ("chunk_prefill", chunk_prefill),
         ("scheduler_sweep", scheduler_sweep),
         ("prefix_sharing", prefix_sharing),
+        ("group_decode", group_decode),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:

@@ -396,3 +396,79 @@ def find_chunk_block(
             f"no chunk size among {tuple(candidates)} sits on the "
             f"page grid (page_size {page_size})")
     return best
+
+
+# ---------------------------------------------------------------------------
+# Grouped-decode decision flow: per-row prefix reads vs one read per group
+# (find_inflections for the shared-prefix decode path)
+# ---------------------------------------------------------------------------
+
+# fixed cost of the extra grouped-attention stage per decode step (second
+# kernel launch + partial un-scatter/merge glue around it)
+_GROUP_STAGE_OVERHEAD_S = 2e-6
+
+
+def predict_group_decode_time(
+    mode: str, members: int, prefix_pages: int, tail_pages: int,
+    kv_dim: int, *,
+    page_size: int = 64,
+    dtype_bytes: int = 2,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> float:
+    """Roofline time for the KV side of one decode step over one
+    shared-prefix group (the q-side work is identical across modes and
+    cancels out of the decision).
+
+    ``mode="off"`` streams every member's full table: each of the
+    ``members`` rows re-reads the ``prefix_pages`` it shares plus its own
+    ``tail_pages``.
+
+    ``mode="grouped"`` reads the shared prefix **once** (stage 1,
+    one pass per group) and only the private tails per member (stage 2),
+    paying the extra stage's fixed launch/merge bubble — the
+    FlashDecoding++ unified-max merge is what makes the split free of a
+    per-member rescale pass.
+    """
+    page_bytes = 2 * page_size * kv_dim * dtype_bytes       # K + V
+    if mode == "off":
+        pages = members * (prefix_pages + tail_pages)
+        return (pages * page_bytes / spec.hbm_bw
+                + pages * _GRID_STEP_OVERHEAD_S)
+    if mode == "grouped":
+        pages = prefix_pages + members * tail_pages
+        return (pages * page_bytes / spec.hbm_bw
+                + pages * _GRID_STEP_OVERHEAD_S
+                + _GROUP_STAGE_OVERHEAD_S)
+    raise ValueError(f"unknown group mode {mode!r}")
+
+
+def find_group_threshold(
+    kv_dim: int, *,
+    page_size: int = 64,
+    max_members: int = 64,
+    max_prefix_pages: int = 64,
+    tail_pages: int = 1,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> int:
+    """Smallest ``members * prefix_pages`` product at which grouped
+    decode beats per-row prefix re-reads — the dispatch floor the slot
+    manager's group plan applies per group each tick. Sweeps the
+    (members, prefix pages) grid at one private tail page (the
+    steady-decode shape); returns a sentinel above the sweep when the
+    grouped path never wins (stage bubble dominates tiny pools)."""
+    best = None
+    for members in range(2, max_members + 1):
+        pages = 1
+        while pages <= max_prefix_pages:
+            t_off = predict_group_decode_time(
+                "off", members, pages, tail_pages, kv_dim,
+                page_size=page_size, spec=spec)
+            t_grp = predict_group_decode_time(
+                "grouped", members, pages, tail_pages, kv_dim,
+                page_size=page_size, spec=spec)
+            if t_grp < t_off:
+                work = members * pages
+                if best is None or work < best:
+                    best = work
+            pages *= 2
+    return best if best is not None else max_members * max_prefix_pages + 1

@@ -44,6 +44,7 @@ PLAN_VERSION = 1
 BACKENDS = ("xla", "pallas")
 SCHEMES = ("sync", "unified_max")
 GATHER_MODES = ("dense", "fused")  # chunk-path page access discipline
+GROUP_MODES = ("off", "grouped")   # decode-path shared-prefix discipline
 
 
 class PlanError(ValueError):
@@ -181,8 +182,22 @@ class PagedPlan:
     fused discipline. ``chunk_block`` is the tuned prefill chunk size
     (``Engine(prefill_chunk=None)`` adopts it); it must divide the page
     size so prefix-sharing chunk boundaries stay on the share-less grid.
-    Tuned by
-    :func:`repro.core.dispatch.find_fused_threshold` /
+    ``decode_group`` names how decode attention treats sequences whose
+    block tables share refcounted prefix pages:
+
+      * ``"off"`` — every row re-reads its full table (shared pages are
+        deduplicated in *storage* only).
+      * ``"grouped"`` — the engine hands the attention op a per-tick
+        group plan; the shared prefix's attention is computed **once per
+        group** and merged into each member's private tail via the
+        unified-max combine (no per-member rescale), so N-way sharing
+        reads the prefix KV once instead of N times.
+
+    ``group_threshold`` is the tuned dispatch floor: a group is only
+    worth the extra kernel stage when ``members * prefix_pages`` reaches
+    it (below that the stage overhead beats the saved KV reads). Tuned
+    by :func:`repro.core.dispatch.find_group_threshold`; the other knobs
+    by :func:`repro.core.dispatch.find_fused_threshold` /
     :func:`repro.core.dispatch.find_chunk_block`.
     """
 
@@ -192,6 +207,8 @@ class PagedPlan:
     gather_chunk: str = "dense"
     fused_threshold: int = 256
     chunk_block: int = 64
+    decode_group: str = "off"
+    group_threshold: int = 2
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "paged.backend")
@@ -199,6 +216,8 @@ class PagedPlan:
         _check(self.gather_chunk, GATHER_MODES, "paged.gather_chunk")
         _check_pos(self.fused_threshold, "paged.fused_threshold")
         _check_pos(self.chunk_block, "paged.chunk_block")
+        _check(self.decode_group, GROUP_MODES, "paged.decode_group")
+        _check_pos(self.group_threshold, "paged.group_threshold")
 
 
 # ---------------------------------------------------------------------------
@@ -295,7 +314,10 @@ class ExecutionPlan:
                 f"paged[{self.paged.backend}/{self.paged.gather_chunk}"
                 + (f">={self.paged.fused_threshold}"
                    if self.paged.gather_chunk == "fused" else "")
-                + f", chunk={self.paged.chunk_block}]")
+                + f", chunk={self.paged.chunk_block}"
+                + (f", group>={self.paged.group_threshold}"
+                   if self.paged.decode_group == "grouped" else "")
+                + "]")
 
     # -- serialization -------------------------------------------------------
 
@@ -432,6 +454,8 @@ def make_plan(
     gather_chunk: str = "dense",
     fused_threshold: int = 256,
     chunk_block: int = 64,
+    decode_group: str = "off",
+    group_threshold: int = 2,
 ) -> ExecutionPlan:
     """Build an untuned plan with uniform knobs — the hand-rolled
     counterpart of :func:`tune` for hosts that only need to pin backends
@@ -450,7 +474,9 @@ def make_plan(
         paged=PagedPlan(backend=backend, scheme=scheme, fallback=fallback,
                         gather_chunk=gather_chunk,
                         fused_threshold=fused_threshold,
-                        chunk_block=chunk_block),
+                        chunk_block=chunk_block,
+                        decode_group=decode_group,
+                        group_threshold=group_threshold),
     )
 
 
@@ -518,6 +544,8 @@ def tune(
     fused_threshold = dispatch.find_fused_threshold(
         rep_seq, cfg.kv_dim, chunk=chunk_block, page_size=page_size,
         spec=spec)
+    group_threshold = dispatch.find_group_threshold(
+        cfg.kv_dim, page_size=page_size, spec=spec)
 
     plan = ExecutionPlan(
         matmul=MatmulPlan(backend=backend, default_m1=default.m1,
@@ -533,7 +561,9 @@ def tune(
         paged=PagedPlan(backend=backend, scheme=scheme,
                         gather_chunk="fused",
                         fused_threshold=fused_threshold,
-                        chunk_block=chunk_block),
+                        chunk_block=chunk_block,
+                        decode_group="grouped",
+                        group_threshold=group_threshold),
         provenance=PlanProvenance(
             backend=backend,
             hardware=hardware_hash(spec), hardware_name=spec.name,

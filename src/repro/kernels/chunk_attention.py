@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import merge
 from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
 
 
@@ -96,25 +97,18 @@ def _paged_chunk_kernel(
         )                                                # (CG, PS)
         valid = _chunk_mask(s.shape[0], page_size, groups, length, i_idx)
 
-        centered = s - phi
-        msc_ref[0, 0] = jnp.maximum(
-            msc_ref[0, 0], jnp.max(jnp.where(valid, centered, -jnp.inf))
+        acc, den, msc = merge.unified_accumulate(
+            acc_ref[...], den_ref[...], msc_ref[0, 0], s - phi, v, valid
         )
-        e = jnp.where(valid, jnp.exp(centered), 0.0)
-
-        acc_ref[...] += jax.lax.dot_general(
-            e, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        den_ref[...] += jnp.broadcast_to(
-            jnp.sum(e, axis=1, keepdims=True), den_ref.shape
-        )
+        acc_ref[...] = acc
+        den_ref[...] = den
+        msc_ref[0, 0] = msc
 
     @pl.when(i_idx == n_i - 1)
     def _fin():
-        den = den_ref[:, :1]
-        den = jnp.where(den == 0.0, 1.0, den)   # fully-masked rows -> 0
-        out_ref[0, 0] = (acc_ref[...] / den).astype(out_ref.dtype)
+        # guard_zero: fully-masked rows -> 0 (callers drop them)
+        out = merge.finalize(acc_ref[...], den_ref[...], guard_zero=True)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
         stat_ref[0, 0] = msc_ref[0, 0]
 
 
@@ -153,23 +147,18 @@ def _paged_chunk_kernel_sync(
         s = jnp.where(valid, s, -jnp.inf)
 
         # ---- the synchronized partial-softmax update T1 removes ----
-        m_prev = m_ref[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        rescale = jnp.exp(m_prev - m_new)
-        e = jnp.where(valid, jnp.exp(s - m_new), 0.0)
-        acc_ref[...] = acc_ref[...] * rescale + jax.lax.dot_general(
-            e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        acc, den, m_new = merge.sync_accumulate(
+            acc_ref[...], den_ref[...], m_ref[:, :1], s, v, valid=valid
         )
-        den_ref[...] = den_ref[...] * jnp.broadcast_to(
-            rescale, den_ref.shape
-        ) + jnp.broadcast_to(jnp.sum(e, axis=1, keepdims=True), den_ref.shape)
+        acc_ref[...] = acc
+        den_ref[...] = den
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
 
     @pl.when(i_idx == n_i - 1)
     def _fin():
-        den = den_ref[:, :1]
-        den = jnp.where(den == 0.0, 1.0, den)   # fully-masked rows -> 0
-        out_ref[0, 0] = (acc_ref[...] / den).astype(out_ref.dtype)
+        # guard_zero: fully-masked rows -> 0 (callers drop them)
+        out = merge.finalize(acc_ref[...], den_ref[...], guard_zero=True)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
 def _regroup_q(q: jax.Array, hk: int):

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import merge
 from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
 
 DEFAULT_BLOCK_K = 512
@@ -73,24 +74,17 @@ def _decode_kernel(
     offs = s_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = offs < length
 
-    centered = s - phi
-    msc_ref[0, 0] = jnp.maximum(
-        msc_ref[0, 0], jnp.max(jnp.where(valid, centered, -jnp.inf))
+    acc, den, msc = merge.unified_accumulate(
+        acc_ref[...], den_ref[...], msc_ref[0, 0], s - phi, v, valid
     )
-    e = jnp.where(valid, jnp.exp(centered), 0.0)         # (G, BK)
-
-    acc_ref[...] += jax.lax.dot_general(
-        e, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    den_ref[...] += jnp.broadcast_to(
-        jnp.sum(e, axis=1, keepdims=True), den_ref.shape
-    )
+    acc_ref[...] = acc
+    den_ref[...] = den
+    msc_ref[0, 0] = msc
 
     @pl.when(s_idx == n_s - 1)
     def _fin():
-        den = den_ref[:, :1]                             # (G, 1)
-        out_ref[0, 0] = (acc_ref[...] / den).astype(out_ref.dtype)
+        out = merge.finalize(acc_ref[...], den_ref[...])
+        out_ref[0, 0] = out.astype(out_ref.dtype)
         stat_ref[0, 0] = msc_ref[0, 0]
 
 
@@ -201,22 +195,17 @@ def _decode_kernel_sync(
     s = jnp.where(offs < length, s, -jnp.inf)
 
     # ---- the synchronized partial-softmax update the paper removes ----
-    m_prev = m_ref[:, :1]                                   # (G, 1)
-    m_cur = jnp.max(s, axis=1, keepdims=True)               # (G, 1)
-    m_new = jnp.maximum(m_prev, m_cur)
-    rescale = jnp.exp(m_prev - m_new)                       # (G, 1)
-    e = jnp.exp(s - m_new)                                  # (G, BK)
-    acc_ref[...] = acc_ref[...] * rescale + jax.lax.dot_general(
-        e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    acc, den, m_new = merge.sync_accumulate(
+        acc_ref[...], den_ref[...], m_ref[:, :1], s, v
     )
-    den_ref[...] = den_ref[...] * jnp.broadcast_to(rescale, den_ref.shape) + (
-        jnp.broadcast_to(jnp.sum(e, axis=1, keepdims=True), den_ref.shape)
-    )
+    acc_ref[...] = acc
+    den_ref[...] = den
     m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
 
     @pl.when(s_idx == n_s - 1)
     def _fin():
-        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+        out = merge.finalize(acc_ref[...], den_ref[...])
+        out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -277,23 +266,17 @@ def _paged_decode_kernel(
             jnp.int32, s.shape, 1)
         valid = offs < length
 
-        centered = s - phi
-        msc_ref[0, 0] = jnp.maximum(
-            msc_ref[0, 0], jnp.max(jnp.where(valid, centered, -jnp.inf))
+        acc, den, msc = merge.unified_accumulate(
+            acc_ref[...], den_ref[...], msc_ref[0, 0], s - phi, v, valid
         )
-        e = jnp.where(valid, jnp.exp(centered), 0.0)
-
-        acc_ref[...] += jax.lax.dot_general(
-            e, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        den_ref[...] += jnp.broadcast_to(
-            jnp.sum(e, axis=1, keepdims=True), den_ref.shape
-        )
+        acc_ref[...] = acc
+        den_ref[...] = den
+        msc_ref[0, 0] = msc
 
     @pl.when(i_idx == n_i - 1)
     def _fin():
-        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+        out = merge.finalize(acc_ref[...], den_ref[...])
+        out_ref[0, 0] = out.astype(out_ref.dtype)
         stat_ref[0, 0] = msc_ref[0, 0]
 
 
@@ -397,21 +380,17 @@ def _paged_decode_kernel_sync(
             jnp.int32, s.shape, 1)
         s = jnp.where(offs < length, s, -jnp.inf)
 
-        m_prev = m_ref[:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        rescale = jnp.exp(m_prev - m_new)
-        e = jnp.exp(s - m_new)
-        acc_ref[...] = acc_ref[...] * rescale + jax.lax.dot_general(
-            e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        acc, den, m_new = merge.sync_accumulate(
+            acc_ref[...], den_ref[...], m_ref[:, :1], s, v
         )
-        den_ref[...] = den_ref[...] * jnp.broadcast_to(
-            rescale, den_ref.shape
-        ) + jnp.broadcast_to(jnp.sum(e, axis=1, keepdims=True), den_ref.shape)
+        acc_ref[...] = acc
+        den_ref[...] = den
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
 
     @pl.when(i_idx == n_i - 1)
     def _fin():
-        out_ref[0, 0] = (acc_ref[...] / den_ref[:, :1]).astype(out_ref.dtype)
+        out = merge.finalize(acc_ref[...], den_ref[...])
+        out_ref[0, 0] = out.astype(out_ref.dtype)
 
 
 def paged_decode_attention_sync(

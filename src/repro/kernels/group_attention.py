@@ -1,0 +1,328 @@
+"""Grouped prefix-shared decode attention (Pallas TPU).
+
+PR 4 deduplicated shared-prefix *storage* (refcounted COW pages); this
+module deduplicates the decode-step *compute* over those pages. Requests
+whose block tables begin with the same run of refcount>1 pages form a
+group; the shared run is read once per ``(group, kv_head)`` instead of
+once per request:
+
+  * **Stage 1** (:func:`_group_prefix_kernel`): grid ``(NG, HK, LP)`` over
+    the *group* block table (scalar-prefetched). Every member's grouped
+    query heads ride in one ``(M·G, D)`` tile, so one pass over the prefix
+    pages produces every member's partial — emitted raw as unified-max
+    ``(num, den, stat)``, not normalized.
+  * **Stage 2** (:func:`_tail_merge_kernel`): per-request grid over the
+    full block table, skipping pages wholly inside the shared prefix. The
+    scratch accumulators are *initialized from the stage-1 partials*, so
+    the merge is the unified-max add itself — the paper's §3 asynchronized
+    softmax with static φ makes the combine a plain ``(num, den)`` sum
+    with no rescale (see :mod:`repro.kernels.merge`), which is exactly why
+    two independently-produced partials can meet here without a
+    synchronization pass.
+
+Both stages report ``max(s − φ)`` so the wrapper keeps the overflow-
+recompute fallback contract of the ungrouped kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import merge
+from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alias)
+
+
+class DecodeGroups(NamedTuple):
+    """Device operands of one tick's shared-prefix group plan.
+
+    NG/LP/M are pow2-padded (group count / max prefix pages / max members)
+    so tick-to-tick shape churn doesn't retrace; B is the slot count.
+    Padding groups have ``n_pages == num_members == g_prefix_len == 0``;
+    padded table entries and member rows hold out-of-bounds sentinels
+    (consumers clamp). Solo rows have ``gid == NG`` and ``prefix_len == 0``.
+    """
+
+    tables: jax.Array        # (NG, LP) int32 physical pages of shared runs
+    n_pages: jax.Array       # (NG,) int32 live pages per group
+    g_prefix_len: jax.Array  # (NG,) int32 shared tokens per group
+    num_members: jax.Array   # (NG,) int32
+    member_rows: jax.Array   # (NG, M) int32 batch row of each member
+    gid: jax.Array           # (B,) int32 group of each row (NG = solo)
+    member: jax.Array        # (B,) int32 rank of the row within its group
+    prefix_len: jax.Array    # (B,) int32 shared tokens of each row (0 = solo)
+
+
+def _group_prefix_kernel(
+    gt_ref,       # (NG, LP) int32 scalar-prefetch (consumed by index maps)
+    plen_ref,     # (NG,) int32 scalar-prefetch — shared tokens per group
+    nm_ref,       # (NG,) int32 scalar-prefetch — live members per group
+    q_ref,        # (1, 1, M*G, D) — all members' grouped query heads
+    k_ref,        # (1, PS, 1, D) — physical page gt[g, i]
+    v_ref,        # (1, PS, 1, D)
+    num_ref,      # (1, 1, M*G, D) f32 — raw unified-max numerator
+    den_ref,      # (1, 1, M*G, 128) f32
+    stat_ref,     # (1, 1) f32 : max(s - phi) over valid positions
+    acc_ref,      # (M*G, D) f32
+    dacc_ref,     # (M*G, 128) f32
+    msc_ref,      # (1, 1) f32
+    *,
+    phi: float,
+    scale: float,
+    page_size: int,
+    heads_per_kv: int,
+):
+    g_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+    n_i = pl.num_programs(2)
+
+    @pl.when(i_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        dacc_ref[...] = jnp.zeros_like(dacc_ref)
+        msc_ref[...] = jnp.full_like(msc_ref, -jnp.inf)
+
+    plen = plen_ref[g_idx]
+    nm = nm_ref[g_idx]
+
+    # pages past the shared run (incl. every page of padding groups): skip
+    @pl.when(i_idx * page_size < plen)
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (MG, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (MG, PS)
+        offs = i_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        # padding member slots ride along with clamped (garbage) q rows —
+        # keep them out of the group's shared stat so they can never flip
+        # the overflow fallback
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // heads_per_kv
+        valid = jnp.logical_and(offs < plen,    # partial last prefix page
+                                row < nm)
+
+        acc, den, msc = merge.unified_accumulate(
+            acc_ref[...], dacc_ref[...], msc_ref[0, 0], s - phi, v, valid
+        )
+        acc_ref[...] = acc
+        dacc_ref[...] = den
+        msc_ref[0, 0] = msc
+
+    @pl.when(i_idx == n_i - 1)
+    def _fin():
+        num_ref[0, 0] = acc_ref[...]
+        den_ref[0, 0] = dacc_ref[...]
+        stat_ref[0, 0] = msc_ref[0, 0]
+
+
+def _tail_merge_kernel(
+    bt_ref,       # (B, NB) int32 scalar-prefetch (consumed by index maps)
+    len_ref,      # (B,) int32 scalar-prefetch
+    plen_ref,     # (B,) int32 scalar-prefetch — per-row shared tokens
+    q_ref,        # (1, 1, G, D)
+    num_in_ref,   # (1, 1, G, D) f32 — stage-1 partial (zeros for solo rows)
+    den_in_ref,   # (1, 1, G, 128) f32
+    k_ref,        # (1, PS, 1, D)
+    v_ref,        # (1, PS, 1, D)
+    out_ref,      # (1, 1, G, D)
+    stat_ref,     # (1, 1) f32 — tail-only stat (wrapper maxes with stage 1)
+    acc_ref,      # (G, D) f32
+    den_ref,      # (G, 128) f32
+    msc_ref,      # (1, 1) f32
+    *,
+    phi: float,
+    scale: float,
+    page_size: int,
+):
+    b_idx = pl.program_id(0)
+    i_idx = pl.program_id(2)
+    n_i = pl.num_programs(2)
+
+    # the merge: seed the accumulators with the prefix partial — the
+    # unified-max scheme needs no rescale to continue accumulating
+    @pl.when(i_idx == 0)
+    def _init():
+        acc_ref[...] = num_in_ref[0, 0]
+        den_ref[...] = den_in_ref[0, 0]
+        msc_ref[...] = jnp.full_like(msc_ref, -jnp.inf)
+
+    length = len_ref[b_idx]
+    plen = plen_ref[b_idx]
+
+    # pages wholly inside the shared prefix (stage 1 covered them) or
+    # wholly past the sequence carry no tail key
+    @pl.when(jnp.logical_and((i_idx + 1) * page_size > plen,
+                             i_idx * page_size < length))
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (G, PS)
+        offs = i_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        valid = jnp.logical_and(offs >= plen, offs < length)
+
+        acc, den, msc = merge.unified_accumulate(
+            acc_ref[...], den_ref[...], msc_ref[0, 0], s - phi, v, valid
+        )
+        acc_ref[...] = acc
+        den_ref[...] = den
+        msc_ref[0, 0] = msc
+
+    @pl.when(i_idx == n_i - 1)
+    def _fin():
+        # guard_zero: empty batch slots (length 0, no carry) -> 0 rows
+        out = merge.finalize(acc_ref[...], den_ref[...], guard_zero=True)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+        stat_ref[0, 0] = msc_ref[0, 0]
+
+
+def grouped_paged_decode_attention_unified_max(
+    q: jax.Array,             # (B, HQ, D)
+    k_pool: jax.Array,        # (NP, PS, HK, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, NB) int32 — full per-request tables
+    lengths: jax.Array,       # (B,) int32
+    groups: DecodeGroups,
+    *,
+    phi: float = 0.0,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Two-stage grouped decode attention over a block-paged KV pool.
+
+    Returns ``(out, stat)`` exactly like
+    :func:`~repro.kernels.decode_attention.paged_decode_attention_unified_max`
+    — ``stat`` is the max over prefix *and* tail contributions, so the
+    wrapper-level overflow fallback fires on the same condition as the
+    ungrouped kernel.
+    """
+    b, hq, d = q.shape
+    num_pages, ps, hk, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = hq // hk
+    ng, lp = groups.tables.shape
+    m = groups.member_rows.shape[1]
+    mg = m * g
+    scale = scale if scale is not None else d ** -0.5
+
+    qg = q.reshape(b, hk, g, d)
+
+    # ---- stage 1: shared-prefix partials, one pass per (group, kv_head)
+    gtables = jnp.minimum(groups.tables, num_pages - 1)
+    rows = jnp.clip(groups.member_rows, 0, b - 1).reshape(-1)
+    qs = (jnp.take(qg, rows, axis=0)
+             .reshape(ng, m, hk, g, d)
+             .transpose(0, 2, 1, 3, 4)
+             .reshape(ng, hk, mg, d))
+
+    s1_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(ng, hk, lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, mg, d),
+                         lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], 0, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, mg, d),
+                         lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, mg, 128),
+                         lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g_, h_, i_, gt, pn, nm: (g_, h_)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((mg, d), jnp.float32),
+            pltpu.VMEM((mg, 128), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+    )
+    s1_kernel = functools.partial(
+        _group_prefix_kernel, phi=phi, scale=scale, page_size=ps,
+        heads_per_kv=g)
+    num, den, stat1 = pl.pallas_call(
+        s1_kernel,
+        grid_spec=s1_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((ng, hk, mg, d), jnp.float32),
+            jax.ShapeDtypeStruct((ng, hk, mg, 128), jnp.float32),
+            jax.ShapeDtypeStruct((ng, hk), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(gtables.astype(jnp.int32), groups.g_prefix_len.astype(jnp.int32),
+      groups.num_members.astype(jnp.int32), qs, k_pool, v_pool)
+
+    # un-scatter each row's own partial; solo rows carry zeros (= empty)
+    gid_c = jnp.clip(groups.gid, 0, ng - 1)
+    mem_c = jnp.clip(groups.member, 0, m - 1)
+    has_pref = groups.prefix_len > 0
+    num_b = num.reshape(ng, hk, m, g, d)[gid_c, :, mem_c]       # (B,HK,G,D)
+    den_b = den.reshape(ng, hk, m, g, 128)[gid_c, :, mem_c]     # (B,HK,G,128)
+    stat_b = stat1[gid_c]                                       # (B,HK)
+    num_b = jnp.where(has_pref[:, None, None, None], num_b, 0.0)
+    den_b = jnp.where(has_pref[:, None, None, None], den_b, 0.0)
+    stat_b = jnp.where(has_pref[:, None], stat_b, -jnp.inf)
+
+    # ---- stage 2: private tail, accumulating on top of the carry
+    block_tables = jnp.minimum(block_tables, num_pages - 1)
+    s2_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128),
+                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], 0, h_, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, i_, bt, ln, pn: (b_, h_)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+    )
+    s2_kernel = functools.partial(
+        _tail_merge_kernel, phi=phi, scale=scale, page_size=ps)
+    out, stat2 = pl.pallas_call(
+        s2_kernel,
+        grid_spec=s2_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hk), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      groups.prefix_len.astype(jnp.int32), qg, num_b, den_b, k_pool, v_pool)
+
+    return out.reshape(b, hq, d), jnp.maximum(stat_b, stat2)

@@ -39,6 +39,9 @@ from repro.kernels.decode_attention import (
 from repro.kernels.flat_gemm import flat_gemm
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.gemv import gemv
+from repro.kernels.group_attention import (
+    grouped_paged_decode_attention_unified_max,
+)
 
 _INTERPRET = jax.default_backend() == "cpu"
 
@@ -238,6 +241,7 @@ def attention_decode_paged(
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
     plan: Optional[ExecutionPlan] = None,
     shard=None,
+    groups=None,
 ) -> jax.Array:
     """Decode attention over a block-paged KV cache (T1 + overflow fallback).
 
@@ -248,34 +252,66 @@ def attention_decode_paged(
     (bitwise identical to the dense path when NB*PS == max_seq); on the
     Pallas backend the block table is scalar-prefetched so the kernel
     DMAs exactly the pages each sequence owns.
+
+    ``groups`` (a :class:`~repro.kernels.group_attention.DecodeGroups`)
+    activates the prefix-shared grouped path: the shared-prefix pages are
+    read once per group and merged with each request's private tail via
+    the unified-max combine. On the XLA backend the dense view is
+    reconstructed *through* the group plan
+    (:func:`~repro.kernels.ref.gather_grouped_kv`) and fed to the
+    identical ref math — grouped outputs are bitwise-equal to ungrouped by
+    construction. On the Pallas backend the two-stage group kernel runs
+    for the unified-max scheme (the sync scheme and the overflow
+    recompute fall back to the ungrouped sync kernel).
     """
     pp = (plan or DEFAULT_PLAN).paged
     unified = _unified(phi_cfg, pp.scheme)
     if pp.backend != "pallas":
         if not unified:
+            if groups is not None:
+                return ref.attention_decode_grouped_ref(
+                    q, k_pool, v_pool, block_tables, lengths, groups,
+                    shard=shard)
             return ref.attention_decode_paged_ref(
                 q, k_pool, v_pool, block_tables, lengths, shard=shard)
-        out, stat = ref.attention_decode_paged_unified_max_ref(
-            q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
-            shard=shard,
-        )
+        if groups is not None:
+            out, stat = ref.attention_decode_grouped_unified_max_ref(
+                q, k_pool, v_pool, block_tables, lengths, groups,
+                phi=phi_cfg.phi, shard=shard,
+            )
+            safe = functools.partial(
+                ref.attention_decode_grouped_ref, q, k_pool, v_pool,
+                block_tables, lengths, groups, shard=shard,
+            )
+        else:
+            out, stat = ref.attention_decode_paged_unified_max_ref(
+                q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
+                shard=shard,
+            )
+            safe = functools.partial(
+                ref.attention_decode_paged_ref, q, k_pool, v_pool,
+                block_tables, lengths, shard=shard,
+            )
         if not pp.fallback:
             return out
         overflow = jnp.any(stat > phi_cfg.band[1])
-        safe = functools.partial(
-            ref.attention_decode_paged_ref, q, k_pool, v_pool, block_tables,
-            lengths, shard=shard,
-        )
         return jax.lax.cond(overflow, lambda _: safe(), lambda _: out, None)
 
     if not unified:
+        # grouped sync has no kernel — the ungrouped sync kernel is exact
         return paged_decode_attention_sync(
             q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
         )
-    out, stat = paged_decode_attention_unified_max(
-        q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
-        interpret=_INTERPRET,
-    )
+    if groups is not None:
+        out, stat = grouped_paged_decode_attention_unified_max(
+            q, k_pool, v_pool, block_tables, lengths, groups,
+            phi=phi_cfg.phi, interpret=_INTERPRET,
+        )
+    else:
+        out, stat = paged_decode_attention_unified_max(
+            q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
+            interpret=_INTERPRET,
+        )
     if not pp.fallback:
         return out
     overflow = jnp.any(stat > phi_cfg.band[1])

@@ -238,6 +238,81 @@ def attention_decode_paged_unified_max_ref(
 
 
 # ---------------------------------------------------------------------------
+# Grouped (prefix-shared) decode oracles
+# ---------------------------------------------------------------------------
+
+
+def gather_grouped_kv(pool: jax.Array, block_tables: jax.Array,
+                      groups) -> jax.Array:
+    """Dense per-sequence KV view reconstructed *through* the group plan.
+
+    ``groups`` duck-types :class:`repro.kernels.group_attention.DecodeGroups`
+    (``tables (NG, LP)``, ``gid (B,)``, ``prefix_len (B,)``). Each row's
+    positions below its ``prefix_len`` are read via its *group's* block
+    table; the rest via its own table — exactly the data sources of the
+    two-stage grouped kernel. Because a grouped row's leading block-table
+    entries ARE its group's pages (the group key is a leading run of the
+    row's own shared pages), the result is elementwise bitwise-equal to
+    ``gather_paged_kv(pool, block_tables)`` — while making the group
+    operands load-bearing, which is what lets the grouped XLA path promise
+    bit-identical outputs versus the ungrouped one.
+    """
+    b, nb = block_tables.shape
+    ps = pool.shape[1]
+    ng, lp = groups.tables.shape
+    width = nb * ps
+    tail = gather_paged_kv(pool, block_tables)          # (B, NB*PS, ...)
+    gkv = gather_paged_kv(pool, groups.tables)          # (NG, LP*PS, ...)
+    if lp * ps < width:
+        pad = [(0, 0), (0, width - lp * ps)] + [(0, 0)] * (gkv.ndim - 2)
+        gkv = jnp.pad(gkv, pad)
+    else:
+        gkv = gkv[:, :width]
+    pref = jnp.take(gkv, jnp.clip(groups.gid, 0, ng - 1), axis=0)
+    pos = jnp.arange(width)
+    use_pref = (pos[None, :, None, None]
+                < groups.prefix_len[:, None, None, None])
+    return jnp.where(use_pref, pref, tail)
+
+
+def attention_decode_grouped_ref(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    groups,
+    *,
+    scale: float | None = None,
+    shard=None,
+) -> jax.Array:
+    """Safe (max-stabilized) grouped decode oracle: the grouped gather
+    feeds the identical dense ref, so grouped == ungrouped bitwise."""
+    k = gather_grouped_kv(k_pool, block_tables, groups)
+    v = gather_grouped_kv(v_pool, block_tables, groups)
+    return attention_decode_ref(q, k, v, lengths, scale=scale, shard=shard)
+
+
+def attention_decode_grouped_unified_max_ref(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    groups,
+    *,
+    phi: float,
+    scale: float | None = None,
+    shard=None,
+) -> tuple[jax.Array, jax.Array]:
+    """T1 (async partial-softmax) grouped decode oracle."""
+    k = gather_grouped_kv(k_pool, block_tables, groups)
+    v = gather_grouped_kv(v_pool, block_tables, groups)
+    return attention_decode_unified_max_ref(
+        q, k, v, lengths, phi=phi, scale=scale, shard=shard)
+
+
+# ---------------------------------------------------------------------------
 # Chunk-append attention (chunked prefill)
 # ---------------------------------------------------------------------------
 

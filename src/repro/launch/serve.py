@@ -19,7 +19,13 @@ flow for the arch and saves a provenanced ``plans/<arch>-<hw>.json``;
 hardware or config hash — are rejected at load). ``--gather-chunk
 dense|fused`` overrides the plan's chunked-prefill page-access mode
 (fused = the chunk-attention kernel over the pool / resident-bounded
-tables on XLA — see ``repro.kernels.chunk_attention``).
+tables on XLA — see ``repro.kernels.chunk_attention``). ``--decode-group
+grouped`` overrides the plan's prefix-shared decode mode: with
+``--prefix-sharing`` on a paged cache, requests decoding behind the same
+refcounted prefix pages attend to the shared prefix once per group and
+unified-max-merge their private tails (see
+``repro.kernels.group_attention``); the summary then reports grouped
+decode counts and prefix KV bytes the dedup saved.
 """
 import argparse
 import sys
@@ -66,6 +72,13 @@ def _parse():
                          "view per chunk step, 'fused' reads pages in "
                          "place (fused kernel on the Pallas backend, "
                          "resident-bounded tables on XLA)")
+    ap.add_argument("--decode-group", choices=["off", "grouped"],
+                    default=None,
+                    help="override the plan's prefix-shared decode mode: "
+                         "'grouped' computes shared-prefix attention once "
+                         "per group and unified-max-merges per-request "
+                         "private tails (paged cache + --prefix-sharing "
+                         "only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--plan", default=None, metavar="PATH",
@@ -108,12 +121,16 @@ def main() -> int:
         plan = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
         print(f"loaded plan {args.plan}\n  {plan.describe()}")
 
-    if args.gather_chunk is not None:
+    if args.gather_chunk is not None or args.decode_group is not None:
         import dataclasses
         base = plan if plan is not None else plan_mod.DEFAULT_PLAN
+        over = {}
+        if args.gather_chunk is not None:
+            over["gather_chunk"] = args.gather_chunk
+        if args.decode_group is not None:
+            over["decode_group"] = args.decode_group
         plan = dataclasses.replace(
-            base, paged=dataclasses.replace(
-                base.paged, gather_chunk=args.gather_chunk))
+            base, paged=dataclasses.replace(base.paged, **over))
 
     num_pages = args.num_pages
     if num_pages is None and args.cache_kind == "paged":
@@ -152,6 +169,9 @@ def main() -> int:
         line += (f", {eng.stats.shared_prefix_pages} shared pages, "
                  f"{eng.stats.saved_prefill_tokens} prefill tokens saved, "
                  f"{eng.stats.cow_forks} COW forks")
+    if eng.stats.grouped_requests:
+        line += (f", {eng.stats.grouped_requests} grouped decodes, "
+                 f"{eng.stats.prefix_kv_bytes_saved} prefix KV bytes saved")
     print(line + ")")
     for rid in sorted(out)[:4]:
         print(f"  req {rid}: {out[rid]} "

@@ -289,14 +289,16 @@ def _paged_scatter_chunk(pool: jax.Array, new: jax.Array,
 def attention_decode_block_paged(
     ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
     pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
-    lengths: jax.Array, *, use_rope: bool = True,
+    lengths: jax.Array, *, use_rope: bool = True, decode_groups=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode against a block-paged KV cache.
 
     x: (B, 1, D); pool_k/v: (NP, PS, HK, Dh) shared page pools;
     block_tables: (B, NB) int32. Empty slots in a partially occupied batch
     write nothing — their block-table entries are the out-of-bounds
-    sentinel, so the scatter drops them.
+    sentinel, so the scatter drops them. ``decode_groups`` (a
+    :class:`~repro.kernels.group_attention.DecodeGroups`) activates the
+    prefix-shared grouped attention path.
     """
     cfg = ctx.cfg
     b = x.shape[0]
@@ -313,6 +315,7 @@ def attention_decode_block_paged(
         SoftmaxPhiConfig(enabled=False),
         plan=ctx.plan,
         shard=ctx.shard,
+        groups=decode_groups,
     )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
     return ctx.matmul(o, p["wo"]), pool_k, pool_v

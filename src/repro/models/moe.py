@@ -306,7 +306,7 @@ def make_block(groups: int = 0, capacity_factor: float = 1.25):
 
 def make_decode_block(groups: int = 0):
     def decode_block(ctx: LayerCtx, p: Params, x, position, cache_i, lengths,
-                     block_tables=None):
+                     block_tables=None, decode_groups=None):
         cfg = ctx.cfg
         h = L.norm(cfg, p["attn_norm"], x)
         if block_tables is None:
@@ -317,7 +317,7 @@ def make_decode_block(groups: int = 0):
         else:
             a, ck, cv = L.attention_decode_block_paged(
                 ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
-                block_tables, lengths,
+                block_tables, lengths, decode_groups=decode_groups,
             )
         x = x + a
         h = L.norm(cfg, p["mlp_norm"], x)
@@ -423,10 +423,12 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                block_tables=None, unroll: bool = False, groups: int = 0):
+                block_tables=None, decode_groups=None, unroll: bool = False,
+                groups: int = 0):
     return tfm.decode_step(
         ctx, params, tokens, cache, lengths, block_tables=block_tables,
-        unroll=unroll, decode_block_fn=make_decode_block(groups=groups),
+        decode_groups=decode_groups, unroll=unroll,
+        decode_block_fn=make_decode_block(groups=groups),
     )
 
 

@@ -70,14 +70,16 @@ def block(ctx: LayerCtx, p: Params, x: jax.Array,
 
 def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
                  cache_i: dict, lengths: jax.Array,
-                 block_tables: Optional[jax.Array] = None):
+                 block_tables: Optional[jax.Array] = None,
+                 decode_groups=None):
     """One-token decode block over either KV layout.
 
     ``block_tables is None`` means the per-layer cache slice is a dense
     (B, S, HK, Dh) slot cache; with tables it is the shared (NP, PS, HK,
     Dh) page pool, addressed through the (B, NB) logical→physical map.
     The discriminator is resolved at trace time — each engine layout
-    compiles exactly one path.
+    compiles exactly one path. ``decode_groups`` (paged only) switches to
+    the prefix-shared grouped attention path.
     """
     cfg = ctx.cfg
     h = L.norm(cfg, p["attn_norm"], x)
@@ -88,7 +90,7 @@ def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
     else:
         a, ck, cv = L.attention_decode_block_paged(
             ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
-            block_tables, lengths,
+            block_tables, lengths, decode_groups=decode_groups,
         )
     x = x + a
     h = L.norm(cfg, p["mlp_norm"], x)
@@ -241,14 +243,17 @@ def prefill(
 def decode_step(
     ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
     lengths: jax.Array, *, block_tables: Optional[jax.Array] = None,
-    unroll: bool = False, decode_block_fn: Callable = decode_block,
+    decode_groups=None, unroll: bool = False,
+    decode_block_fn: Callable = decode_block,
 ):
     """One decode step. tokens: (B,) -> logits (B, V_padded), new cache.
 
     One signature for both KV layouts: with ``block_tables=None`` the cache
     leaves are dense (L, B, S, HK, Dh) slot caches; with a (B, NB)
     logical→physical page map they are (L, NP, PS, HK, Dh) page pools (the
-    scan carries the pool, the table rides in closure).
+    scan carries the pool, the table rides in closure). ``decode_groups``
+    rides along the same way and activates prefix-shared grouped attention
+    on the paged layout.
     """
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
@@ -257,7 +262,8 @@ def decode_step(
     x, new_cache = stack.run_stack_cached(
         params["layers"], x, cache,
         lambda p_i, xx, c_i: decode_block_fn(ctx, p_i, xx, position, c_i,
-                                             lengths, block_tables),
+                                             lengths, block_tables,
+                                             decode_groups),
         unroll=unroll,
     )
     x = L.norm(cfg, params["final_norm"], x)

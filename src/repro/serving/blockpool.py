@@ -75,10 +75,11 @@ from typing import Optional
 
 import numpy as np
 
-from repro.models.kvlayout import pages_for  # noqa: F401  (re-export: the
-# one page ceil-div definition, shared with layouts/engine/benchmarks)
+from repro.models.kvlayout import pages_for, pow2_bucket  # noqa: F401
+# (pages_for re-export: the one page ceil-div definition, shared with
+# layouts/engine/benchmarks)
 from repro.serving.kvcache import Slot, SlotManager
-from repro.serving.prefix import PrefixIndex
+from repro.serving.prefix import PrefixIndex, shared_prefix_groups
 
 
 class BlockPool:
@@ -168,6 +169,54 @@ class BlockPool:
 
 
 @dataclasses.dataclass
+class GroupPlan:
+    """One decode tick's shared-prefix grouping, host side.
+
+    Built by :meth:`PagedSlotManager.group_plan` from the refcount-derived
+    groups of :func:`~repro.serving.prefix.shared_prefix_groups`, with
+    every dimension pow2-bucketed (groups NG, prefix pages LP, members M)
+    so steady workloads hit a handful of jit shapes. Padding groups carry
+    zero counts; padding table entries hold the pool's out-of-bounds
+    sentinel; solo rows have ``gid == NG`` and ``prefix_len == 0``.
+
+    ``operands()`` lazily uploads the arrays as the
+    :class:`~repro.kernels.group_attention.DecodeGroups` pytree the model
+    steps take — cached, so the steady-state tick reuses the same device
+    buffers (the manager only rebuilds the plan when a block table
+    changed).
+    """
+
+    gid: np.ndarray            # (B,)  group id per slot row; NG = solo
+    member: np.ndarray         # (B,)  rank within the group; 0 for solo
+    prefix_len: np.ndarray     # (B,)  shared positions; 0 = solo
+    tables: np.ndarray         # (NG, LP) physical pages of each prefix
+    n_pages: np.ndarray        # (NG,) live prefix pages per group
+    g_prefix_len: np.ndarray   # (NG,) shared positions per group
+    num_members: np.ndarray    # (NG,) live members per group
+    member_rows: np.ndarray    # (NG, M) slot row of each member; B = pad
+    n_grouped: int             # total rows covered by some group
+    pages_deduped: int         # sum over groups of (members - 1) * pages
+    _operands: object = dataclasses.field(default=None, repr=False)
+
+    def operands(self):
+        if self._operands is None:
+            import jax.numpy as jnp
+
+            from repro.kernels.group_attention import DecodeGroups
+            self._operands = DecodeGroups(
+                tables=jnp.asarray(self.tables),
+                n_pages=jnp.asarray(self.n_pages),
+                g_prefix_len=jnp.asarray(self.g_prefix_len),
+                num_members=jnp.asarray(self.num_members),
+                member_rows=jnp.asarray(self.member_rows),
+                gid=jnp.asarray(self.gid),
+                member=jnp.asarray(self.member),
+                prefix_len=jnp.asarray(self.prefix_len),
+            )
+        return self._operands
+
+
+@dataclasses.dataclass
 class PagedSlot(Slot):
     pages: list = dataclasses.field(default_factory=list)
     # prefix-sharing admission metadata (all zero when sharing is off)
@@ -206,6 +255,12 @@ class PagedSlotManager(SlotManager):
         # release / COW fork) so steady-state decode ticks reuse it
         self._bt_cache = None
         self._bt_dirty = True
+        # the shared-prefix group plan is a pure function of the block
+        # tables + refcounts, so it shares the block-table dirty
+        # discipline: every event that invalidates _bt_cache (admission,
+        # growth, COW fork, release) invalidates the plan too
+        self._gp_cache = None
+        self._gp_dirty = True
         super().__init__(num_slots, max_seq)
 
     def _empty_slot(self) -> PagedSlot:
@@ -217,6 +272,7 @@ class PagedSlotManager(SlotManager):
                                  tokens=tokens)
         if idx is not None:
             self._bt_dirty = True
+            self._gp_dirty = True
             if self.prefix is not None and tokens is not None:
                 # promise this slot's full prompt pages to later arrivals
                 # (entries pending at this slot's wave level until its
@@ -297,6 +353,7 @@ class PagedSlotManager(SlotManager):
             return False
         s.pages.extend(got)
         self._bt_dirty = True
+        self._gp_dirty = True
         return True
 
     def fork_for_write(self, idx: int, start: int, end: int):
@@ -325,11 +382,13 @@ class PagedSlotManager(SlotManager):
                     self.pool.share([prev])
                     self.pool.free([dst])
                 self._bt_dirty = True
+                self._gp_dirty = True
                 return None
             dst = got[0]
             self.pool.free([src])        # drop our ref; survivors keep it
             s.pages[pi] = dst
             self._bt_dirty = True
+            self._gp_dirty = True
             forked.append((pi, src, dst))
         return [(src, dst) for _pi, src, dst in forked]
 
@@ -348,6 +407,7 @@ class PagedSlotManager(SlotManager):
                 if self.prefix is not None:
                     self.prefix.drop_page(page)
             self._bt_dirty = True
+            self._gp_dirty = True
         super().release(idx)
 
     def block_tables(self):
@@ -373,6 +433,74 @@ class PagedSlotManager(SlotManager):
             self._bt_cache = jnp.asarray(bt)
             self._bt_dirty = False
         return self._bt_cache
+
+    def group_plan(self, threshold: int = 2) -> Optional[GroupPlan]:
+        """Shared-prefix grouping for this tick's decode batch, or
+        ``None`` when no group is worth dispatching — cached under the
+        same dirty discipline as :meth:`block_tables` (rebuilt only when
+        some table or refcount changed), so steady-state grouped decode
+        reuses one host plan and its device operands tick after tick.
+
+        A group survives only if it has >= 2 members **and** its
+        deduplicated work ``members * prefix_pages >= threshold`` — below
+        that the extra kernel stage costs more than the KV reads it
+        saves (the plan's ``group_threshold`` knob, calibrated by
+        ``dispatch.find_group_threshold``). Members must already cover
+        their shared prefix (``length >= prefix_len``); a mid-prefill
+        resident is left solo rather than read past its valid KV.
+        """
+        if not self._gp_dirty and self._gp_cache is not None \
+                and self._gp_cache[0] == threshold:
+            return self._gp_cache[1]
+        plan = self._build_group_plan(threshold)
+        self._gp_cache = (threshold, plan)
+        self._gp_dirty = False
+        return plan
+
+    def _build_group_plan(self, threshold: int) -> Optional[GroupPlan]:
+        ps = self.pool.page_size
+        kept = []
+        for key, members in shared_prefix_groups(self.slots,
+                                                 self.pool.refcount):
+            plen = len(key) * ps
+            live = [i for i in members if self.slots[i].length >= plen]
+            if len(live) >= 2 and len(live) * len(key) >= threshold:
+                kept.append((key, live))
+        if not kept:
+            return None
+        b = len(self.slots)
+        ng = pow2_bucket(len(kept))
+        lp = pow2_bucket(max(len(k) for k, _ in kept),
+                         hi=self.max_pages_per_seq)
+        m = pow2_bucket(max(len(ms) for _, ms in kept), hi=b)
+        sentinel = self.pool.num_pages
+        tables = np.full((ng, lp), sentinel, np.int32)
+        n_pages = np.zeros(ng, np.int32)
+        g_prefix_len = np.zeros(ng, np.int32)
+        num_members = np.zeros(ng, np.int32)
+        member_rows = np.full((ng, m), b, np.int32)
+        gid = np.full(b, ng, np.int32)          # NG = solo sentinel
+        member = np.zeros(b, np.int32)
+        prefix_len = np.zeros(b, np.int32)
+        n_grouped = 0
+        pages_deduped = 0
+        for g, (key, live) in enumerate(kept):
+            tables[g, :len(key)] = key
+            n_pages[g] = len(key)
+            g_prefix_len[g] = len(key) * ps
+            num_members[g] = len(live)
+            member_rows[g, :len(live)] = live
+            for r, i in enumerate(live):
+                gid[i] = g
+                member[i] = r
+                prefix_len[i] = len(key) * ps
+            n_grouped += len(live)
+            pages_deduped += (len(live) - 1) * len(key)
+        return GroupPlan(gid=gid, member=member, prefix_len=prefix_len,
+                         tables=tables, n_pages=n_pages,
+                         g_prefix_len=g_prefix_len,
+                         num_members=num_members, member_rows=member_rows,
+                         n_grouped=n_grouped, pages_deduped=pages_deduped)
 
     def check(self) -> None:
         """Cross-structure invariants for the property tests: free/ref

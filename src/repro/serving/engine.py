@@ -117,6 +117,11 @@ class EngineStats:
     saved_prefill_tokens: int = 0    # prompt positions admission skipped
     #                                  because their KV was already resident
     cow_forks: int = 0               # shared pages privatized by a write
+    # grouped decode (plan.paged.decode_group == "grouped")
+    grouped_requests: int = 0        # decode-row ticks served through a
+    #                                  shared-prefix group
+    prefix_kv_bytes_saved: int = 0   # prefix KV bytes read once per group
+    #                                  instead of once per member
 
 
 class Engine:
@@ -229,6 +234,23 @@ class Engine:
                 lambda a: a.at[:, dst].set(a[:, src]), c),
             donate_argnums=(0,),
         ) if cache_kind == "paged" else None
+        # prefix-shared grouped decode: when the tuned plan asks for it
+        # (and refcounted sharing is on so groups can exist), decode ticks
+        # with a qualifying group dispatch through a second jitted lambda
+        # that threads the DecodeGroups operand down to the attention op
+        self._group_decode = (
+            cache_kind == "paged" and prefix_sharing
+            and self.plan.paged.decode_group == "grouped")
+        self._decode_grouped = jax.jit(
+            lambda p, t, c, bt, le, gr: self.api.decode_step(
+                self.ctx, p, t, c, le, block_tables=bt, decode_groups=gr),
+            donate_argnums=(2,),
+        ) if self._group_decode else None
+        # one page's K+V slab across all layers — the unit of both the
+        # COW copy and the grouped-decode bytes-saved accounting
+        self._kv_bytes_per_page = (
+            sum(a.nbytes for a in jax.tree.leaves(self.cache))
+            // self.pool.num_pages) if cache_kind == "paged" else 0
         self._prefill_cache = {}  # bucketed P -> jitted batched prefill
         # last-uploaded device copies of the small int operands the chunk
         # loop would otherwise re-upload every step (chunk_lens is usually
@@ -682,9 +704,19 @@ class Engine:
         tokens = np.zeros((self.num_slots,), np.int32)
         for idx, state in self.by_slot.items():
             tokens[idx] = state.tokens[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache,
-            self.slots.block_tables(), lengths)
+        gplan = self.slots.group_plan(
+            self.plan.paged.group_threshold) if self._group_decode else None
+        if gplan is not None:
+            logits, self.cache = self._decode_grouped(
+                self.params, jnp.asarray(tokens), self.cache,
+                self.slots.block_tables(), lengths, gplan.operands())
+            self.stats.grouped_requests += gplan.n_grouped
+            self.stats.prefix_kv_bytes_saved += (
+                gplan.pages_deduped * self._kv_bytes_per_page)
+        else:
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache,
+                self.slots.block_tables(), lengths)
         events = []
         for idx in list(self.by_slot):
             state = self.by_slot[idx]

@@ -199,3 +199,48 @@ class PrefixIndex:
                 "registered chunk is not exactly one page"
             assert e.page in live_pages, \
                 f"index maps to freed page {e.page}"
+
+
+# -- decode-time group enumeration -------------------------------------------
+
+def shared_prefix_groups(slots, refcount):
+    """Group resident slots by the physical pages of their shared prefix.
+
+    A slot's group key is the **maximal leading run** of its block table
+    whose pages have ``refcount(page) > 1`` — i.e. the prefix positions
+    whose KV is physically deduplicated with at least one other owner.
+    Two slots land in the same group iff those runs are *identical page
+    lists*: same physical pages in the same order, hence byte-identical
+    shared-prefix KV. Slots whose runs diverge in length get different
+    keys (grouped attention needs one prefix length per group).
+
+    Deriving the key from refcounts alone (no index lookup) makes the
+    plan self-healing across the whole page lifecycle: a COW fork
+    replaces the writer's page (its run shortens, it leaves the group
+    next tick), a release that kills a page drops every former sharer's
+    run at that point, and re-admission after preemption re-maps the
+    prefix and rejoins automatically.
+
+    ``slots`` is any sequence with ``.free`` and ``.pages``; ``refcount``
+    maps page id -> owner count. Returns ``[(key, member_indices)]`` for
+    every key with >= 2 members, in first-seen slot order.
+    """
+    runs: dict = {}
+    order: list = []
+    for i, s in enumerate(slots):
+        if s.free or not s.pages:
+            continue
+        n = 0
+        for p in s.pages:
+            if refcount(p) > 1:
+                n += 1
+            else:
+                break
+        if not n:
+            continue
+        key = tuple(s.pages[:n])
+        if key not in runs:
+            runs[key] = []
+            order.append(key)
+        runs[key].append(i)
+    return [(k, runs[k]) for k in order if len(runs[k]) >= 2]

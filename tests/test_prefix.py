@@ -180,11 +180,57 @@ def test_fork_for_write_rolls_back_partial_forks_on_dry_pool():
     mgr.check()
 
 
+def _assert_group_plan_consistent(mgr):
+    """Decode-group plan invariants, checked against the manager's own
+    ground truth after every lifecycle op:
+
+      * every resident slot is in exactly one group or solo, and the solo
+        sentinel is coherent (``gid == NG`` iff ``prefix_len == 0``);
+      * each group's table is exactly its members' leading pages and
+        every one of those pages is genuinely shared (refcount >= 2);
+      * ``member_rows`` round-trips ``gid``/``member`` (the kernel's
+        scatter and un-scatter agree on who sits where);
+      * no member is grouped beyond its valid KV
+        (``length >= prefix_len``).
+    """
+    plan = mgr.group_plan(threshold=2)
+    if plan is None:
+        return
+    ng = plan.tables.shape[0]
+    grouped_rows = set()
+    for g in range(ng):
+        nm = int(plan.num_members[g])
+        if nm == 0:
+            continue
+        assert nm >= 2, "a 1-member group saves nothing"
+        key = [int(p) for p in plan.tables[g, :int(plan.n_pages[g])]]
+        assert key and all(mgr.pool.refcount(p) >= 2 for p in key)
+        plen = int(plan.g_prefix_len[g])
+        assert plen == len(key) * mgr.pool.page_size
+        rows = [int(r) for r in plan.member_rows[g, :nm]]
+        assert len(set(rows)) == nm, "member row listed twice"
+        for r, i in enumerate(rows):
+            s = mgr.slots[i]
+            assert not s.free and i not in grouped_rows
+            grouped_rows.add(i)
+            assert list(s.pages[:len(key)]) == key
+            assert s.length >= plen
+            assert int(plan.gid[i]) == g and int(plan.member[i]) == r
+            assert int(plan.prefix_len[i]) == plen
+    for i in range(len(mgr.slots)):
+        if i in grouped_rows:
+            continue
+        assert int(plan.gid[i]) == ng      # solo sentinel
+        assert int(plan.prefix_len[i]) == 0
+
+
 @given(st.integers(0, 10_000))
 def test_sharing_manager_random_lifecycle(seed):
     """check() invariants — refcount == ownership multiset, no page both
     free and owned, fork never aliases, index maps only live pages —
-    under random admit(shared-prefix tokens)/grow/fork/commit/release."""
+    under random admit(shared-prefix tokens)/grow/fork/commit/release;
+    plus the decode-group plan invariants after every op (the plan is
+    rebuilt from live refcounts, so fork/release must re-key it)."""
     rng = np.random.default_rng(seed)
     page_size = int(rng.choice([2, 4]))
     num_pages = int(rng.integers(6, 32))
@@ -227,11 +273,13 @@ def test_sharing_manager_random_lifecycle(seed):
             del live[idx]
             mgr.release(idx)
         mgr.check()                           # invariants after every op
+        _assert_group_plan_consistent(mgr)
     for idx in list(live):
         mgr.release(idx)
     mgr.check()
     assert pool.free_pages == num_pages       # every ref returned
     assert len(mgr.prefix) == 0               # index died with its pages
+    assert mgr.group_plan(threshold=2) is None  # nothing resident to group
 
 
 # ---------------------------------------------------------------------------
