@@ -1,0 +1,240 @@
+"""Tiered KV hierarchy: session-cache TTFT for returning conversations,
+and the swap-vs-re-prefill crossover behind ``PagedPlan.swap_threshold``.
+
+The capacity story behind demote-don't-discard: a finished conversation's
+KV pages move device → host (→ disk) instead of dying, and the prefix
+index keeps their chain-hash keys matchable across tiers — so when the
+conversation returns, the engine promotes the persisted pages back (one
+bulk host→device copy) and prefills only the final chunk, instead of
+recomputing the whole prompt. This benchmark measures both halves:
+
+  * **warm vs cold TTFT** — the same prompt re-submitted against (a) an
+    engine whose session cache holds the conversation's pages host-side
+    (flushed, so the rerun *must* promote) and (b) an engine that
+    discarded them (full re-prefill). Both reruns hit compiled code; the
+    delta is the prefill compute the promotion skipped.
+  * **resume bit-identity** — a preemption-heavy workload run four ways
+    (big pool / tight pool without tiers / tight pool with tiers / dense
+    cache) must produce byte-identical greedy outputs: demoted bytes are
+    the originally computed bytes, so swapping KV through the hierarchy
+    is invisible to the math. Asserted, not just reported.
+  * **analytical crossover** — the roofline pair behind the tuned
+    ``swap_threshold`` knob (:func:`repro.core.dispatch.predict_swap_time`
+    vs :func:`~repro.core.dispatch.predict_reprefill_time`) swept over
+    demoted-span sizes for full-size configs, plus the host-link
+    bandwidth sweep showing where re-prefill would win instead.
+
+Writes ``BENCH_tiers.json`` at the repo root (schema:
+{"ttft": [...], "identity": {...}, "crossover": [...], "config": {...}}).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro import configs, hardware
+from repro.core import dispatch
+from repro.core.plan import make_plan
+from repro.models.api import get_model
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_tiers.json")
+
+PAGE_SIZE = 16
+MAX_NEW = 4
+
+
+def _mk_engine(cfg, params, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_seq", 512)
+    kw.setdefault("cache_kind", "paged")
+    kw.setdefault("page_size", PAGE_SIZE)
+    kw.setdefault("prefill_chunk", PAGE_SIZE)
+    kw.setdefault("prefix_sharing", True)
+    kw.setdefault("plan", make_plan("xla"))
+    kw.setdefault("seed", 0)
+    return Engine(cfg, params, **kw)
+
+
+def _ttft(eng, prompt) -> tuple[float, list]:
+    """Submit one request, drive it to completion, return (TTFT, tokens)."""
+    rid = eng.submit(prompt, SamplingParams(max_new_tokens=MAX_NEW))
+    state = eng.requests[rid]
+    while not state.finished:
+        eng.step()
+    return state.first_token_time - state.submit_time, list(state.tokens)
+
+
+def _ttft_sweep(cfg, params, prompt_lens) -> list:
+    """Warm (promote from host) vs cold (re-prefill) returning-turn TTFT."""
+    rng = np.random.default_rng(0)
+    widths = [8, 10, 10, 8, 10, 10]
+    print(fmt_row("prompt", "cold_ms", "warm_ms", "speedup", "promoted",
+                  "saved_tk", widths=widths))
+    rows = []
+    for plen in prompt_lens:
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).astype(np.int32)
+
+        # cold: no tiers — the first run compiles, KV dies on retire, so
+        # each rerun pays the full re-prefill on warm jit caches
+        cold = _mk_engine(cfg, params)
+        for _ in range(2):
+            _ttft(cold, prompt)
+            cold.evict_finished()
+        t_cold, toks_cold = _ttft(cold, prompt)
+
+        # warm: session cache flushed host-ward, so the rerun must
+        # promote its pages (not just re-map resident tier-0 copies);
+        # one un-timed flush+rerun cycle first compiles the gather /
+        # promote-scatter shapes — TTFT should measure the copies, not
+        # one-time jit compiles neither steady state pays
+        warm = _mk_engine(cfg, params, host_pages=256)
+        _ttft(warm, prompt)
+        warm.evict_finished(flush=True)
+        _ttft(warm, prompt)
+        warm.evict_finished(flush=True)
+        assert warm.tiers.host_used > 0, "flush left nothing host-side"
+        base_saved = warm.stats.saved_prefill_tokens
+        t_warm, toks_warm = _ttft(warm, prompt)
+
+        assert toks_warm == toks_cold, \
+            "session-cache resume changed greedy outputs"
+        assert warm.stats.promoted_pages > 0, "rerun did not promote"
+        row = dict(
+            prompt_len=plen,
+            ttft_cold_s=t_cold, ttft_warm_s=t_warm,
+            speedup=t_cold / max(t_warm, 1e-9),
+            promoted_pages=warm.stats.promoted_pages,
+            demoted_pages=warm.stats.demoted_pages,
+            session_hits=warm.stats.session_hits,
+            saved_prefill_tokens=warm.stats.saved_prefill_tokens
+            - base_saved,
+        )
+        rows.append(row)
+        print(fmt_row(plen, f"{t_cold*1e3:.1f}", f"{t_warm*1e3:.1f}",
+                      f"{row['speedup']:.2f}x", row["promoted_pages"],
+                      row["saved_prefill_tokens"], widths=widths))
+    return rows
+
+
+def _resume_identity(cfg, params) -> dict:
+    """Preemption-heavy workload, four ways, byte-identical outputs."""
+    rng = np.random.default_rng(1)
+    sp = SamplingParams(max_new_tokens=40)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=40).astype(np.int32), sp)
+            for _ in range(4)]
+
+    def run(**kw):
+        eng = _mk_engine(cfg, params, **kw)
+        out = eng.run([(p.copy(), s) for p, s in reqs], max_ticks=2000)
+        return eng, list(out.values())
+
+    _, big = run(num_pages=64)
+    tight, out_tight = run(num_pages=9)
+    tiers, out_tiers = run(num_pages=9, host_pages=64)
+    dense_eng = Engine(cfg, params, num_slots=4, max_seq=512,
+                       cache_kind="dense", prefill_chunk=PAGE_SIZE,
+                       plan=make_plan("xla"), seed=0)
+    out_dense = list(dense_eng.run(
+        [(p.copy(), s) for p, s in reqs], max_ticks=2000).values())
+
+    assert out_tight == big, "re-prefill resume diverged from big pool"
+    assert out_tiers == big, "tiered resume diverged from big pool"
+    assert out_dense == big, "dense outputs diverged from paged"
+    tiers.slots.check()
+    info = dict(
+        preemptions_no_tiers=tight.stats.preemptions,
+        preemptions_tiers=tiers.stats.preemptions,
+        demoted_pages=tiers.stats.demoted_pages,
+        promoted_pages=tiers.stats.promoted_pages,
+        session_hits=tiers.stats.session_hits,
+        saved_prefill_tokens=tiers.stats.saved_prefill_tokens,
+        identical=True,
+    )
+    print(f"  resume identity: big==tight==tiers==dense "
+          f"({info['preemptions_tiers']} preemptions, "
+          f"{info['demoted_pages']} demoted, "
+          f"{info['promoted_pages']} promoted)")
+    return info
+
+
+def _crossover(arch_names, page_counts) -> list:
+    """Analytical swap-vs-re-prefill curves + tuned threshold per arch."""
+    spec = hardware.TPU_V5E
+    widths = [12, 10, 12, 12, 12]
+    print(fmt_row("arch", "pages", "swap_us", "reprefill_us", "winner",
+                  widths=widths))
+    rows = []
+    for name in arch_names:
+        cfg = configs.get(name)
+        page_bytes = dispatch.kv_page_bytes(cfg, page_size=64)
+        thr = dispatch.find_swap_threshold(cfg, page_size=64, spec=spec)
+        curve = []
+        for pages in page_counts:
+            t_swap = dispatch.predict_swap_time(pages, page_bytes, spec=spec)
+            t_pre = dispatch.predict_reprefill_time(
+                cfg, pages * 64, page_size=64, spec=spec)
+            curve.append(dict(pages=pages, swap_s=t_swap, reprefill_s=t_pre))
+            print(fmt_row(name, pages, f"{t_swap*1e6:.1f}",
+                          f"{t_pre*1e6:.1f}",
+                          "swap" if t_swap < t_pre else "reprefill",
+                          widths=widths))
+        # host-link sweep: at PCIe-class bandwidth the copy wins from one
+        # page; a disk-class link flips the decision to re-prefill (the
+        # sentinel max_pages+1 = "never swap"), with the intermediate
+        # regime crossing somewhere in between
+        links = []
+        for bw in (2e8, 5e8, 1e9, 2e9, 16e9, 64e9):
+            s = dataclasses.replace(spec, host_bw=bw, name=f"link-{bw:.0e}")
+            links.append(dict(host_bw=bw,
+                              threshold=dispatch.find_swap_threshold(
+                                  cfg, page_size=64, spec=s)))
+        rows.append(dict(arch=name, page_bytes=page_bytes,
+                         swap_threshold=thr, curve=curve,
+                         link_sweep=links))
+        sweep = [(d["host_bw"], d["threshold"]) for d in links]
+        print(f"  {name}: tuned swap_threshold = {thr} page(s), "
+              f"link sweep {sweep}")
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== kv_tiers: session-cache TTFT + swap-vs-re-prefill ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    prompt_lens = (48,) if quick else (48, 96, 192)
+    page_counts = (1, 4, 16) if quick else (1, 2, 4, 8, 16, 32, 64)
+    archs = ("qwen2-0.5b",) if quick else ("qwen2-0.5b", "llama2-7b")
+
+    ttft = _ttft_sweep(cfg, params, prompt_lens)
+    identity = _resume_identity(cfg, params)
+    crossover = _crossover(archs, page_counts)
+
+    result = {
+        "config": dict(arch=cfg.name, page_size=PAGE_SIZE, max_new=MAX_NEW,
+                       prompt_lens=list(prompt_lens),
+                       crossover_page_size=64,
+                       host_bw=hardware.TPU_V5E.host_bw),
+        "ttft": ttft,
+        "identity": identity,
+        "crossover": crossover,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  [kv_tiers -> {os.path.normpath(OUT_PATH)}]")
+    return result
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    run()
+    print(f"[{time.time()-t0:.1f}s]")

@@ -18,8 +18,8 @@ def main() -> int:
 
     from benchmarks import (attention_softmax, chunk_prefill, decode_engine,
                             dispatch_table, flat_gemm_sweep, group_decode,
-                            paged_decode, prefill_engine, prefix_sharing,
-                            roofline_report, scheduler_sweep)
+                            kv_tiers, paged_decode, prefill_engine,
+                            prefix_sharing, roofline_report, scheduler_sweep)
 
     results = {}
     for name, mod in [
@@ -32,6 +32,7 @@ def main() -> int:
         ("scheduler_sweep", scheduler_sweep),
         ("prefix_sharing", prefix_sharing),
         ("group_decode", group_decode),
+        ("kv_tiers", kv_tiers),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:

@@ -79,6 +79,12 @@ def model_gemm_shapes(cfg: ModelConfig) -> list[GemmShape]:
 # Analytical cost model (v5e). All times in seconds for one GEMM call.
 # ---------------------------------------------------------------------------
 
+# one Mosaic pipeline fill: the fixed bubble any extra Pallas kernel stage
+# pays before its grid streams at full rate (the ImplB GEMM model's
+# launch constant — shared so every "extra kernel launch" term in this
+# module prices launches identically)
+_PIPELINE_FILL_S = 2e-6
+
 
 def _mem_time(m_eff: int, k: int, n: int, dtype_bytes: int,
               spec: hardware.HardwareSpec) -> float:
@@ -115,7 +121,7 @@ def predict_time(
         m_pad = max(8, -(-m // 8) * 8)
         mem = _mem_time(m_pad, k, n, dtype_bytes, spec)
         compute = 2.0 * m_pad * k * n / spec.peak_flops_bf16
-        return max(mem, compute) + 2e-6   # pipeline fill bubble
+        return max(mem, compute) + _PIPELINE_FILL_S
     if impl is Impl.XLA_DOT:
         m_pad = max(128, -(-m // 128) * 128)
         mem = _mem_time(m_pad, k, n, dtype_bytes, spec)
@@ -403,9 +409,25 @@ def find_chunk_block(
 # (find_inflections for the shared-prefix decode path)
 # ---------------------------------------------------------------------------
 
-# fixed cost of the extra grouped-attention stage per decode step (second
-# kernel launch + partial un-scatter/merge glue around it)
-_GROUP_STAGE_OVERHEAD_S = 2e-6
+def group_stage_overhead(
+    spec: hardware.HardwareSpec = hardware.DEFAULT, *,
+    batch: int = 8, q_heads: int = 16, head_dim: int = 128,
+) -> float:
+    """Fixed cost of the extra grouped-attention stage per decode step,
+    derived from the same calibration path as the GEMM cost model rather
+    than guessed: one extra kernel launch (the ImplB pipeline-fill
+    constant — stage 1 is a second Pallas dispatch the ungrouped path
+    does not pay) plus the HBM round-trip of the merge partials the
+    split introduces (stage 1 writes, stage 2 reads, one
+    ``(batch, q_heads, head_dim + 2)`` f32 record per row — accumulator
+    plus the unified-max merge's running (max, sum) pair)."""
+    partial_bytes = batch * q_heads * (head_dim + 2) * 4
+    return _PIPELINE_FILL_S + 2 * partial_bytes / spec.hbm_bw
+
+
+# evaluated once at the defaults the group-threshold sweep targets
+# (steady decode: full slot batch, qwen2-class head shape)
+_GROUP_STAGE_OVERHEAD_S = group_stage_overhead(hardware.DEFAULT)
 
 
 def predict_group_decode_time(
@@ -472,3 +494,94 @@ def find_group_threshold(
                     best = work
             pages *= 2
     return best if best is not None else max_members * max_prefix_pages + 1
+
+
+# ---------------------------------------------------------------------------
+# Tiered-KV swap decision flow: promote demoted pages vs re-prefill them
+# (find_inflections for the session-cache re-admission path)
+# ---------------------------------------------------------------------------
+
+# per-batch host-transfer setup: DMA programming + the host-side sync the
+# engine's bulk gather/scatter pays once per promotion/demotion batch,
+# matching the per-model-call dispatch bubble of the chunk loop (both are
+# one host→device round trip of control)
+_HOST_COPY_LATENCY_S = _CHUNK_STEP_OVERHEAD_S
+
+
+def kv_page_bytes(cfg: ModelConfig, *, page_size: int = 64,
+                  dtype_bytes: int = 2) -> int:
+    """Bytes one KV page moves across the host link: K + V for every
+    layer (the page id is shared across layers, so a demotion/promotion
+    always moves the whole per-layer stack)."""
+    return 2 * cfg.num_layers * page_size * cfg.kv_dim * dtype_bytes
+
+
+def predict_swap_time(
+    pages: int, page_bytes: int, *,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> float:
+    """Roofline time to promote ``pages`` demoted KV pages back to the
+    device pool: one bulk host→device copy over the PCIe-class link plus
+    the fixed per-batch setup."""
+    return _HOST_COPY_LATENCY_S + pages * page_bytes / spec.host_bw
+
+
+def predict_reprefill_time(
+    cfg: ModelConfig, positions: int, *,
+    chunk: int = 64,
+    page_size: int = 64,
+    dtype_bytes: int = 2,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> float:
+    """Roofline time to *recompute* ``positions`` KV positions through
+    the chunked-prefill path — the cost a re-admission pays for every
+    span whose pages were not (or could not be) promoted.
+
+    Sums the model's GEMM work per chunk step (best implementation per
+    [K, N] shape, per layer; lm_head once per step) with the fused-path
+    attention KV streaming per layer and the per-step dispatch bubble —
+    the same per-term constants every other flow in this module uses, so
+    the swap decision is commensurable with the chunk/group decisions.
+    """
+    steps = max(-(-positions // chunk), 1)
+    gemm_step = 0.0
+    for gs in model_gemm_shapes(cfg):
+        t = min(predict_time(impl, chunk, gs.k, gs.n,
+                             dtype_bytes=dtype_bytes, spec=spec)
+                for impl in Impl)
+        layers = 1 if gs.name == "lm_head" else cfg.num_layers
+        gemm_step += t * gs.count * layers
+    kv = 0.0
+    for i in range(steps):
+        resident = min((i + 1) * chunk, positions)
+        pages = -(-resident // page_size)
+        kv += (2 * pages * page_size * cfg.kv_dim * dtype_bytes
+               / spec.hbm_bw + pages * _GRID_STEP_OVERHEAD_S)
+    return (steps * gemm_step + cfg.num_layers * kv
+            + steps * _CHUNK_STEP_OVERHEAD_S)
+
+
+def find_swap_threshold(
+    cfg: ModelConfig, *,
+    chunk: int = 64,
+    page_size: int = 64,
+    max_pages: int = 64,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> int:
+    """Smallest demoted-span page count at which promoting (bulk
+    host→device copy) beats re-prefilling the same span — the
+    per-admission decision the slot manager applies to a prefix match
+    that extends into the tiered store (``PagedPlan.swap_threshold``).
+    Re-prefill cost grows superlinearly (attention re-streams resident
+    KV per chunk step) while the copy is linear, so the first crossover
+    is the inflection. Returns ``max_pages + 1`` when the copy never
+    wins inside the sweep (tiny models on a fat link the other way)."""
+    page_bytes = kv_page_bytes(cfg, page_size=page_size)
+    for pages in range(1, max_pages + 1):
+        t_swap = predict_swap_time(pages, page_bytes, spec=spec)
+        t_pre = predict_reprefill_time(
+            cfg, pages * page_size, chunk=chunk, page_size=page_size,
+            spec=spec)
+        if t_swap < t_pre:
+            return pages
+    return max_pages + 1

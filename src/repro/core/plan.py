@@ -199,6 +199,14 @@ class PagedPlan:
     by :func:`repro.core.dispatch.find_group_threshold`; the other knobs
     by :func:`repro.core.dispatch.find_fused_threshold` /
     :func:`repro.core.dispatch.find_chunk_block`.
+
+    ``swap_threshold`` is the tiered-KV swap-vs-re-prefill inflection:
+    at re-admission, a prefix match that extends into demoted (host/disk)
+    pages is promoted — one bulk host→device copy — only when the
+    demoted span reaches this many pages; below it the match truncates
+    at the first demoted entry and those positions re-prefill (the
+    PCIe-class copy's fixed setup beats recompute only past the
+    crossover). Tuned by :func:`repro.core.dispatch.find_swap_threshold`.
     """
 
     backend: str = "xla"
@@ -209,6 +217,7 @@ class PagedPlan:
     chunk_block: int = 64
     decode_group: str = "off"
     group_threshold: int = 2
+    swap_threshold: int = 1
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "paged.backend")
@@ -218,6 +227,7 @@ class PagedPlan:
         _check_pos(self.chunk_block, "paged.chunk_block")
         _check(self.decode_group, GROUP_MODES, "paged.decode_group")
         _check_pos(self.group_threshold, "paged.group_threshold")
+        _check_pos(self.swap_threshold, "paged.swap_threshold")
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +327,7 @@ class ExecutionPlan:
                 + f", chunk={self.paged.chunk_block}"
                 + (f", group>={self.paged.group_threshold}"
                    if self.paged.decode_group == "grouped" else "")
+                + f", swap>={self.paged.swap_threshold}"
                 + "]")
 
     # -- serialization -------------------------------------------------------
@@ -456,6 +467,7 @@ def make_plan(
     chunk_block: int = 64,
     decode_group: str = "off",
     group_threshold: int = 2,
+    swap_threshold: int = 1,
 ) -> ExecutionPlan:
     """Build an untuned plan with uniform knobs — the hand-rolled
     counterpart of :func:`tune` for hosts that only need to pin backends
@@ -476,7 +488,8 @@ def make_plan(
                         fused_threshold=fused_threshold,
                         chunk_block=chunk_block,
                         decode_group=decode_group,
-                        group_threshold=group_threshold),
+                        group_threshold=group_threshold,
+                        swap_threshold=swap_threshold),
     )
 
 
@@ -546,6 +559,8 @@ def tune(
         spec=spec)
     group_threshold = dispatch.find_group_threshold(
         cfg.kv_dim, page_size=page_size, spec=spec)
+    swap_threshold = dispatch.find_swap_threshold(
+        cfg, chunk=chunk_block, page_size=page_size, spec=spec)
 
     plan = ExecutionPlan(
         matmul=MatmulPlan(backend=backend, default_m1=default.m1,
@@ -563,7 +578,8 @@ def tune(
                         fused_threshold=fused_threshold,
                         chunk_block=chunk_block,
                         decode_group="grouped",
-                        group_threshold=group_threshold),
+                        group_threshold=group_threshold,
+                        swap_threshold=swap_threshold),
         provenance=PlanProvenance(
             backend=backend,
             hardware=hardware_hash(spec), hardware_name=spec.name,

@@ -20,6 +20,10 @@ class HardwareSpec:
       peak_flops_vpu_f32: peak f32 FLOP/s of the vector unit (used by the
         GEMV/ImplA cost model — the VPU path does not touch the MXU).
       hbm_bw: HBM bandwidth, bytes/s.
+      host_bw: host↔device link bandwidth, bytes/s (PCIe-class; what a
+        KV page pays per direction to move between the device pool and
+        the host tier of the KV hierarchy — the swap-vs-re-prefill
+        roofline's denominator).
       ici_bw_per_link: per-link ICI bandwidth, bytes/s.
       ici_links: number of ICI links per chip taking part in a 2D torus.
       hbm_bytes: HBM capacity per chip.
@@ -33,6 +37,7 @@ class HardwareSpec:
     peak_flops_bf16: float
     peak_flops_vpu_f32: float
     hbm_bw: float
+    host_bw: float
     ici_bw_per_link: float
     ici_links: int
     hbm_bytes: int
@@ -53,6 +58,7 @@ TPU_V5E = HardwareSpec(
     peak_flops_bf16=197e12,
     peak_flops_vpu_f32=197e12 / 32,  # VPU is ~1/32 of MXU throughput at f32
     hbm_bw=819e9,
+    host_bw=16e9,  # PCIe-gen4-class effective host link, per direction
     ici_bw_per_link=50e9,
     ici_links=4,  # 2D torus: 4 links (x+, x-, y+, y-)
     hbm_bytes=16 * 2**30,

@@ -26,6 +26,15 @@ refcounted prefix pages attend to the shared prefix once per group and
 unified-max-merge their private tails (see
 ``repro.kernels.group_attention``); the summary then reports grouped
 decode counts and prefix KV bytes the dedup saved.
+
+The tiered KV hierarchy rides on ``--host-pages N`` (host-RAM page store
+behind the device pool) and ``--session-cache`` (retain finished
+conversations' KV pages — demoted host-ward under pool pressure, promoted
+back when the conversation returns): preemption and retirement demote
+pages instead of discarding them, and the summary grows
+demoted/promoted/session-hit counters. ``--rounds R`` resubmits the same
+prompts R times (returning-conversation workload — the second round hits
+the session cache instead of re-prefilling).
 """
 import argparse
 import sys
@@ -79,6 +88,19 @@ def _parse():
                          "per group and unified-max-merges per-request "
                          "private tails (paged cache + --prefix-sharing "
                          "only)")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host-RAM tier capacity in KV pages: preemption "
+                         "and retirement demote pages here instead of "
+                         "discarding them (paged cache + --prefix-sharing "
+                         "only); returning prompts promote them back")
+    ap.add_argument("--session-cache", action="store_true",
+                    help="retain finished conversations' KV pages in the "
+                         "tiered session cache (implied by --host-pages; "
+                         "alone it enables tier-0 retention only)")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="resubmit every prompt this many times — round "
+                         ">= 2 models returning conversations hitting the "
+                         "session cache")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--plan", default=None, metavar="PATH",
@@ -141,7 +163,10 @@ def main() -> int:
                  cache_kind=args.cache_kind, page_size=args.page_size,
                  num_pages=num_pages, prefill_chunk=args.prefill_chunk,
                  scheduler=args.scheduler, plan=plan,
-                 prefix_sharing=args.prefix_sharing, seed=args.seed)
+                 prefix_sharing=args.prefix_sharing,
+                 host_pages=args.host_pages,
+                 session_cache=args.session_cache or None,
+                 seed=args.seed)
     rng = np.random.default_rng(args.seed)
     sp = SamplingParams(max_new_tokens=args.max_new,
                         temperature=args.temperature, top_p=args.top_p)
@@ -154,7 +179,11 @@ def main() -> int:
     ]
 
     t0 = time.perf_counter()
-    out = eng.run(reqs)
+    out = {}
+    for rnd in range(max(args.rounds, 1)):
+        out = eng.run(reqs)
+        if rnd + 1 < args.rounds:
+            eng.evict_finished()   # KV stays in the session cache
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in out.values())
     line = (f"served {len(out)} requests, {total_tokens} tokens in {dt:.2f}s "
@@ -172,6 +201,12 @@ def main() -> int:
     if eng.stats.grouped_requests:
         line += (f", {eng.stats.grouped_requests} grouped decodes, "
                  f"{eng.stats.prefix_kv_bytes_saved} prefix KV bytes saved")
+    if eng.tiers is not None:
+        line += (f", {eng.stats.demoted_pages} pages demoted, "
+                 f"{eng.stats.promoted_pages} promoted, "
+                 f"{eng.stats.session_hits} session hits")
+        if eng.stats.host_evicted_pages:
+            line += f", {eng.stats.host_evicted_pages} evicted"
     print(line + ")")
     for rid in sorted(out)[:4]:
         print(f"  req {rid}: {out[rid]} "

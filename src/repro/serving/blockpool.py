@@ -53,7 +53,8 @@ Two classes:
   * :class:`BlockPool` — the refcounting free-list allocator (no device
     state). Invariant: every page is either on the free list with
     refcount 0, or allocated with refcount >= 1; the sum of refcounts
-    equals the ownership multiset across slot block tables
+    equals the ownership multiset across slot block tables plus the
+    manager's session-cache refs
     (:meth:`PagedSlotManager.check` enforces the cross-structure half).
   * :class:`PagedSlotManager` — drop-in replacement for
     :class:`repro.serving.kvcache.SlotManager` that additionally owns the
@@ -67,11 +68,39 @@ Two classes:
     the pool dry. The block tables make preemption relocation-free: a
     re-admitted sequence just gets fresh pages — or re-maps its shared
     prefix if the pages survived through another owner.
+
+**The memory hierarchy (tier 0 of three).** With a
+:class:`~repro.serving.tiers.TieredPool` attached, this pool becomes
+tier 0 of an HBM → host → disk page hierarchy and the manager stops
+discarding KV it might want back:
+
+  * **Session cache (tier-0 retention).** :meth:`retain_session` — the
+    retire/preempt hook — registers a departing sequence's full pages in
+    the prefix index and transfers the slot's ref on each to a
+    manager-held LRU *session set* instead of freeing them. A returning
+    conversation (same prompt + generated history) then re-maps its
+    whole prefix by refcount bump, zero copies.
+  * **Demotion under pressure.** When allocation runs dry,
+    :meth:`reclaim_session` drops session refs LRU-first; pages whose
+    last ref that was get their slabs bulk-copied device→host (the
+    engine's gather) and land in the tiered store, with the index entry
+    rebound from page id to store handle — matchable, just not
+    addressable. Only falling off the hierarchy's bottom truly evicts.
+  * **Promotion at admission.** :meth:`_make_slot` spans tiers: a match
+    whose demoted span reaches the plan's ``swap_threshold`` (the
+    ``dispatch.find_swap_threshold`` roofline: link copy cost vs
+    chunked-prefill recompute) allocates fresh tier-0 pages for those
+    chunks and hands the engine ``pending_promotions`` — one bulk
+    host→device upload — instead of re-prefilling them.
+
+The demoted bytes are the bytes the original run wrote, so a resumed or
+returning sequence decodes bit-identically to one that never left.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from collections import OrderedDict
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -80,6 +109,7 @@ from repro.models.kvlayout import pages_for, pow2_bucket  # noqa: F401
 # layouts/engine/benchmarks)
 from repro.serving.kvcache import Slot, SlotManager
 from repro.serving.prefix import PrefixIndex, shared_prefix_groups
+from repro.serving.tiers import TieredPool
 
 
 class BlockPool:
@@ -226,6 +256,13 @@ class PagedSlot(Slot):
     #                              slot whose pending pages this one mapped
     pending_fork: Optional[tuple] = None   # (src, dst): slab copy the
     #                              engine owes before this slot's prefill
+    # tiered-promotion admission metadata (empty without a TieredPool)
+    pending_promotions: list = dataclasses.field(default_factory=list)
+    #                              [(slab, dst_page)]: host→device uploads
+    #                              the engine owes before this slot's
+    #                              prefill (promoted prefix content)
+    session_mapped: int = 0      # matched pages served out of the tier-0
+    #                              session cache (refcount bump, no copy)
 
 
 class PagedSlotManager(SlotManager):
@@ -243,12 +280,29 @@ class PagedSlotManager(SlotManager):
     """
 
     def __init__(self, num_slots: int, max_seq: int, pool: BlockPool,
-                 prefix_index: Optional[PrefixIndex] = None):
+                 prefix_index: Optional[PrefixIndex] = None,
+                 tiers: Optional[TieredPool] = None):
         self.pool = pool
         self.prefix = prefix_index
         if prefix_index is not None and \
                 prefix_index.page_size != pool.page_size:
             raise ValueError("prefix index / pool page_size mismatch")
+        if tiers is not None and prefix_index is None:
+            raise ValueError(
+                "a TieredPool needs a prefix index — the index is the "
+                "cross-tier map that makes demoted pages matchable")
+        self.tiers = tiers
+        # tier-0 session cache: pages of finished/preempted sequences the
+        # manager holds one ref on, LRU order (page -> None); drained by
+        # reclaim_session under pool pressure
+        self._session: "OrderedDict[int, None]" = OrderedDict()
+        # min demoted-span (pages) worth promoting instead of
+        # re-prefilling; the engine sets it from plan.paged.swap_threshold
+        self.swap_threshold = 1
+        # engine hook: reclaim_cb(pages_needed) -> bool, demotes session
+        # pages (device→host gather included) and returns whether enough
+        # pool capacity was freed
+        self.reclaim_cb: Optional[Callable[[int], bool]] = None
         self.max_pages_per_seq = pool.pages_for(max_seq)
         # dense (num_slots, max_pages_per_seq) block-table operand, cached
         # device-side; rebuilt only when a table changed (alloc / ensure /
@@ -295,50 +349,130 @@ class PagedSlotManager(SlotManager):
                 f"{self.pool.num_pages} (page_size {self.pool.page_size})")
 
         ps = self.pool.page_size
-        shared: list[int] = []
+        # per covered chunk: ("share", page) -> refcount bump, or
+        # ("promote", hid) -> fresh page + host→device upload
+        kept: list[tuple] = []
         level = 0
         fork_src: Optional[int] = None
+        session_mapped = 0
         if self.prefix is not None and tokens is not None and prompt_len:
             m = self.prefix.match(tokens)
-            shared = list(m.pages)
-            if shared and len(shared) * ps == prompt_len:
+            n_demoted = sum(1 for t in m.tiers if t > 0)
+            # swap-vs-re-prefill: promoting is a per-admission decision —
+            # either the whole demoted span is worth the link copies
+            # (plan-tuned swap_threshold pages) or the match truncates at
+            # the first demoted entry and those chunks re-prefill
+            promote = (self.tiers is not None
+                       and n_demoted >= self.swap_threshold)
+            for pg, tier, hid in zip(m.pages, m.tiers, m.hids):
+                if tier == 0:
+                    kept.append(("share", pg))
+                elif promote:
+                    kept.append(("promote", hid))
+                else:
+                    break
+            if kept and len(kept) * ps == prompt_len:
                 # prompt fully covered: the tail page still must yield the
                 # last-token logits, so the engine re-runs the final chunk.
-                # A committed tail is forked (COW — the rewrite lands in a
-                # private copy); a pending tail has no content to copy yet,
-                # so just prefill that page ourselves.
-                if m.tail_pending:
-                    shared.pop()
-                else:
-                    fork_src = shared.pop()
+                # A committed shared tail is forked (COW — the rewrite
+                # lands in a private copy); a pending tail has no content
+                # to copy yet, so just prefill that page ourselves; a
+                # *promoted* tail needs neither — its fresh tier-0 page is
+                # private already, so the re-run writes it in place.
+                kind, val = kept[-1]
+                if kind == "share":
+                    if m.pending[len(kept) - 1] is not None:
+                        kept.pop()
+                    else:
+                        fork_src = val
+                        kept.pop()
             if m.pending_level >= 0:
                 level = m.pending_level + 1
-        n_shared = len(shared)
-        shared_len = (n_shared + (1 if fork_src is not None else 0)) * ps
+        n_shared = sum(1 for kind, _ in kept if kind == "share")
+        n_promote = len(kept) - n_shared
+        shared_len = (len(kept) + (1 if fork_src is not None else 0)) * ps
 
         # lazy: reserve what prefill will actually write (shared prefix
-        # excluded; the COW fork's destination counts as a write) plus ONE
-        # decode growth page (capped at the request's true total
-        # footprint) — without the headroom a request admitted into a dry
-        # pool would pay the whole chunked prefill and be preempted on its
-        # very first decode write, thrashing one token per re-prefill.
-        # Further growth goes through ensure(), preempting on exhaustion.
+        # excluded; COW-fork destinations and promoted pages count as
+        # writes) plus ONE decode growth page (capped at the request's
+        # true total footprint) — without the headroom a request admitted
+        # into a dry pool would pay the whole chunked prefill and be
+        # preempted on its very first decode write, thrashing one token
+        # per re-prefill. Further growth goes through ensure(),
+        # preempting on exhaustion.
         need = min(self.pool.pages_for(prompt_len) + 1,
                    self.pool.pages_for(prompt_len + max_new)) - n_shared
-        fresh = self.pool.alloc(need)
+
+        # Pin before any reclaim can run: share() the matched tier-0
+        # pages (a session page's lone ref might otherwise be the one
+        # reclaim demotes) and pop promoted slabs out of the tiered store
+        # (reclaim demotes *into* the store and could otherwise LRU-evict
+        # the very slabs this admission is about to upload).
+        share_pages = [v for kind, v in kept if kind == "share"]
+        self.pool.share(share_pages)
+        promos = [(i, hid, self.tiers.pop(hid))
+                  for i, (kind, hid) in enumerate(kept) if kind == "promote"]
+        fresh = self._alloc_reclaiming(need)
         if fresh is None:
-            return None                  # no refs taken — side-effect free
-        self.pool.share(shared)
+            # roll back: net refcounts restored; slabs re-demoted (their
+            # entries rebound to the new handles, purged only if the
+            # store is truly full)
+            for page in self.pool.free(share_pages):
+                self.prefix.drop_page(page)
+            for _i, hid, slab in promos:
+                new_hid = self.tiers.demote(slab)
+                if new_hid is None:
+                    self.prefix.purge_hid(hid)
+                else:
+                    self.prefix.rebind_hid(hid, new_hid)
+                    self.prefix.set_tier(new_hid,
+                                         self.tiers.tier_of(new_hid))
+            if share_pages or promos:
+                self._bt_dirty = True
+                self._gp_dirty = True
+            return None
+        pages: list[int] = []
+        fi = 0
+        pending_promotions: list[tuple] = []
+        slab_by_chunk = {i: slab for i, _hid, slab in promos}
+        for i, (kind, val) in enumerate(kept):
+            if kind == "share":
+                pages.append(val)
+                if val in self._session:
+                    self._session.move_to_end(val)   # LRU recency
+                    session_mapped += 1
+            else:
+                dst = fresh[fi]
+                fi += 1
+                pending_promotions.append((slab_by_chunk[i], dst))
+                self.prefix.promote_hid(val, dst)
+                pages.append(dst)
+        pages += fresh[fi:]
         slot = PagedSlot(request_id, prompt_len, 0, max_new,
-                         pages=shared + fresh,
-                         shared_len=shared_len, prefill_level=level)
+                         pages=pages,
+                         shared_len=shared_len, prefill_level=level,
+                         pending_promotions=pending_promotions,
+                         session_mapped=session_mapped + n_promote)
         if fork_src is not None:
             # block table already points at the fork destination
-            # (pages[n_shared] = fresh[0]); the engine copies the slab
+            # (pages[len(kept)] = fresh[fi]); the engine copies the slab
             # before prefill, then re-runs the final chunk into it
-            slot.pending_fork = (fork_src, fresh[0])
+            slot.pending_fork = (fork_src, fresh[fi])
         slot.prefill_start = min(shared_len, prompt_len)
         return slot
+
+    def _alloc_reclaiming(self, n: int) -> Optional[list]:
+        """``pool.alloc`` that spends the session cache before failing:
+        on a dry pool, ask the engine to demote LRU session pages
+        (``reclaim_cb``) and retry — finished-session KV is a cache, and
+        a cache must never win a page fight against live admission or
+        growth."""
+        got = self.pool.alloc(n)
+        if got is not None or self.reclaim_cb is None:
+            return got
+        if self.reclaim_cb(n - self.pool.free_pages):
+            return self.pool.alloc(n)
+        return None
 
     def ensure(self, idx: int, positions: int) -> bool:
         """Grow slot ``idx``'s block table to cover ``positions`` KV
@@ -348,7 +482,7 @@ class PagedSlotManager(SlotManager):
         need = self.pool.pages_for(positions) - len(s.pages)
         if need <= 0:
             return True
-        got = self.pool.alloc(need)
+        got = self._alloc_reclaiming(need)
         if got is None:
             return False
         s.pages.extend(got)
@@ -362,35 +496,41 @@ class PagedSlotManager(SlotManager):
         allocate a private destination, patch the block table, drop one
         ref on the source. Returns the ``(src, dst)`` pairs whose
         device slabs the engine must copy, or ``None`` when the pool is
-        dry — in which case every fork this call already made is rolled
-        back (table restored, ref re-taken, destination freed), so the
-        caller preempts and retries against unchanged state and can
-        never skip a pending slab copy."""
+        dry — side-effect free, so the caller preempts and retries
+        against unchanged state and can never skip a pending slab copy.
+
+        Every destination is reserved **up front** (one
+        ``_alloc_reclaiming`` call): the session-cache reclaim a dry
+        alloc may trigger demotes pages and mutates refcounts, so it
+        must run before this fork takes any ref — never between a
+        source's ref-drop and the engine's slab copy."""
         s = self.slots[idx]
         ps = self.pool.page_size
-        forked: list[tuple[int, int, int]] = []     # (page idx, src, dst)
+        to_fork: list[int] = []
         for pi in range(start // ps, (max(end, start + 1) - 1) // ps + 1):
             if pi >= len(s.pages):
                 break                    # growth is ensure()'s job
+            if self.pool.refcount(s.pages[pi]) > 1:
+                to_fork.append(pi)
+        if not to_fork:
+            return []
+        dsts = self._alloc_reclaiming(len(to_fork))
+        if dsts is None:
+            return None
+        out: list[tuple[int, int]] = []
+        for pi, dst in zip(to_fork, dsts):
             src = s.pages[pi]
-            if self.pool.refcount(src) <= 1:
-                continue                 # private already — write in place
-            got = self.pool.alloc(1)
-            if got is None:
-                for pj, prev, dst in forked:
-                    s.pages[pj] = prev
-                    self.pool.share([prev])
-                    self.pool.free([dst])
-                self._bt_dirty = True
-                self._gp_dirty = True
-                return None
-            dst = got[0]
-            self.pool.free([src])        # drop our ref; survivors keep it
+            # a reclaim during the reservation may have dropped a session
+            # ref and left src private after all — the fork is then
+            # redundant but harmless, except its source can now die
+            for page in self.pool.free([src]):
+                if self.prefix is not None:
+                    self.prefix.drop_page(page)
             s.pages[pi] = dst
-            self._bt_dirty = True
-            self._gp_dirty = True
-            forked.append((pi, src, dst))
-        return [(src, dst) for _pi, src, dst in forked]
+            out.append((src, dst))
+        self._bt_dirty = True
+        self._gp_dirty = True
+        return out
 
     def commit_prefix(self, idx: int, tokens) -> None:
         """Prefill for slot ``idx`` completed: the full prompt pages now
@@ -409,6 +549,80 @@ class PagedSlotManager(SlotManager):
             self._bt_dirty = True
             self._gp_dirty = True
         super().release(idx)
+
+    # -- session cache (tier-0 retention + demotion under pressure) ----------
+
+    def retain_session(self, idx: int, tokens) -> int:
+        """Retire/preempt a slot *without discarding its KV*: register
+        every full page of ``tokens`` (the slot's KV-valid token prefix)
+        in the prefix index and transfer this slot's ref on each
+        registered page to the manager's LRU session set — the tier-0
+        session cache. A returning conversation re-maps those pages by
+        refcount bump; pool pressure demotes them host-ward through
+        :meth:`reclaim_session` instead. Pages the index does not hold
+        (partial tail, superseded duplicates) are freed as usual.
+        Returns how many pages the session set newly retained."""
+        assert self.prefix is not None, "session cache needs a prefix index"
+        s = self.slots[idx]
+        self.prefix.register(tokens, s.pages)
+        self.prefix.commit(tokens)
+        indexed = self.prefix.shared_page_ids()
+        retained = 0
+        to_free: list[int] = []
+        for p in s.pages:
+            if p in indexed and p not in self._session:
+                self._session[p] = None       # ref transfers to the cache
+                retained += 1
+            else:
+                to_free.append(p)
+        for page in self.pool.free(to_free):
+            self.prefix.drop_page(page)
+        s.pages = []
+        self._bt_dirty = True
+        self._gp_dirty = True
+        self.release(idx)
+        return retained
+
+    def reclaim_session(self, need: int, gather) -> int:
+        """Drop session-cache refs LRU-first until ``need`` pages return
+        to the free list (or the cache is empty). A page whose *last* ref
+        was the session's dies — its slab is bulk-copied device→host
+        first (``gather(pages) -> {page: slab}``, one copy for the whole
+        batch) and demoted into the tiered store, the index entry rebound
+        to the store handle. A page some live slot still shares survives
+        with its entry untouched; dropping the session ref just stops
+        pinning it. Returns how many pages were actually freed."""
+        if not self._session:
+            return 0
+        drop: list[int] = []
+        expect = 0
+        for p in self._session:               # LRU -> MRU order
+            drop.append(p)
+            if self.pool.refcount(p) == 1:
+                expect += 1
+            if expect >= need:
+                break
+        dying = [p for p in drop if self.pool.refcount(p) == 1]
+        slabs = gather(dying) if dying and self.tiers is not None else {}
+        freed = 0
+        for p in drop:
+            del self._session[p]
+            if not self.pool.free([p]):
+                continue                      # survives through a slot
+            freed += 1
+            hid = self.tiers.demote(slabs[p]) \
+                if self.tiers is not None and p in slabs else None
+            if hid is None or not self.prefix.demote_page(
+                    p, hid, tier=self.tiers.tier_of(hid)):
+                if hid is not None:
+                    self.tiers.drop(hid)      # page wasn't indexed
+                self.prefix.drop_page(p)
+        self._bt_dirty = True
+        self._gp_dirty = True
+        return freed
+
+    def session_pages(self) -> int:
+        return len(self._session)
 
     def block_tables(self):
         """Dense (num_slots, max_pages_per_seq) int32 block-table operand
@@ -505,8 +719,10 @@ class PagedSlotManager(SlotManager):
     def check(self) -> None:
         """Cross-structure invariants for the property tests: free/ref
         conservation in the pool, and — the refcount invariant — the
-        ownership multiset across slot block tables equals the pool's
-        refcounts exactly."""
+        ownership multiset across slot block tables *plus the session
+        cache's one-ref-per-page holdings* equals the pool's refcounts
+        exactly. With a tiered store attached, every demoted index entry
+        must resolve to a live slab."""
         self.pool.check()
         owned: dict[int, int] = {}
         for s in self.slots:
@@ -517,9 +733,18 @@ class PagedSlotManager(SlotManager):
         for s in self.slots:
             assert len(set(s.pages)) == len(s.pages), \
                 "one slot maps the same page twice (fork aliased)"
+        for p in self._session:
+            owned[p] = owned.get(p, 0) + 1
+            assert self.prefix is not None \
+                and p in self.prefix.shared_page_ids(), \
+                f"session cache holds unindexed page {p}"
         assert {p: self.pool.refcount(p) for p in owned} == owned, \
-            "refcounts out of sync with slot ownership multiset"
+            "refcounts out of sync with slot+session ownership multiset"
         assert set(owned) == self.pool.allocated_pages(), \
             "pool used-set out of sync with slot block tables"
+        if self.tiers is not None:
+            self.tiers.check()
         if self.prefix is not None:
-            self.prefix.check(self.pool.allocated_pages())
+            self.prefix.check(
+                self.pool.allocated_pages(),
+                self.tiers.ids() if self.tiers is not None else frozenset())

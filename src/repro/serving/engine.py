@@ -43,6 +43,20 @@ all first-class and swappable:
     sharers keep the pages), and chunk boundaries stay on the share-less
     grid, so greedy outputs are bit-identical with sharing on or off.
 
+  * **Tiered KV + session cache.** With ``host_pages``/``session_cache``
+    (paged + sharing only), the pool becomes tier 0 of a memory
+    hierarchy (:mod:`repro.serving.tiers`): retiring or preempting a
+    sequence *retains* its full KV pages in a tier-0 session set instead
+    of freeing them, pool pressure demotes those pages host-ward (one
+    bulk device→host gather per reclaim batch), and a returning
+    conversation whose prefix matches a demoted span *promotes* the
+    slabs back (one bulk host→device scatter before its prefill) —
+    re-prefilling only what was truly evicted. Whether promoting beats
+    re-prefilling is the plan-tuned ``PagedPlan.swap_threshold``
+    (:func:`repro.core.dispatch.find_swap_threshold`). Demoted bytes are
+    the originally computed bytes, so resumed decode stays bit-identical
+    with never-preempted and re-prefilled runs.
+
   * **One dispatch surface.** Every kernel decision — GEMM routing,
     softmax scheme, decode ``block_k``, backend — rides in the single
     ``plan=`` operand (:class:`~repro.core.plan.ExecutionPlan`, tuned
@@ -89,6 +103,7 @@ from repro.models.layers import LayerCtx
 from repro.serving.blockpool import BlockPool, PagedSlotManager
 from repro.serving.kvcache import SlotManager
 from repro.serving.prefix import PrefixIndex
+from repro.serving.tiers import TieredPool
 from repro.serving.request import (FinishReason, Phase, RequestState,
                                    SamplingParams, TokenEvent)
 from repro.serving.sampling import sample
@@ -122,6 +137,16 @@ class EngineStats:
     #                                  shared-prefix group
     prefix_kv_bytes_saved: int = 0   # prefix KV bytes read once per group
     #                                  instead of once per member
+    # tiered KV / session cache (all zero without host_pages/session_cache)
+    demoted_pages: int = 0           # pages pushed device→host(→disk)
+    #                                  instead of being discarded
+    promoted_pages: int = 0          # demoted pages copied back to fresh
+    #                                  tier-0 pages at re-admission
+    session_hits: int = 0            # admissions that re-mapped at least
+    #                                  one retained session page (tier-0
+    #                                  refcount bump or promotion)
+    host_evicted_pages: int = 0      # pages that fell off the bottom tier
+    #                                  (KV lost; those spans re-prefill)
 
 
 class Engine:
@@ -139,6 +164,10 @@ class Engine:
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
         prefix_sharing: bool = False,
+        host_pages: Optional[int] = None,
+        session_cache: Optional[bool] = None,
+        disk_dir: Optional[str] = None,
+        disk_pages: int = 0,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -157,13 +186,26 @@ class Engine:
         self.prefill_chunk = (
             prefill_chunk if self.api.supports_chunked_prefill else 0)
 
+        # tiered KV store: any of the knobs turns the hierarchy on
+        tiered = (host_pages is not None or disk_pages > 0
+                  or bool(session_cache))
         self.layout: KVLayout
         self.prefix: Optional[PrefixIndex] = None
+        self.tiers: Optional[TieredPool] = None
+        # retain finished sequences' KV in the session cache? defaults to
+        # on whenever the hierarchy exists (the session cache is its
+        # point); session_cache=False keeps preemption-demotion only
+        self.session_cache = (tiered if session_cache is None
+                              else bool(session_cache))
         if cache_kind == "dense":
             if prefix_sharing:
                 raise ValueError(
                     "prefix_sharing needs refcounted pages; "
                     "use cache_kind='paged'")
+            if tiered:
+                raise ValueError(
+                    "tiered KV (host_pages/session_cache/disk_pages) "
+                    "needs cache_kind='paged'")
             self.layout = DenseLayout(num_slots, max_seq)
             self.slots: SlotManager = SlotManager(num_slots, max_seq)
             self.pool = None
@@ -194,8 +236,22 @@ class Engine:
             self.layout = PagedLayout(pool.num_pages, page_size)
             if prefix_sharing:
                 self.prefix = PrefixIndex(page_size)
+            if tiered:
+                if self.prefix is None:
+                    raise ValueError(
+                        "tiered KV needs prefix_sharing=True — the "
+                        "prefix index is the cross-tier map that makes "
+                        "retained/demoted pages matchable")
+                self.tiers = TieredPool(
+                    host_pages if host_pages is not None else 0,
+                    index=self.prefix,
+                    disk_dir=disk_dir, disk_pages=disk_pages)
             self.slots = PagedSlotManager(num_slots, max_seq, pool,
-                                          prefix_index=self.prefix)
+                                          prefix_index=self.prefix,
+                                          tiers=self.tiers)
+            if self.tiers is not None:
+                self.slots.swap_threshold = self.plan.paged.swap_threshold
+                self.slots.reclaim_cb = self._reclaim_session
             self.pool = pool
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
@@ -234,6 +290,17 @@ class Engine:
                 lambda a: a.at[:, dst].set(a[:, src]), c),
             donate_argnums=(0,),
         ) if cache_kind == "paged" else None
+        # tiered promotion: scatter a batch of host slabs (stacked to
+        # (layers, n, page_size, kv_heads, head_dim) per leaf) into fresh
+        # tier-0 pages in one donated update; padding rows carry the OOB
+        # sentinel destination and are dropped, so slab batches share a
+        # pow2 family of compiles
+        self._promote_upload = jax.jit(
+            lambda c, s, d: jax.tree.map(
+                lambda a, b: a.at[:, d].set(
+                    b.astype(a.dtype), mode="drop"), c, s),
+            donate_argnums=(0,),
+        ) if self.tiers is not None else None
         # prefix-shared grouped decode: when the tuned plan asks for it
         # (and refcounted sharing is on so groups can exist), decode ticks
         # with a qualifying group dispatch through a second jitted lambda
@@ -346,7 +413,13 @@ class Engine:
         prompt) and return its tokens. A long-lived server must call this
         (or ``evict_finished``) after consuming results — the engine keeps
         every RequestState for post-run inspection and would otherwise
-        grow without bound."""
+        grow without bound.
+
+        This does **not** discard the conversation's KV: with the session
+        cache on, the finished sequence's pages were already retained at
+        retire time (tier-0 session set, demoted host-ward under pool
+        pressure), so evicting the bookkeeping record leaves the prefix
+        matchable for the conversation's next turn."""
         state = self.requests[rid]
         if not state.finished:
             raise ValueError(f"request {rid} is not finished; abort() it "
@@ -354,11 +427,17 @@ class Engine:
         del self.requests[rid]
         return state.tokens
 
-    def evict_finished(self) -> int:
-        """Evict every finished request; returns how many were dropped."""
+    def evict_finished(self, *, flush: bool = False) -> int:
+        """Evict every finished request's bookkeeping record; returns how
+        many were dropped. Their KV stays cached (see :meth:`evict`);
+        ``flush=True`` additionally demotes the whole tier-0 session
+        cache host-ward right now (:meth:`flush_sessions`) instead of
+        waiting for pool pressure."""
         done = [r for r, s in self.requests.items() if s.finished]
         for r in done:
             del self.requests[r]
+        if flush:
+            self.flush_sessions()
         return len(done)
 
     def run(self, requests, *, max_ticks: int = 10_000
@@ -444,14 +523,24 @@ class Engine:
                 # the COW-fork destination is private, not shared
                 state.shared_len = slot.shared_len - (
                     self.pool.page_size if slot.pending_fork else 0)
-                self.stats.shared_prefix_pages += \
+                # refcount-bump pages only; promoted pages are fresh
+                # allocations counted under promoted_pages instead
+                self.stats.shared_prefix_pages += (
                     state.shared_len // self.pool.page_size
+                    - len(slot.pending_promotions))
                 self.stats.saved_prefill_tokens += \
                     self._chunk_start(idx, len(toks))
+                if slot.session_mapped:
+                    # re-mapped a retired/preempted session's retained KV
+                    # (tier-0 refcount bump and/or promotion from host)
+                    self.stats.session_hits += 1
+                    slot.session_mapped = 0
         if not admitted:
             return []
         self.waiting = [s for s in self.waiting if s.slot is None]
         self._note_page_pressure()
+        if self.tiers is not None:
+            self._apply_pending_promotions(admitted)
         if self.prefix is not None:
             self._apply_pending_forks(admitted)
         if self.prefill_chunk:
@@ -477,6 +566,38 @@ class Engine:
                 self.cache = self._copy_page(self.cache, src, dst)
                 slot.pending_fork = None
                 self.stats.cow_forks += 1
+
+    def _apply_pending_promotions(
+            self, admitted: list[tuple[int, RequestState]]) -> None:
+        """Perform the host→device uploads admission promised: each
+        promoted prefix page's slab (popped from the tiered store at
+        match time) lands in its freshly allocated tier-0 page. One
+        donated scatter for the whole wave's batch, before any fork or
+        prefill of this wave reads those pages. The slabs hold the
+        originally computed KV bytes, so the resumed sequence's attention
+        reads are bit-identical to a never-demoted run's."""
+        ups: list[tuple] = []           # (slab, dst_page)
+        for idx, _state in admitted:
+            slot = self.slots.slots[idx]
+            if slot.pending_promotions:
+                ups.extend(slot.pending_promotions)
+                slot.pending_promotions = []
+        if not ups:
+            return
+        n = len(ups)
+        nb = pow2_bucket(n)
+        dst = np.full((nb,), self.pool.num_pages, np.int32)  # pad = OOB
+        dst[:n] = [d for _slab, d in ups]
+        leaves, treedef = jax.tree.flatten(self.cache)
+        stacked = []
+        for j in range(len(leaves)):
+            rows = [slab[j] for slab, _d in ups]
+            rows += [rows[0]] * (nb - n)     # dropped via sentinel dst
+            stacked.append(np.stack(rows, axis=1))
+        self.cache = self._promote_upload(
+            self.cache, jax.tree.unflatten(treedef, stacked),
+            jnp.asarray(dst))
+        self.stats.promoted_pages += n
 
     def _chunk_start(self, idx: int, n_prefill: int) -> int:
         """First position slot ``idx``'s chunked prefill must process.
@@ -724,15 +845,75 @@ class Engine:
             events.append(self._emit(idx, state, tok))
         return events
 
+    # -- tiered store dataflow (the only tier-crossing copies) -----------------
+
+    def _gather_pages(self, pages: list[int]) -> dict[int, tuple]:
+        """Bulk device→host copy of the named pages' KV slabs: one
+        bucketed gather per cache leaf for the whole batch, returning
+        ``{page: slab}`` where a slab is the per-leaf tuple of
+        ``(layers, page_size, kv_heads, head_dim)`` numpy arrays the
+        :class:`~repro.serving.tiers.TieredPool` stores."""
+        if not pages:
+            return {}
+        n = len(pages)
+        nb = pow2_bucket(n)
+        idx = np.full((nb,), pages[0], np.int32)   # pad rows discarded
+        idx[:n] = pages
+        idxd = jnp.asarray(idx)
+        host = [np.asarray(leaf[:, idxd])
+                for leaf in jax.tree.leaves(self.cache)]
+        return {p: tuple(np.ascontiguousarray(h[:, i]) for h in host)
+                for i, p in enumerate(pages)}
+
+    def _reclaim_session(self, need: int) -> bool:
+        """Slot-manager callback when an allocation finds the pool dry:
+        demote LRU session pages (device→host gather included) until
+        ``need`` pages are free. The session cache never wins a page
+        fight against live admission or growth."""
+        if self.slots.session_pages() == 0:
+            return False
+        before = dataclasses.replace(self.tiers.stats)
+        freed = self.slots.reclaim_session(max(need, 1), self._gather_pages)
+        st = self.tiers.stats
+        self.stats.demoted_pages += st.demoted - before.demoted
+        self.stats.host_evicted_pages += st.evicted - before.evicted
+        return freed >= need
+
+    def flush_sessions(self) -> int:
+        """Demote the *entire* tier-0 session cache host-ward now (one
+        bulk gather), returning how many device pages were freed. The
+        demand-driven path (:meth:`_reclaim_session`) makes this
+        unnecessary in steady state; it exists for checkpoints and for
+        benchmarks that want host-resident sessions without first
+        running the pool dry."""
+        if self.tiers is None or self.slots.session_pages() == 0:
+            return 0
+        before = dataclasses.replace(self.tiers.stats)
+        freed = self.slots.reclaim_session(
+            self.slots.session_pages(), self._gather_pages)
+        st = self.tiers.stats
+        self.stats.demoted_pages += st.demoted - before.demoted
+        self.stats.host_evicted_pages += st.evicted - before.evicted
+        return freed
+
     # -- bookkeeping -----------------------------------------------------------
 
     def _preempt(self, state: RequestState) -> None:
         idx = state.slot
         self.by_slot.pop(idx, None)
-        self.slots.release(idx)
+        if self.tiers is not None:
+            # demote, don't discard: the victim's full KV pages move to
+            # the session cache (demoted host-ward only under pressure),
+            # so re-admission promotes instead of re-prefilling them
+            length = self.slots.slots[idx].length
+            self.slots.retain_session(
+                idx, state.prefill_tokens()[:length])
+        else:
+            self.slots.release(idx)
         state.phase = Phase.PREEMPTED
         state.slot = None
         state.shared_len = 0          # recomputed if re-admission re-maps
+        state.persistable_len = 0
         state.preemptions += 1
         self.stats.preemptions += 1
         self.waiting.append(state)
@@ -774,8 +955,18 @@ class Engine:
         mirrors ``state.tokens`` exactly: it carries the last *kept*
         token (so a stop token excluded by ``include_stop=False`` never
         reaches the stream either), or ``token=None`` at the next index
-        when the request ends without keeping one."""
-        self.slots.release(idx)
+        when the request ends without keeping one.
+
+        With the session cache on, the finished sequence's full KV pages
+        are retained (registered in the prefix index + held by the
+        manager's session set) instead of freed — the conversation's next
+        turn re-maps or promotes them rather than re-prefilling."""
+        if self.tiers is not None and self.session_cache:
+            length = self.slots.slots[idx].length
+            self.slots.retain_session(
+                idx, state.prefill_tokens()[:length])
+        else:
+            self.slots.release(idx)
         self.by_slot.pop(idx, None)
         state.finish(reason)
         self.stats.finished += 1
@@ -803,6 +994,12 @@ class Engine:
             state.shared_len = ps * sum(
                 1 for p in self.slots.slots[idx].pages
                 if self.pool.refcount(p) > 1)
+            if self.tiers is not None:
+                # with a tiered store, preemption retains every full
+                # page — so the re-admission cost signal is only the
+                # partial tail past the last page boundary
+                state.persistable_len = (
+                    self.slots.slots[idx].length // ps) * ps
 
     def _note_page_pressure(self) -> None:
         if self.pool is not None:

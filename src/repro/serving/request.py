@@ -91,6 +91,12 @@ class RequestState:
     #                                  shared (refcount > 1 at admission)
     #                                  pages — set by the engine at
     #                                  admission, cleared on preemption
+    persistable_len: int = 0         # page-aligned resident positions whose
+    #                                  KV survives a preemption through the
+    #                                  tiered session cache (retained /
+    #                                  demoted, not discarded) — refreshed
+    #                                  by the engine before victim ranking;
+    #                                  stays 0 without a TieredPool
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     first_token_tick: Optional[int] = None
@@ -120,6 +126,16 @@ class RequestState:
         re-maps them instead of re-prefilling), so this is both the
         reclaim value and the re-prefill cost of evicting this request."""
         return max(self.total_len - self.shared_len, 0)
+
+    @property
+    def resume_cost(self) -> int:
+        """Positions a re-admission would actually *recompute*. With a
+        tiered KV store, preemption retains every full page (tier-0
+        session set, demoted host-ward under pressure), so only the
+        positions past ``max(shared_len, persistable_len)`` re-prefill —
+        without tiers this degrades to ``exclusive_len`` exactly."""
+        keep = max(self.shared_len, self.persistable_len)
+        return max(self.total_len - keep, 0)
 
     # -- lifecycle ----------------------------------------------------------
 

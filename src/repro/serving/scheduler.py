@@ -98,13 +98,19 @@ class PageBudgetFair(Scheduler):
             waiting, key=lambda s: (s.total_len, s.arrival, s.rid))
 
     def pick_victim(self, candidates):
-        # cost signal knows about prefix sharing: evicting a request only
-        # reclaims its *exclusively* owned pages (shared-prefix pages
-        # survive through the other owners, and re-admission re-maps them
-        # instead of re-prefilling) — so rank victims by exclusive
-        # footprint: most pages freed per eviction AND the cheapest
-        # re-prefill among equals
-        return max(candidates, key=lambda s: (s.exclusive_len, s.rid),
+        # cost signal knows about prefix sharing AND the tiered store:
+        # evicting a request only reclaims its *exclusively* owned pages
+        # (shared-prefix pages survive through the other owners, and
+        # re-admission re-maps them instead of re-prefilling) — so rank
+        # victims by exclusive footprint: most pages freed per eviction.
+        # Among equals, prefer the victim whose re-admission recomputes
+        # the least (``resume_cost``): with a TieredPool, a preemption
+        # retains full pages in the session cache, so a sequence whose KV
+        # can be demoted-and-promoted is cheaper to evict than one that
+        # must re-prefill the same span. Without tiers resume_cost ==
+        # exclusive_len and the ranking is unchanged.
+        return max(candidates,
+                   key=lambda s: (s.exclusive_len, -s.resume_cost, s.rid),
                    default=None)
 
 

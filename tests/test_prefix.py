@@ -16,6 +16,7 @@ from repro.serving.blockpool import BlockPool, PagedSlotManager
 from repro.serving.engine import Engine
 from repro.serving.prefix import PrefixIndex
 from repro.serving.request import SamplingParams
+from repro.serving.tiers import TieredPool
 
 settings.register_profile("fast", max_examples=20, deadline=None)
 settings.load_profile("fast")
@@ -280,6 +281,83 @@ def test_sharing_manager_random_lifecycle(seed):
     assert pool.free_pages == num_pages       # every ref returned
     assert len(mgr.prefix) == 0               # index died with its pages
     assert mgr.group_plan(threshold=2) is None  # nothing resident to group
+
+
+@given(st.integers(0, 10_000))
+def test_tiered_manager_random_lifecycle(seed):
+    """The same random-lifecycle invariants with a tiered store behind
+    the pool, plus the cross-tier ops: retire-with-retention
+    (retain_session), demotion under pressure (reclaim_session with a
+    dummy gather), promotion at re-admission (overlapping prompts re-hit
+    demoted entries whenever the random swap_threshold allows), and true
+    eviction off a deliberately tiny host tier. After every op:
+    refcounts == slot+session ownership, every demoted index entry
+    resolves to a live slab, tier capacities respected."""
+    rng = np.random.default_rng(seed)
+    page_size = int(rng.choice([2, 4]))
+    num_pages = int(rng.integers(6, 24))
+    num_slots = int(rng.integers(2, 5))
+    host_pages = int(rng.integers(0, 6))      # 0 = evict-on-demote hierarchy
+    max_seq = page_size * max(3, num_pages // num_slots)
+    pool = BlockPool(num_pages, page_size)
+    ix = PrefixIndex(page_size)
+    tiers = TieredPool(host_pages, index=ix)
+    mgr = PagedSlotManager(num_slots, max_seq, pool,
+                           prefix_index=ix, tiers=tiers)
+    mgr.swap_threshold = int(rng.integers(1, 4))
+
+    def gather(pages):                        # engine's device→host stand-in
+        return {p: ("slab", p) for p in pages}
+
+    if rng.random() < 0.5:                    # engine wiring: cache loses
+        mgr.reclaim_cb = \
+            lambda need: mgr.reclaim_session(need, gather) >= need
+    headers = [list(rng.integers(1, 50, size=2 * page_size)) for _ in range(2)]
+    live: dict[int, np.ndarray] = {}
+    rid = 0
+    for _ in range(50):
+        op = rng.random()
+        if op < 0.35:
+            toks = np.asarray(
+                headers[int(rng.integers(2))][:int(rng.integers(
+                    1, 2 * page_size + 1))]
+                + list(rng.integers(1, 50, size=int(rng.integers(0, 6)))),
+                np.int32)[:max_seq - 1]
+            max_new = int(rng.integers(1, max_seq - len(toks) + 1))
+            if pages_for(len(toks) + max_new, page_size) > num_pages:
+                continue
+            idx = mgr.try_assign(rid, len(toks), max_new, tokens=toks)
+            if idx is not None:
+                live[idx] = toks
+                rid += 1
+                mgr.commit_prefix(idx, toks)
+        elif op < 0.45 and live:
+            idx = list(live)[rng.integers(len(live))]
+            mgr.ensure(idx, int(rng.integers(1, max_seq + 1)))
+        elif op < 0.55 and live:
+            idx = list(live)[rng.integers(len(live))]
+            pos = int(rng.integers(0, max_seq))
+            mgr.fork_for_write(idx, pos, pos + 1)
+        elif op < 0.70 and live:              # retire into the session cache
+            idx = list(live)[rng.integers(len(live))]
+            mgr.retain_session(idx, live.pop(idx))
+        elif op < 0.80:                       # pool pressure: demote LRU
+            mgr.reclaim_session(int(rng.integers(1, 4)), gather)
+        elif live:
+            idx = list(live)[rng.integers(len(live))]
+            del live[idx]
+            mgr.release(idx)
+        mgr.check()                           # cross-tier invariants
+        _assert_group_plan_consistent(mgr)
+    for idx in list(live):
+        mgr.release(idx)
+    mgr.reclaim_session(num_pages, gather)    # drain the session cache
+    mgr.check()
+    assert pool.free_pages == num_pages       # tier 0 fully reclaimed
+    # whatever keys remain are demoted — every one resolves to a live slab
+    assert len(ix) == len(ix.demoted_ids())
+    assert ix.demoted_ids() <= tiers.ids()
+    assert len(tiers) <= host_pages
 
 
 # ---------------------------------------------------------------------------
