@@ -32,7 +32,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs
 from repro.core.plan import make_plan
 from repro.models.api import get_model
@@ -150,9 +150,8 @@ def run(quick: bool = False) -> dict:
                        backend=jax.default_backend()),
         "rows": rows,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [chunk_prefill -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [chunk_prefill -> {os.path.normpath(path)}]")
     return result
 
 

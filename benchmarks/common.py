@@ -1,10 +1,35 @@
 """Shared timing/measurement helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+
+def artifact_path(out_path: str, quick: bool = False) -> str:
+    """Quick runs write ``BENCH_x.quick.json`` next to ``BENCH_x.json``."""
+    if not quick:
+        return out_path
+    base, ext = os.path.splitext(out_path)
+    return base + ".quick" + ext
+
+
+def write_artifact(out_path: str, result: dict, quick: bool = False) -> str:
+    """Stamp ``result["mode"]`` and write the benchmark artifact.
+
+    ``--quick`` runs trim sweeps, so their numbers must never overwrite
+    the committed full-mode artifacts: quick mode redirects the write to
+    ``BENCH_*.quick.json`` and stamps ``"mode": "quick"`` so a clobbered
+    artifact is detectable after the fact.
+    """
+    result["mode"] = "quick" if quick else "full"
+    path = artifact_path(out_path, quick)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return path
 
 
 def time_jitted(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 import os
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs, hardware
 from repro.core import dispatch as dsp
 from repro.core import plan as plan_mod
@@ -66,9 +66,8 @@ def run(quick: bool = False) -> dict:
         "rows": rows,
         "plans": plans,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [dispatch_table -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [dispatch_table -> {os.path.normpath(path)}]")
     return result
 
 

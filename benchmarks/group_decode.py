@@ -34,7 +34,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs
 from repro.core.plan import make_plan
 from repro.models.api import get_model
@@ -136,9 +136,8 @@ def run(quick: bool = False) -> dict:
                        group_sizes=list(group_sizes)),
         "rows": rows,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"wrote {os.path.normpath(OUT_PATH)}")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"wrote {os.path.normpath(path)}")
     return result
 
 

@@ -1,0 +1,208 @@
+"""Quantized KV pages: bytes per decode step, resident capacity, accuracy.
+
+The decode tick is KV-bandwidth-bound (the premise behind the paper's
+asynchronized softmax) and capacity-bound at serving scale, so shrinking
+the stored page is the highest-leverage lever left after paging, grouping,
+and tiering. This benchmark measures the three claims behind
+``PagedPlan.kv_dtype``:
+
+  * **bytes per decode step** — the same greedy workload served by
+    engines that differ only in ``kv_dtype``; ``EngineStats`` counts the
+    real bytes behind every decode tick's attention reads (page slabs +
+    scale rows), so the int8-vs-bf16 ratio is the measured, not
+    theoretical, bandwidth saving. Asserted >= 1.9x for int8.
+  * **resident capacity at a fixed budget** — for full-size configs, how
+    many KV tokens fit in a fixed HBM page budget per precision (via
+    :func:`repro.core.dispatch.kv_page_bytes`, which includes the f32
+    scale rows quantization adds). Asserted >= 1.9x for int8.
+  * **accuracy under the guard** — max |Δlogits| vs the bf16 baseline
+    over a teacher-forced greedy decode, asserted under the dtype-derived
+    tolerance from :func:`repro.kernels.quant.logits_guard_tol` (the same
+    guard the plan-level scheme-swap test enforces).
+
+Writes ``BENCH_quant.json`` at the repo root (schema: {"bytes": [...],
+"capacity": [...], "accuracy": [...], "config": {...}, "mode": ...}).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, write_artifact
+from repro import configs
+from repro.core import dispatch
+from repro.core.plan import make_plan
+from repro.kernels import quant
+from repro.models.api import get_model
+from repro.models.kvlayout import PagedLayout, pages_for
+from repro.serving.blockpool import BlockPool, PagedSlotManager
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_quant.json")
+
+PAGE_SIZE = 16
+MAX_NEW = 8
+
+
+def _dtypes() -> list:
+    out = ["bf16", "int8"]
+    if quant.fp8_supported():
+        out.append("fp8")
+    return out
+
+
+def _bytes_sweep(cfg, params, dtypes) -> list:
+    """Same workload, engines differing only in kv_dtype: measured KV
+    bytes behind the decode ticks."""
+    rng = np.random.default_rng(3)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=40).astype(np.int32), sp)
+            for _ in range(4)]
+
+    widths = [8, 12, 16, 10, 10]
+    print(fmt_row("kv", "B/page", "decode_KV_B", "bytes_x", "capacity_x",
+                  widths=widths))
+    rows, base = [], None
+    for kd in dtypes:
+        eng = Engine(cfg, params, num_slots=4, max_seq=256,
+                     cache_kind="paged", page_size=PAGE_SIZE,
+                     prefill_chunk=PAGE_SIZE, plan=make_plan("xla"),
+                     kv_dtype=kd, seed=0)
+        eng.run([(p.copy(), s) for p, s in reqs])
+        row = dict(kv_dtype=kd,
+                   kv_page_bytes=eng.stats.kv_page_bytes,
+                   kv_bytes_decode_read=eng.stats.kv_bytes_decode_read,
+                   decode_ticks=eng.ticks)
+        if kd == "bf16":
+            base = row
+        row["bytes_per_step_ratio"] = (base["kv_bytes_decode_read"]
+                                       / row["kv_bytes_decode_read"])
+        row["capacity_ratio"] = (base["kv_page_bytes"]
+                                 / row["kv_page_bytes"])
+        assert row["decode_ticks"] == base["decode_ticks"], \
+            "kv_dtype changed the tick count — workloads not comparable"
+        rows.append(row)
+        print(fmt_row(kd, row["kv_page_bytes"],
+                      row["kv_bytes_decode_read"],
+                      f"{row['bytes_per_step_ratio']:.2f}x",
+                      f"{row['capacity_ratio']:.2f}x", widths=widths))
+    for row in rows:
+        if row["kv_dtype"] != "bf16":
+            assert row["bytes_per_step_ratio"] >= 1.9, row
+            assert row["capacity_ratio"] >= 1.9, row
+    return rows
+
+
+def _capacity(arch_names, dtypes, budget_bytes) -> list:
+    """Resident KV tokens at a fixed HBM page budget, per precision."""
+    widths = [12, 8, 12, 10, 12]
+    print(fmt_row("arch", "kv", "B/page", "pages", "tokens",
+                  widths=widths))
+    rows = []
+    for name in arch_names:
+        cfg = configs.get(name)
+        base_tokens = None
+        for kd in dtypes:
+            pb = dispatch.kv_page_bytes(cfg, page_size=64, kv_dtype=kd)
+            pages = budget_bytes // pb
+            tokens = pages * 64
+            if kd == "bf16":
+                base_tokens = tokens
+            row = dict(arch=name, kv_dtype=kd, page_bytes=pb,
+                       resident_pages=pages, resident_tokens=tokens,
+                       capacity_ratio=tokens / base_tokens)
+            rows.append(row)
+            print(fmt_row(name, kd, pb, pages, tokens, widths=widths))
+            if kd == "int8":
+                assert row["capacity_ratio"] >= 1.9, row
+    return rows
+
+
+def _accuracy(cfg, params, dtypes, steps) -> list:
+    """Teacher-forced decode: max |Δlogits| vs bf16 under the guard."""
+    api = get_model(cfg)
+    num_slots = 2
+    max_seq = pages_for(steps + 1, PAGE_SIZE) * PAGE_SIZE
+    rng = np.random.default_rng(5)
+    toks = rng.integers(1, cfg.vocab_size,
+                        size=(steps, num_slots)).astype(np.int32)
+
+    from repro.models.layers import LayerCtx
+    ctx = LayerCtx(cfg=cfg, plan=make_plan("xla"))
+
+    per_dtype = {}
+    for kd in dtypes:
+        pool = BlockPool(num_slots * pages_for(max_seq, PAGE_SIZE),
+                         PAGE_SIZE)
+        mgr = PagedSlotManager(num_slots, max_seq, pool)
+        for i in range(num_slots):
+            assert mgr.try_assign(i, steps, 1) is not None
+        bt = mgr.block_tables()
+        cache = api.init_cache(
+            PagedLayout(pool.num_pages, PAGE_SIZE, kd))
+        lengths = jnp.zeros((num_slots,), jnp.int32)
+        trace = []
+        for t in range(steps):
+            logits, cache = api.decode_step(
+                ctx, params, jnp.asarray(toks[t]), cache, lengths,
+                block_tables=bt)
+            lengths = lengths + 1
+            trace.append(np.asarray(logits, np.float32))
+        per_dtype[kd] = np.stack(trace)
+
+    scale = float(np.abs(per_dtype["bf16"]).max())
+    widths = [8, 14, 14, 8]
+    print(fmt_row("kv", "max_dlogits", "guard_atol", "pass",
+                  widths=widths))
+    rows = []
+    for kd in dtypes:
+        if kd == "bf16":
+            continue
+        dl = float(np.abs(per_dtype[kd] - per_dtype["bf16"]).max())
+        atol = quant.logits_guard_tol(quant.spec_for(kd)) * max(scale, 1.0)
+        ok = dl <= atol
+        rows.append(dict(kv_dtype=kd, max_dlogits=dl, guard_atol=atol,
+                         logit_scale=scale, within_guard=ok))
+        print(fmt_row(kd, f"{dl:.4f}", f"{atol:.4f}", ok, widths=widths))
+        assert ok, f"{kd} decode logits exceed the accuracy guard"
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== kv_quant: KV bytes / capacity / accuracy per kv_dtype ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    dtypes = _dtypes()
+    archs = ("qwen2-0.5b",) if quick else ("qwen2-0.5b", "llama2-7b")
+    steps = 12 if quick else 24
+    budget = 1 << 30   # 1 GiB of KV pages
+
+    rows_bytes = _bytes_sweep(cfg, params, dtypes)
+    rows_cap = _capacity(archs, dtypes, budget)
+    rows_acc = _accuracy(cfg, params, dtypes, steps)
+
+    result = {
+        "config": dict(arch=cfg.name, page_size=PAGE_SIZE, max_new=MAX_NEW,
+                       dtypes=dtypes, budget_bytes=budget,
+                       teacher_forced_steps=steps,
+                       fp8_supported=quant.fp8_supported()),
+        "bytes": rows_bytes,
+        "capacity": rows_cap,
+        "accuracy": rows_acc,
+    }
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [kv_quant -> {os.path.normpath(path)}]")
+    return result
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    run()
+    print(f"[{time.time()-t0:.1f}s]")

@@ -37,7 +37,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs, hardware
 from repro.core import dispatch
 from repro.core.plan import make_plan
@@ -228,9 +228,8 @@ def run(quick: bool = False) -> dict:
         "identity": identity,
         "crossover": crossover,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [kv_tiers -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [kv_tiers -> {os.path.normpath(path)}]")
     return result
 
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import fmt_row, time_jitted
+from benchmarks.common import fmt_row, time_jitted, write_artifact
 from repro import configs
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, PagedLayout, pages_for
@@ -105,9 +105,8 @@ def run(quick: bool = False) -> dict:
                        page_size=page_size),
         "rows": rows,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [paged_decode -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [paged_decode -> {os.path.normpath(path)}]")
     return result
 
 

@@ -29,7 +29,7 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs
 from repro.models.api import get_model
 from repro.models.kvlayout import pages_for
@@ -118,9 +118,8 @@ def run(quick: bool = False) -> dict:
                        batch_sizes=list(batch_sizes)),
         "rows": rows,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [prefix_sharing -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [prefix_sharing -> {os.path.normpath(path)}]")
     return result
 
 

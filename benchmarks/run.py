@@ -1,6 +1,10 @@
 """Run every benchmark: ``PYTHONPATH=src python -m benchmarks.run``.
 
-``--quick`` trims sweep sizes (used by CI-style smoke checks).
+``--quick`` trims sweep sizes (used by CI-style smoke checks). Quick runs
+write ``BENCH_*.quick.json`` sidecars and an ``artifacts/
+bench_results.quick.json`` aggregate — they never overwrite the committed
+full-mode ``BENCH_*.json`` artifacts, and every artifact carries a
+``"mode"`` field recording which sweep produced it.
 """
 from __future__ import annotations
 
@@ -13,12 +17,22 @@ import time
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="artifacts/bench_results.json")
+    ap.add_argument("--out", default=None,
+                    help="aggregate results path (default: artifacts/"
+                         "bench_results.json, or the .quick.json sidecar "
+                         "under --quick)")
     args = ap.parse_args()
+
+    from benchmarks.common import artifact_path
+
+    # --quick always lands in a .quick.json sidecar, even for an explicit
+    # --out: quick aggregates must never clobber a committed full artifact
+    out = artifact_path(args.out or "artifacts/bench_results.json",
+                        args.quick)
 
     from benchmarks import (attention_softmax, chunk_prefill, decode_engine,
                             dispatch_table, flat_gemm_sweep, group_decode,
-                            kv_tiers, paged_decode, prefill_engine,
+                            kv_quant, kv_tiers, paged_decode, prefill_engine,
                             prefix_sharing, roofline_report, scheduler_sweep)
 
     results = {}
@@ -33,6 +47,7 @@ def main() -> int:
         ("prefix_sharing", prefix_sharing),
         ("group_decode", group_decode),
         ("kv_tiers", kv_tiers),
+        ("kv_quant", kv_quant),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:
@@ -44,10 +59,11 @@ def main() -> int:
             results[name] = {"error": repr(e)}
         print(f"  [{name} done in {time.time()-t0:.1f}s]")
 
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as f:
+    results["mode"] = "quick" if args.quick else "full"
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
         json.dump(results, f, indent=2, default=str)
-    print(f"\nall benchmarks done -> {args.out}")
+    print(f"\nall benchmarks done -> {out}")
     return 0
 
 

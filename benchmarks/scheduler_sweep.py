@@ -24,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_row
+from benchmarks.common import fmt_row, write_artifact
 from repro import configs
 from repro.models.api import get_model
 from repro.models.kvlayout import pages_for
@@ -104,9 +104,8 @@ def run(quick: bool = False) -> dict:
                        n_requests=n_requests, max_new=max_new),
         "rows": rows,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
-    print(f"  [scheduler_sweep -> {os.path.normpath(OUT_PATH)}]")
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [scheduler_sweep -> {os.path.normpath(path)}]")
     return result
 
 

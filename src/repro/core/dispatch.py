@@ -85,6 +85,14 @@ def model_gemm_shapes(cfg: ModelConfig) -> list[GemmShape]:
 # module prices launches identically)
 _PIPELINE_FILL_S = 2e-6
 
+# bytes per stored KV element by ``PagedPlan.kv_dtype`` — every KV-stream
+# roofline term below scales by this, which is how quantized pages shift
+# the fused/group/swap inflections (smaller pages, cheaper reads).
+# Quantized pools also carry one f32 scale per (page, kv head);
+# :func:`kv_page_bytes` accounts those exactly, the stream terms fold
+# them in as negligible (4 bytes vs page_size*head_dim codes).
+KV_DTYPE_BYTES = {"bf16": 2.0, "int8": 1.0, "fp8": 1.0}
+
 
 def _mem_time(m_eff: int, k: int, n: int, dtype_bytes: int,
               spec: hardware.HardwareSpec) -> float:
@@ -318,6 +326,7 @@ def predict_chunk_prefill_time(
     chunk: int = 64,
     page_size: int = 64,
     dtype_bytes: int = 2,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> float:
     """Roofline time for the *KV side* of one whole chunked-prefill
@@ -327,16 +336,23 @@ def predict_chunk_prefill_time(
     ``mode="dense"`` gathers the full ``(table_positions,)`` KV view per
     chunk step per K/V: each step reads the pool pages, writes the dense
     view, and reads it back for attention — 3x the table bytes, every
-    step, regardless of how little of the table is resident.
+    step, regardless of how little of the table is resident. Under a
+    quantized ``kv_dtype`` only the pool read shrinks; the materialized
+    view is dequantized, so its write + readback stay full-precision —
+    which is why quantization pushes the fused inflection *down*.
 
     ``mode="fused"`` reads only the pages covering ``resident + chunk``
-    in place (scalar-prefetched block tables, no materialization), paying
-    a per-page grid-step bubble instead — the Kernel Looping trade.
+    in place (scalar-prefetched block tables, no materialization, dequant
+    in-kernel — all traffic at ``kv_dtype`` width), paying a per-page
+    grid-step bubble instead — the Kernel Looping trade.
     """
+    kvb = KV_DTYPE_BYTES[kv_dtype]
     steps = max(-(-prompt_len // chunk), 1)
     if mode == "dense":
-        # K + V: pool read + dense-view write + attention read, per step
-        bytes_per_step = 2 * 3 * table_positions * kv_dim * dtype_bytes
+        # K + V: pool read (stored width) + dense-view write + attention
+        # read (dequantized width), per step
+        bytes_per_step = (2 * table_positions * kv_dim
+                          * (kvb + 2 * dtype_bytes))
         return steps * (bytes_per_step / spec.hbm_bw
                         + _CHUNK_STEP_OVERHEAD_S)
     if mode == "fused":
@@ -344,7 +360,7 @@ def predict_chunk_prefill_time(
         for i in range(steps):
             resident = min((i + 1) * chunk, prompt_len)
             pages = -(-resident // page_size)
-            bytes_step = 2 * pages * page_size * kv_dim * dtype_bytes
+            bytes_step = 2 * pages * page_size * kv_dim * kvb
             total += (bytes_step / spec.hbm_bw
                       + pages * _GRID_STEP_OVERHEAD_S
                       + _CHUNK_STEP_OVERHEAD_S)
@@ -356,20 +372,23 @@ def find_fused_threshold(
     max_seq: int, kv_dim: int, *,
     chunk: int = 64,
     page_size: int = 64,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> int:
     """Smallest prompt length at which the fused chunk path beats the
     dense gather (table provisioned at ``max_seq``); prompts below it keep
     the one-compile full-table gather. Returns ``max_seq + 1`` when the
-    gather never loses (tiny tables)."""
+    gather never loses (tiny tables). Quantized ``kv_dtype`` lowers the
+    inflection: the fused path's traffic is all stored-width while the
+    dense gather still pays full-precision view bytes."""
     p = chunk
     while p <= max_seq:
         t_dense = predict_chunk_prefill_time(
             "dense", p, max_seq, kv_dim, chunk=chunk, page_size=page_size,
-            spec=spec)
+            kv_dtype=kv_dtype, spec=spec)
         t_fused = predict_chunk_prefill_time(
             "fused", p, max_seq, kv_dim, chunk=chunk, page_size=page_size,
-            spec=spec)
+            kv_dtype=kv_dtype, spec=spec)
         if t_fused < t_dense:
             return p
         p *= 2
@@ -379,6 +398,7 @@ def find_fused_threshold(
 def find_chunk_block(
     max_seq: int, kv_dim: int, *,
     page_size: int = 64,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
     candidates: Iterable[int] = CHUNK_BLOCK_CANDIDATES,
 ) -> int:
@@ -394,7 +414,7 @@ def find_chunk_block(
             continue
         t = predict_chunk_prefill_time(
             "fused", max_seq, max_seq, kv_dim, chunk=c,
-            page_size=page_size, spec=spec)
+            page_size=page_size, kv_dtype=kv_dtype, spec=spec)
         if t < best_t:
             best, best_t = c, t
     if best is None:
@@ -435,11 +455,15 @@ def predict_group_decode_time(
     kv_dim: int, *,
     page_size: int = 64,
     dtype_bytes: int = 2,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> float:
     """Roofline time for the KV side of one decode step over one
     shared-prefix group (the q-side work is identical across modes and
-    cancels out of the decision).
+    cancels out of the decision). ``kv_dtype`` scales the page bytes both
+    modes stream (both read stored-width pages and dequantize
+    in-register), so quantization shrinks the absolute gap but leaves
+    the fixed stage bubble — grouped needs more members/pages to win.
 
     ``mode="off"`` streams every member's full table: each of the
     ``members`` rows re-reads the ``prefix_pages`` it shares plus its own
@@ -451,7 +475,8 @@ def predict_group_decode_time(
     FlashDecoding++ unified-max merge is what makes the split free of a
     per-member rescale pass.
     """
-    page_bytes = 2 * page_size * kv_dim * dtype_bytes       # K + V
+    del dtype_bytes  # superseded by the kv_dtype stored-width scaling
+    page_bytes = 2 * page_size * kv_dim * KV_DTYPE_BYTES[kv_dtype]  # K + V
     if mode == "off":
         pages = members * (prefix_pages + tail_pages)
         return (pages * page_bytes / spec.hbm_bw
@@ -470,6 +495,7 @@ def find_group_threshold(
     max_members: int = 64,
     max_prefix_pages: int = 64,
     tail_pages: int = 1,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> int:
     """Smallest ``members * prefix_pages`` product at which grouped
@@ -484,10 +510,10 @@ def find_group_threshold(
         while pages <= max_prefix_pages:
             t_off = predict_group_decode_time(
                 "off", members, pages, tail_pages, kv_dim,
-                page_size=page_size, spec=spec)
+                page_size=page_size, kv_dtype=kv_dtype, spec=spec)
             t_grp = predict_group_decode_time(
                 "grouped", members, pages, tail_pages, kv_dim,
-                page_size=page_size, spec=spec)
+                page_size=page_size, kv_dtype=kv_dtype, spec=spec)
             if t_grp < t_off:
                 work = members * pages
                 if best is None or work < best:
@@ -509,11 +535,17 @@ _HOST_COPY_LATENCY_S = _CHUNK_STEP_OVERHEAD_S
 
 
 def kv_page_bytes(cfg: ModelConfig, *, page_size: int = 64,
-                  dtype_bytes: int = 2) -> int:
+                  dtype_bytes: int = 2, kv_dtype: str = "bf16") -> int:
     """Bytes one KV page moves across the host link: K + V for every
     layer (the page id is shared across layers, so a demotion/promotion
-    always moves the whole per-layer stack)."""
-    return 2 * cfg.num_layers * page_size * cfg.kv_dim * dtype_bytes
+    always moves the whole per-layer stack). Quantized dtypes store
+    codes at stored width plus one f32 scale per (page, kv head, layer,
+    K/V) — the exact slab a tier demotion carries."""
+    del dtype_bytes  # superseded by the kv_dtype stored-width scaling
+    kvb = KV_DTYPE_BYTES[kv_dtype]
+    scale = 0 if kv_dtype == "bf16" else cfg.num_kv_heads * 4
+    return int(2 * cfg.num_layers
+               * (page_size * cfg.kv_dim * kvb + scale))
 
 
 def predict_swap_time(
@@ -531,6 +563,7 @@ def predict_reprefill_time(
     chunk: int = 64,
     page_size: int = 64,
     dtype_bytes: int = 2,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> float:
     """Roofline time to *recompute* ``positions`` KV positions through
@@ -555,7 +588,8 @@ def predict_reprefill_time(
     for i in range(steps):
         resident = min((i + 1) * chunk, positions)
         pages = -(-resident // page_size)
-        kv += (2 * pages * page_size * cfg.kv_dim * dtype_bytes
+        kv += (2 * pages * page_size * cfg.kv_dim
+               * KV_DTYPE_BYTES[kv_dtype]
                / spec.hbm_bw + pages * _GRID_STEP_OVERHEAD_S)
     return (steps * gemm_step + cfg.num_layers * kv
             + steps * _CHUNK_STEP_OVERHEAD_S)
@@ -566,6 +600,7 @@ def find_swap_threshold(
     chunk: int = 64,
     page_size: int = 64,
     max_pages: int = 64,
+    kv_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> int:
     """Smallest demoted-span page count at which promoting (bulk
@@ -575,13 +610,16 @@ def find_swap_threshold(
     Re-prefill cost grows superlinearly (attention re-streams resident
     KV per chunk step) while the copy is linear, so the first crossover
     is the inflection. Returns ``max_pages + 1`` when the copy never
-    wins inside the sweep (tiny models on a fat link the other way)."""
-    page_bytes = kv_page_bytes(cfg, page_size=page_size)
+    wins inside the sweep (tiny models on a fat link the other way).
+    Quantized ``kv_dtype`` moves *both* sides (smaller slabs over the
+    link, cheaper KV re-streaming) but the link side scales fully while
+    re-prefill keeps its bf16 GEMM term, so swapping wins earlier."""
+    page_bytes = kv_page_bytes(cfg, page_size=page_size, kv_dtype=kv_dtype)
     for pages in range(1, max_pages + 1):
         t_swap = predict_swap_time(pages, page_bytes, spec=spec)
         t_pre = predict_reprefill_time(
             cfg, pages * page_size, chunk=chunk, page_size=page_size,
-            spec=spec)
+            kv_dtype=kv_dtype, spec=spec)
         if t_swap < t_pre:
             return pages
     return max_pages + 1

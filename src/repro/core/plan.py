@@ -45,6 +45,7 @@ BACKENDS = ("xla", "pallas")
 SCHEMES = ("sync", "unified_max")
 GATHER_MODES = ("dense", "fused")  # chunk-path page access discipline
 GROUP_MODES = ("off", "grouped")   # decode-path shared-prefix discipline
+KV_DTYPES = ("bf16", "int8", "fp8")  # paged KV page storage precision
 
 
 class PlanError(ValueError):
@@ -207,6 +208,26 @@ class PagedPlan:
     at the first demoted entry and those positions re-prefill (the
     PCIe-class copy's fixed setup beats recompute only past the
     crossover). Tuned by :func:`repro.core.dispatch.find_swap_threshold`.
+
+    ``kv_dtype`` is the page storage precision (:data:`KV_DTYPES`):
+
+      * ``"bf16"`` — full-precision pages, the legacy bit-identical path.
+      * ``"int8"`` / ``"fp8"`` — pages store quantized codes plus one
+        f32 scale per (page, kv head) in a parallel scale pool
+        (:mod:`repro.serving.kvquant`); the decode / chunk / group
+        kernels dequantize in place, so every KV read moves ~half the
+        bytes and the same pool budget holds ~2x the resident tokens.
+
+    The precision scales every KV-byte term in the dispatch rooflines
+    (:data:`repro.core.dispatch.KV_DTYPE_BYTES`): smaller pages shift
+    ``fused_threshold`` (the gather's O(resident-KV) bytes shrink),
+    ``group_threshold`` (the prefix re-read a group saves is cheaper, so
+    the stage overhead needs more members/pages to pay off) and
+    ``swap_threshold`` (a demoted span moves fewer bytes over the host
+    link, so swapping wins earlier). Quantization changes logits only
+    within a dtype-derived tolerance, enforced by the logits-closeness
+    guard tests — never which tokens a plan may legally produce beyond
+    that tolerance.
     """
 
     backend: str = "xla"
@@ -218,6 +239,7 @@ class PagedPlan:
     decode_group: str = "off"
     group_threshold: int = 2
     swap_threshold: int = 1
+    kv_dtype: str = "bf16"
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "paged.backend")
@@ -228,6 +250,7 @@ class PagedPlan:
         _check(self.decode_group, GROUP_MODES, "paged.decode_group")
         _check_pos(self.group_threshold, "paged.group_threshold")
         _check_pos(self.swap_threshold, "paged.swap_threshold")
+        _check(self.kv_dtype, KV_DTYPES, "paged.kv_dtype")
 
 
 # ---------------------------------------------------------------------------
@@ -328,6 +351,8 @@ class ExecutionPlan:
                 + (f", group>={self.paged.group_threshold}"
                    if self.paged.decode_group == "grouped" else "")
                 + f", swap>={self.paged.swap_threshold}"
+                + (f", kv={self.paged.kv_dtype}"
+                   if self.paged.kv_dtype != "bf16" else "")
                 + "]")
 
     # -- serialization -------------------------------------------------------
@@ -468,6 +493,7 @@ def make_plan(
     decode_group: str = "off",
     group_threshold: int = 2,
     swap_threshold: int = 1,
+    kv_dtype: str = "bf16",
 ) -> ExecutionPlan:
     """Build an untuned plan with uniform knobs — the hand-rolled
     counterpart of :func:`tune` for hosts that only need to pin backends
@@ -489,7 +515,8 @@ def make_plan(
                         chunk_block=chunk_block,
                         decode_group=decode_group,
                         group_threshold=group_threshold,
-                        swap_threshold=swap_threshold),
+                        swap_threshold=swap_threshold,
+                        kv_dtype=kv_dtype),
     )
 
 
@@ -522,6 +549,7 @@ def tune(
     backend: str = "xla",
     decode_seq: int = 32768,
     page_size: int = 64,
+    kv_dtype: str = "bf16",
 ) -> ExecutionPlan:
     """Profile every op decision offline and emit a provenanced plan.
 
@@ -532,9 +560,12 @@ def tune(
     is the representative decode KV length the ``block_k`` sweep
     optimizes for; ``page_size`` anchors the paged chunked-prefill
     decisions (``chunk_block`` and the dense-gather vs fused-kernel
-    ``fused_threshold`` inflection).
+    ``fused_threshold`` inflection). ``kv_dtype`` selects the page
+    precision and rescales every KV-byte roofline term the paged
+    thresholds come from (see :class:`PagedPlan`).
     """
     _check(backend, BACKENDS, "backend")
+    _check(kv_dtype, KV_DTYPES, "kv_dtype")
     gemm_measure, measure_name = _resolve_measure(measure)
 
     entries: Dict[Tuple[int, int], dispatch.DispatchEntry] = {}
@@ -553,14 +584,16 @@ def tune(
     threshold = dispatch.find_chunk_threshold(cfg.num_heads, spec=spec)
     rep_seq = min(decode_seq, cfg.max_seq_len)
     chunk_block = dispatch.find_chunk_block(
-        rep_seq, cfg.kv_dim, page_size=page_size, spec=spec)
+        rep_seq, cfg.kv_dim, page_size=page_size, spec=spec,
+        kv_dtype=kv_dtype)
     fused_threshold = dispatch.find_fused_threshold(
         rep_seq, cfg.kv_dim, chunk=chunk_block, page_size=page_size,
-        spec=spec)
+        spec=spec, kv_dtype=kv_dtype)
     group_threshold = dispatch.find_group_threshold(
-        cfg.kv_dim, page_size=page_size, spec=spec)
+        cfg.kv_dim, page_size=page_size, spec=spec, kv_dtype=kv_dtype)
     swap_threshold = dispatch.find_swap_threshold(
-        cfg, chunk=chunk_block, page_size=page_size, spec=spec)
+        cfg, chunk=chunk_block, page_size=page_size, spec=spec,
+        kv_dtype=kv_dtype)
 
     plan = ExecutionPlan(
         matmul=MatmulPlan(backend=backend, default_m1=default.m1,
@@ -579,7 +612,8 @@ def tune(
                         chunk_block=chunk_block,
                         decode_group="grouped",
                         group_threshold=group_threshold,
-                        swap_threshold=swap_threshold),
+                        swap_threshold=swap_threshold,
+                        kv_dtype=kv_dtype),
         provenance=PlanProvenance(
             backend=backend,
             hardware=hardware_hash(spec), hardware_name=spec.name,

@@ -60,18 +60,19 @@ def _paged_chunk_kernel(
     q_ref,        # (1, 1, C*G, D)
     k_ref,        # (1, PS, 1, D) — physical page bt[b, i]
     v_ref,        # (1, PS, 1, D)
-    out_ref,      # (1, 1, C*G, D)
-    stat_ref,     # (1, 1) f32 : max(s - phi) over valid positions
-    acc_ref,      # (C*G, D) f32
-    den_ref,      # (C*G, 128) f32
-    msc_ref,      # (1, 1) f32
-    *,
+    *rest,        # [ks_ref, vs_ref,] out_ref, stat_ref, acc, den, msc
     phi: float,
     scale: float,
     page_size: int,
     chunk: int,
     groups: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]   # (1, 1) f32 step of page bt[b,i]
+        rest = rest[2:]
+    out_ref, stat_ref, acc_ref, den_ref, msc_ref = rest
+
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -90,6 +91,9 @@ def _paged_chunk_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (CG, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -115,14 +119,18 @@ def _paged_chunk_kernel(
 def _paged_chunk_kernel_sync(
     bt_ref, len_ref,
     q_ref, k_ref, v_ref,
-    out_ref,
-    acc_ref, den_ref, m_ref,
-    *,
+    *rest,
     scale: float,
     page_size: int,
     chunk: int,
     groups: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    out_ref, acc_ref, den_ref, m_ref = rest
+
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -140,6 +148,9 @@ def _paged_chunk_kernel_sync(
         q = q_ref[0, 0].astype(jnp.float32) * scale
         k = k_ref[0, :, 0].astype(jnp.float32)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -179,15 +190,20 @@ def _ungroup_out(out: jax.Array, c: int, g: int):
                .reshape(b, c, hk * g, d))
 
 
-def _chunk_grid_spec(b, hk, nb, cg, d, ps, unified: bool):
+def _chunk_grid_spec(b, hk, nb, cg, d, ps, unified: bool,
+                     quantized: bool = False):
+    page_spec = pl.BlockSpec(
+        (1, ps, 1, d), lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0))
     common_in = [
         pl.BlockSpec((1, 1, cg, d),
                      lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
-        pl.BlockSpec((1, ps, 1, d),
-                     lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
-        pl.BlockSpec((1, ps, 1, d),
-                     lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
+        page_spec,
+        page_spec,
     ]
+    if quantized:
+        step_spec = pl.BlockSpec(
+            (1, 1), lambda b_, h_, i_, bt, ln: (bt[b_, i_], h_))
+        common_in += [step_spec, step_spec]
     out_spec = pl.BlockSpec((1, 1, cg, d),
                             lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0))
     if unified:
@@ -225,6 +241,8 @@ def paged_chunk_attention_unified_max(
     *,
     phi: float = 0.0,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,   # (NP, HK) f32 — quantized pools
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """T1 fused chunk-prefill attention over the block pool.
@@ -233,22 +251,30 @@ def paged_chunk_attention_unified_max(
     ``stat: (B, HK)`` = max centered logit over valid positions, for the
     overflow-recompute fallback. The chunk's own KV must already be
     scattered into the pool (same contract as
-    :func:`repro.kernels.ref.attention_chunk_ref`).
+    :func:`repro.kernels.ref.attention_chunk_ref`). With ``k_scale``/
+    ``v_scale`` the pools hold quantized codes, dequantized per page in
+    VMEM right after the DMA.
     """
     b, c, hq, d = q.shape
     num_pages, ps, hk, _ = k_pool.shape
     nb = block_tables.shape[1]
     scale = scale if scale is not None else d ** -0.5
+    quantized = k_scale is not None
 
     # unassigned table entries hold the OOB sentinel num_pages — clamp so
     # the page DMA stays in bounds (contents masked off causally / dropped
     # as garbage rows by the caller)
     block_tables = jnp.minimum(block_tables, num_pages - 1)
     qg, g = _regroup_q(q, hk)
-    grid_spec = _chunk_grid_spec(b, hk, nb, c * g, d, ps, unified=True)
+    grid_spec = _chunk_grid_spec(b, hk, nb, c * g, d, ps, unified=True,
+                                 quantized=quantized)
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     kernel = functools.partial(
         _paged_chunk_kernel, phi=phi, scale=scale, page_size=ps,
-        chunk=c, groups=g)
+        chunk=c, groups=g, quantized=quantized)
     out, stat = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -261,7 +287,7 @@ def paged_chunk_attention_unified_max(
         ),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pool, v_pool)
+      *operands)
     return _ungroup_out(out, c, g), stat
 
 
@@ -273,6 +299,8 @@ def paged_chunk_attention_sync(
     lengths: jax.Array,
     *,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Online-max (synchronized) fused chunk attention — the overflow
@@ -281,13 +309,19 @@ def paged_chunk_attention_sync(
     num_pages, ps, hk, _ = k_pool.shape
     nb = block_tables.shape[1]
     scale = scale if scale is not None else d ** -0.5
+    quantized = k_scale is not None
 
     block_tables = jnp.minimum(block_tables, num_pages - 1)
     qg, g = _regroup_q(q, hk)
-    grid_spec = _chunk_grid_spec(b, hk, nb, c * g, d, ps, unified=False)
+    grid_spec = _chunk_grid_spec(b, hk, nb, c * g, d, ps, unified=False,
+                                 quantized=quantized)
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     kernel = functools.partial(
         _paged_chunk_kernel_sync, scale=scale, page_size=ps,
-        chunk=c, groups=g)
+        chunk=c, groups=g, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -297,5 +331,5 @@ def paged_chunk_attention_sync(
         ),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pool, v_pool)
+      *operands)
     return _ungroup_out(out, c, g)

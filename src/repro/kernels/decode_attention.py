@@ -229,16 +229,17 @@ def _paged_decode_kernel(
     q_ref,        # (1, 1, G, D)
     k_ref,        # (1, PS, 1, D) — physical page bt[b, i]
     v_ref,        # (1, PS, 1, D)
-    out_ref,      # (1, 1, G, D)
-    stat_ref,     # (1, 1) f32
-    acc_ref,      # (G, D) f32
-    den_ref,      # (G, 128) f32
-    msc_ref,      # (1, 1) f32
-    *,
+    *rest,        # [ks_ref, vs_ref,] out_ref, stat_ref, acc, den, msc
     phi: float,
     scale: float,
     page_size: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]   # (1, 1) f32 step of page bt[b,i]
+        rest = rest[2:]
+    out_ref, stat_ref, acc_ref, den_ref, msc_ref = rest
+
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -256,6 +257,11 @@ def _paged_decode_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            # codes -> values in VMEM: one fused multiply per tile; the
+            # full-precision page never exists in HBM
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -289,35 +295,47 @@ def paged_decode_attention_unified_max(
     *,
     phi: float = 0.0,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,   # (NP, HK) f32 — quantized pools
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Async-softmax decode attention over a block-paged KV pool.
 
     Returns ``(out, stat)`` exactly like :func:`decode_attention_unified_max`;
     the block table is a scalar-prefetch operand so each grid step DMAs one
-    physical page.
+    physical page. With ``k_scale``/``v_scale`` the pools hold quantized
+    codes; each page is dequantized in VMEM right after its DMA.
     """
     b, hq, d = q.shape
     num_pages, ps, hk, _ = k_pool.shape
     nb = block_tables.shape[1]
     g = hq // hk
     scale = scale if scale is not None else d ** -0.5
+    quantized = k_scale is not None
 
     # unassigned table entries hold the OOB sentinel num_pages — clamp so
     # the page DMA stays in bounds (contents masked off by `lengths`)
     block_tables = jnp.minimum(block_tables, num_pages - 1)
     qg = q.reshape(b, hk, g, d)
+    page_spec = pl.BlockSpec(
+        (1, ps, 1, d), lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0))
+    step_spec = pl.BlockSpec(
+        (1, 1), lambda b_, h_, i_, bt, ln: (bt[b_, i_], h_))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        in_specs += [step_spec, step_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hk, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, g, d),
                          lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
@@ -330,7 +348,8 @@ def paged_decode_attention_unified_max(
         ],
     )
     kernel = functools.partial(
-        _paged_decode_kernel, phi=phi, scale=scale, page_size=ps)
+        _paged_decode_kernel, phi=phi, scale=scale, page_size=ps,
+        quantized=quantized)
     out, stat = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -343,19 +362,23 @@ def paged_decode_attention_unified_max(
         ),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pool, v_pool)
+      *operands)
     return out.reshape(b, hq, d), stat
 
 
 def _paged_decode_kernel_sync(
     bt_ref, len_ref,
     q_ref, k_ref, v_ref,
-    out_ref,
-    acc_ref, den_ref, m_ref,
-    *,
+    *rest,
     scale: float,
     page_size: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    out_ref, acc_ref, den_ref, m_ref = rest
+
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -373,6 +396,9 @@ def _paged_decode_kernel_sync(
         q = q_ref[0, 0].astype(jnp.float32) * scale
         k = k_ref[0, :, 0].astype(jnp.float32)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
@@ -401,6 +427,8 @@ def paged_decode_attention_sync(
     lengths: jax.Array,
     *,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Online-max (synchronized) paged decode attention — fallback path."""
@@ -409,20 +437,29 @@ def paged_decode_attention_sync(
     nb = block_tables.shape[1]
     g = hq // hk
     scale = scale if scale is not None else d ** -0.5
+    quantized = k_scale is not None
 
     block_tables = jnp.minimum(block_tables, num_pages - 1)
     qg = q.reshape(b, hk, g, d)
+    page_spec = pl.BlockSpec(
+        (1, ps, 1, d), lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0))
+    step_spec = pl.BlockSpec(
+        (1, 1), lambda b_, h_, i_, bt, ln: (bt[b_, i_], h_))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pool, v_pool]
+    if quantized:
+        in_specs += [step_spec, step_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hk, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln: (bt[b_, i_], 0, h_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda b_, h_, i_, bt, ln: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -432,7 +469,8 @@ def paged_decode_attention_sync(
         ],
     )
     kernel = functools.partial(
-        _paged_decode_kernel_sync, scale=scale, page_size=ps)
+        _paged_decode_kernel_sync, scale=scale, page_size=ps,
+        quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -442,7 +480,7 @@ def paged_decode_attention_sync(
         ),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pool, v_pool)
+      *operands)
     return out.reshape(b, hq, d)
 
 

@@ -64,18 +64,18 @@ def _group_prefix_kernel(
     q_ref,        # (1, 1, M*G, D) — all members' grouped query heads
     k_ref,        # (1, PS, 1, D) — physical page gt[g, i]
     v_ref,        # (1, PS, 1, D)
-    num_ref,      # (1, 1, M*G, D) f32 — raw unified-max numerator
-    den_ref,      # (1, 1, M*G, 128) f32
-    stat_ref,     # (1, 1) f32 : max(s - phi) over valid positions
-    acc_ref,      # (M*G, D) f32
-    dacc_ref,     # (M*G, 128) f32
-    msc_ref,      # (1, 1) f32
-    *,
+    *rest,        # [ks_ref, vs_ref,] num, den, stat, acc, dacc, msc
     phi: float,
     scale: float,
     page_size: int,
     heads_per_kv: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]   # (1, 1) f32 step of page gt[g,i]
+        rest = rest[2:]
+    num_ref, den_ref, stat_ref, acc_ref, dacc_ref, msc_ref = rest
+
     g_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -95,6 +95,9 @@ def _group_prefix_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (MG, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -132,16 +135,17 @@ def _tail_merge_kernel(
     den_in_ref,   # (1, 1, G, 128) f32
     k_ref,        # (1, PS, 1, D)
     v_ref,        # (1, PS, 1, D)
-    out_ref,      # (1, 1, G, D)
-    stat_ref,     # (1, 1) f32 — tail-only stat (wrapper maxes with stage 1)
-    acc_ref,      # (G, D) f32
-    den_ref,      # (G, 128) f32
-    msc_ref,      # (1, 1) f32
-    *,
+    *rest,        # [ks_ref, vs_ref,] out, stat, acc, den, msc
     phi: float,
     scale: float,
     page_size: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    out_ref, stat_ref, acc_ref, den_ref, msc_ref = rest
+
     b_idx = pl.program_id(0)
     i_idx = pl.program_id(2)
     n_i = pl.num_programs(2)
@@ -165,6 +169,9 @@ def _tail_merge_kernel(
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (PS, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
 
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -199,6 +206,8 @@ def grouped_paged_decode_attention_unified_max(
     *,
     phi: float = 0.0,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,   # (NP, HK) f32 — quantized pools
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Two-stage grouped decode attention over a block-paged KV pool.
@@ -207,7 +216,8 @@ def grouped_paged_decode_attention_unified_max(
     :func:`~repro.kernels.decode_attention.paged_decode_attention_unified_max`
     — ``stat`` is the max over prefix *and* tail contributions, so the
     wrapper-level overflow fallback fires on the same condition as the
-    ungrouped kernel.
+    ungrouped kernel. With ``k_scale``/``v_scale`` both stages dequantize
+    each page in VMEM right after its DMA.
     """
     b, hq, d = q.shape
     num_pages, ps, hk, _ = k_pool.shape
@@ -217,6 +227,10 @@ def grouped_paged_decode_attention_unified_max(
     m = groups.member_rows.shape[1]
     mg = m * g
     scale = scale if scale is not None else d ** -0.5
+    quantized = k_scale is not None
+    if quantized:
+        k_scale = k_scale.astype(jnp.float32)
+        v_scale = v_scale.astype(jnp.float32)
 
     qg = q.reshape(b, hk, g, d)
 
@@ -228,17 +242,25 @@ def grouped_paged_decode_attention_unified_max(
              .transpose(0, 2, 1, 3, 4)
              .reshape(ng, hk, mg, d))
 
+    s1_page = pl.BlockSpec(
+        (1, ps, 1, d), lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], 0, h_, 0))
+    s1_in = [
+        pl.BlockSpec((1, 1, mg, d),
+                     lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
+        s1_page,
+        s1_page,
+    ]
+    s1_operands = [qs, k_pool, v_pool]
+    if quantized:
+        s1_step = pl.BlockSpec(
+            (1, 1), lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], h_))
+        s1_in += [s1_step, s1_step]
+        s1_operands += [k_scale, v_scale]
+
     s1_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(ng, hk, lp),
-        in_specs=[
-            pl.BlockSpec((1, 1, mg, d),
-                         lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], 0, h_, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda g_, h_, i_, gt, pn, nm: (gt[g_, i_], 0, h_, 0)),
-        ],
+        in_specs=s1_in,
         out_specs=[
             pl.BlockSpec((1, 1, mg, d),
                          lambda g_, h_, i_, gt, pn, nm: (g_, h_, 0, 0)),
@@ -254,7 +276,7 @@ def grouped_paged_decode_attention_unified_max(
     )
     s1_kernel = functools.partial(
         _group_prefix_kernel, phi=phi, scale=scale, page_size=ps,
-        heads_per_kv=g)
+        heads_per_kv=g, quantized=quantized)
     num, den, stat1 = pl.pallas_call(
         s1_kernel,
         grid_spec=s1_spec,
@@ -268,7 +290,7 @@ def grouped_paged_decode_attention_unified_max(
         ),
         interpret=interpret,
     )(gtables.astype(jnp.int32), groups.g_prefix_len.astype(jnp.int32),
-      groups.num_members.astype(jnp.int32), qs, k_pool, v_pool)
+      groups.num_members.astype(jnp.int32), *s1_operands)
 
     # un-scatter each row's own partial; solo rows carry zeros (= empty)
     gid_c = jnp.clip(groups.gid, 0, ng - 1)
@@ -283,21 +305,28 @@ def grouped_paged_decode_attention_unified_max(
 
     # ---- stage 2: private tail, accumulating on top of the carry
     block_tables = jnp.minimum(block_tables, num_pages - 1)
+    s2_page = pl.BlockSpec(
+        (1, ps, 1, d), lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], 0, h_, 0))
+    s2_in = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, g, d),
+                     lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, g, 128),
+                     lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
+        s2_page,
+        s2_page,
+    ]
+    s2_operands = [qg, num_b, den_b, k_pool, v_pool]
+    if quantized:
+        s2_step = pl.BlockSpec(
+            (1, 1), lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], h_))
+        s2_in += [s2_step, s2_step]
+        s2_operands += [k_scale, v_scale]
     s2_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hk, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, g, 128),
-                         lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], 0, h_, 0)),
-            pl.BlockSpec((1, ps, 1, d),
-                         lambda b_, h_, i_, bt, ln, pn: (bt[b_, i_], 0, h_, 0)),
-        ],
+        in_specs=s2_in,
         out_specs=[
             pl.BlockSpec((1, 1, g, d),
                          lambda b_, h_, i_, bt, ln, pn: (b_, h_, 0, 0)),
@@ -310,7 +339,8 @@ def grouped_paged_decode_attention_unified_max(
         ],
     )
     s2_kernel = functools.partial(
-        _tail_merge_kernel, phi=phi, scale=scale, page_size=ps)
+        _tail_merge_kernel, phi=phi, scale=scale, page_size=ps,
+        quantized=quantized)
     out, stat2 = pl.pallas_call(
         s2_kernel,
         grid_spec=s2_spec,
@@ -323,6 +353,6 @@ def grouped_paged_decode_attention_unified_max(
         ),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      groups.prefix_len.astype(jnp.int32), qg, num_b, den_b, k_pool, v_pool)
+      groups.prefix_len.astype(jnp.int32), *s2_operands)
 
     return out.reshape(b, hq, d), jnp.maximum(stat_b, stat2)

@@ -242,6 +242,8 @@ def attention_decode_paged(
     plan: Optional[ExecutionPlan] = None,
     shard=None,
     groups=None,
+    k_scale: jax.Array | None = None,   # (NP, HK) f32 — quantized pools
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Decode attention over a block-paged KV cache (T1 + overflow fallback).
 
@@ -263,10 +265,19 @@ def attention_decode_paged(
     construction. On the Pallas backend the two-stage group kernel runs
     for the unified-max scheme (the sync scheme and the overflow
     recompute fall back to the ungrouped sync kernel).
+
+    ``k_scale``/``v_scale`` mark the pools as quantized codes (the
+    kv_dtype subsystem, :mod:`repro.serving.kvquant`). The XLA backend
+    takes a pool-level f32 dequant view up front — gather commutes with
+    the per-(page, head) scale multiply, so every ref below sees exactly
+    the values the Pallas kernels reconstruct per page in VMEM.
     """
     pp = (plan or DEFAULT_PLAN).paged
     unified = _unified(phi_cfg, pp.scheme)
     if pp.backend != "pallas":
+        if k_scale is not None:
+            k_pool = ref.dequantize_pool_ref(k_pool, k_scale)
+            v_pool = ref.dequantize_pool_ref(v_pool, v_scale)
         if not unified:
             if groups is not None:
                 return ref.attention_decode_grouped_ref(
@@ -300,17 +311,19 @@ def attention_decode_paged(
     if not unified:
         # grouped sync has no kernel — the ungrouped sync kernel is exact
         return paged_decode_attention_sync(
-            q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
+            q, k_pool, v_pool, block_tables, lengths,
+            k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET
         )
     if groups is not None:
         out, stat = grouped_paged_decode_attention_unified_max(
             q, k_pool, v_pool, block_tables, lengths, groups,
-            phi=phi_cfg.phi, interpret=_INTERPRET,
+            phi=phi_cfg.phi, k_scale=k_scale, v_scale=v_scale,
+            interpret=_INTERPRET,
         )
     else:
         out, stat = paged_decode_attention_unified_max(
             q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
-            interpret=_INTERPRET,
+            k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET,
         )
     if not pp.fallback:
         return out
@@ -318,7 +331,8 @@ def attention_decode_paged(
 
     def recompute(_):
         return paged_decode_attention_sync(
-            q, k_pool, v_pool, block_tables, lengths, interpret=_INTERPRET
+            q, k_pool, v_pool, block_tables, lengths,
+            k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET
         )
 
     return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
@@ -364,6 +378,8 @@ def attention_chunk_paged(
     *,
     phi_cfg: SoftmaxPhiConfig = SoftmaxPhiConfig(),
     plan: Optional[ExecutionPlan] = None,
+    k_scale: jax.Array | None = None,   # (NP, HK) f32 — quantized pools
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Paged twin of :func:`attention_chunk`, governed by the plan's
     ``paged`` entry (scheme, fallback, and ``gather_chunk`` mode).
@@ -373,6 +389,9 @@ def attention_chunk_paged(
     place through scalar-prefetched block tables — no dense ``(B, NB*PS)``
     view is ever materialized — with the T1 unified-max scheme and the
     sync-kernel overflow recompute, exactly the decode kernel's contract.
+    Quantized pools (``k_scale``/``v_scale``) dequantize per page in VMEM
+    on this path; the gather path below takes the pool-level dequant view
+    first (elementwise-identical, see :func:`attention_decode_paged`).
 
     Every other combination gathers the *caller-supplied* table into a
     dense view and reuses :func:`attention_chunk`: on the XLA backend the
@@ -388,10 +407,10 @@ def attention_chunk_paged(
         if not unified:
             return paged_chunk_attention_sync(
                 q, k_pool, v_pool, block_tables, lengths,
-                interpret=_INTERPRET)
+                k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET)
         out, stat = paged_chunk_attention_unified_max(
             q, k_pool, v_pool, block_tables, lengths, phi=phi_cfg.phi,
-            interpret=_INTERPRET)
+            k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET)
         if not pp.fallback:
             return out
         overflow = jnp.any(stat > phi_cfg.band[1])
@@ -399,10 +418,13 @@ def attention_chunk_paged(
         def recompute(_):
             return paged_chunk_attention_sync(
                 q, k_pool, v_pool, block_tables, lengths,
-                interpret=_INTERPRET)
+                k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET)
 
         return jax.lax.cond(overflow, recompute, lambda _: out, operand=None)
 
+    if k_scale is not None:
+        k_pool = ref.dequantize_pool_ref(k_pool, k_scale)
+        v_pool = ref.dequantize_pool_ref(v_pool, v_scale)
     k = ref.gather_paged_kv(k_pool, block_tables)
     v = ref.gather_paged_kv(v_pool, block_tables)
     return attention_chunk(q, k, v, lengths, phi_cfg=phi_cfg, plan=plan)

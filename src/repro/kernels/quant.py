@@ -1,0 +1,179 @@
+"""Per-page symmetric KV quantization primitives.
+
+Pages quantize at write time with one scale ("step") per (page, kv head):
+``step = amax / qmax`` over the page's tokens and head dim, codes are the
+scaled values rounded into the code dtype, and dequantization is the
+elementwise ``codes.astype(f32) * step`` — cheap enough to run inside the
+decode / chunk / group kernels so the full-precision slab never exists in
+HBM (see :mod:`repro.serving.kvquant` for the write-side scatter algebra).
+
+Three precisions, selected by ``PagedPlan.kv_dtype``:
+
+  * ``bf16`` — passthrough. No codes, no steps; the legacy pools are the
+    storage and every kernel path is bit-identical to the unquantized tree.
+  * ``int8`` — 8-bit symmetric integers, qmax 127, round-to-nearest-even.
+  * ``fp8``  — ``float8_e4m3fn`` (ml_dtypes-backed where this jax exposes
+    it), qmax 448 = the format's largest finite; the cast itself rounds.
+
+All step math is f32; steps live in a parallel (num_pages, kv_heads) f32
+pool carried as extra cache leaves (``k_scale`` / ``v_scale``). A step of
+exactly 0.0 means "page holds no content yet" — codes are zero and decode
+to zeros regardless, and the write path resets the step whenever a write
+covers the page's position 0 (so reused pages can never inherit a stale
+step from a previous tenant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+# kv_dtype knob values (mirrored by plan.KV_DTYPES for knob validation)
+KV_DTYPES = ("bf16", "int8", "fp8")
+
+
+def fp8_supported() -> bool:
+    """True when this jax/ml_dtypes stack can store float8_e4m3fn arrays."""
+    return _fp8_probe()
+
+
+@functools.lru_cache(maxsize=1)
+def _fp8_probe() -> bool:
+    try:
+        z = jnp.zeros((2,), jnp.float8_e4m3fn)
+        _ = (z.astype(jnp.float32) + 1.0).astype(jnp.float8_e4m3fn)
+        return True
+    except Exception:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one kv_dtype's code format."""
+    name: str
+    qmax: float          # largest representable |code|
+    is_int: bool         # integer codes (explicit round+clip) vs fp8 cast
+
+    @property
+    def code_dtype(self):
+        return jnp.int8 if self.is_int else jnp.float8_e4m3fn
+
+
+INT8 = QuantSpec(name="int8", qmax=127.0, is_int=True)
+FP8 = QuantSpec(name="fp8", qmax=448.0, is_int=False)
+
+_BY_NAME = {"int8": INT8, "fp8": FP8}
+
+
+def spec_for(name: str) -> QuantSpec | None:
+    """QuantSpec for a kv_dtype name; None for the bf16 passthrough."""
+    if name == "bf16":
+        return None
+    if name not in _BY_NAME:
+        raise ValueError(f"unknown kv_dtype {name!r}; expected {KV_DTYPES}")
+    if name == "fp8" and not fp8_supported():
+        raise ValueError("kv_dtype 'fp8' needs float8_e4m3fn support in "
+                         "this jax/ml_dtypes install")
+    return _BY_NAME[name]
+
+
+def spec_for_dtype(dtype) -> QuantSpec | None:
+    """QuantSpec from a stored pool's dtype (None = full-precision pool).
+
+    This lets every consumer below the Engine derive the precision from
+    the cache leaves themselves instead of threading a knob.
+    """
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.int8):
+        return INT8
+    if fp8_supported() and d == jnp.dtype(jnp.float8_e4m3fn):
+        return FP8
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Elementwise primitives. Convention: ``x`` is (..., D) full-precision and
+# ``step`` broadcasts against ``x.shape[:-1]`` (one step per head, shared
+# across the head dim).
+# ---------------------------------------------------------------------------
+
+
+def compute_step(x: jnp.ndarray, spec: QuantSpec, axes) -> jnp.ndarray:
+    """amax/qmax over ``axes`` (f32). Zero input -> step exactly 0.0."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes)
+    return amax / spec.qmax
+
+
+def encode(x: jnp.ndarray, step: jnp.ndarray, spec: QuantSpec):
+    """Quantize ``x`` under ``step`` into the code dtype.
+
+    ``step == 0`` rows (empty pages) encode through a divisor of 1.0 —
+    the content is all zeros there so the codes come out zero too.
+    """
+    x = x.astype(jnp.float32)
+    safe = jnp.where(step > 0.0, step, 1.0)[..., None]
+    y = jnp.clip(x / safe, -spec.qmax, spec.qmax)
+    if spec.is_int:
+        return jnp.round(y).astype(jnp.int8)
+    return y.astype(jnp.float8_e4m3fn)
+
+
+def decode(codes: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize codes back to f32: ``codes * step`` elementwise.
+
+    This is *the* dequant expression — the Pallas kernels inline exactly
+    this so oracle (gathered dequant) and kernel (in-register dequant)
+    paths see bit-identical operands.
+    """
+    return codes.astype(jnp.float32) * step[..., None].astype(jnp.float32)
+
+
+def rescale_codes(codes: jnp.ndarray, old_step: jnp.ndarray,
+                  new_step: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Re-express codes quantized under ``old_step`` in ``new_step`` units.
+
+    Used when a later write raises a page's amax: existing codes shrink by
+    ``old/new``. ``ratio == 1`` is exact (codes round-trip through f32
+    unchanged for both int8 and fp8), so untouched pages are bitwise
+    stable. ``old_step == 0`` (fresh or laundered page) forces ratio 0,
+    zeroing whatever stale codes a reused page slab may hold.
+    """
+    ratio = jnp.where(new_step > 0.0,
+                      old_step / jnp.where(new_step > 0.0, new_step, 1.0),
+                      jnp.where(old_step > 0.0, 1.0, 0.0))
+    y = codes.astype(jnp.float32) * ratio[..., None]
+    if spec.is_int:
+        return jnp.round(jnp.clip(y, -spec.qmax, spec.qmax)).astype(jnp.int8)
+    return jnp.clip(y, -spec.qmax, spec.qmax).astype(jnp.float8_e4m3fn)
+
+
+def logits_guard_tol(spec: QuantSpec) -> float:
+    """Relative logit tolerance for the kv_dtype accuracy guard.
+
+    The plan may change KV bytes and kernels, never correctness beyond a
+    dtype-derived tolerance: quantization perturbs each stored K/V element
+    by at most its code format's half-step relative error (``0.5/qmax``
+    for int8 codes, half-ulp ``2^-4`` for fp8 e4m3 normals), and softmax
+    attention is 1-Lipschitz in V at fixed weights, so decode logits move
+    by a small multiple of that relative error at logit scale. The 64x
+    headroom covers the K-side perturbation passing through the softmax.
+    Use as ``atol = logits_guard_tol(spec) * max(|logits|_max, 1.0)``.
+    """
+    rel = 0.5 / spec.qmax if spec.is_int else 2.0 ** -4
+    return 64.0 * rel
+
+
+def roundtrip_bound(x: jnp.ndarray, step: jnp.ndarray,
+                    spec: QuantSpec) -> jnp.ndarray:
+    """Analytic elementwise bound on ``|decode(encode(x)) - x|``.
+
+    int8: half a quantization step. fp8 e4m3fn: half-ulp relative error
+    for normals (2^-4 of the magnitude) with an absolute floor of half
+    the subnormal quantum (2^-10) in scaled units.
+    """
+    step_b = step[..., None].astype(jnp.float32)
+    if spec.is_int:
+        return 0.5 * step_b * jnp.ones_like(x, jnp.float32)
+    return jnp.maximum(jnp.abs(x.astype(jnp.float32)) * 2.0 ** -4,
+                       step_b * 2.0 ** -10)

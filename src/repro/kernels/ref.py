@@ -182,6 +182,19 @@ def attention_decode_unified_max_ref(
 # ---------------------------------------------------------------------------
 
 
+def dequantize_pool_ref(pool: jax.Array, scales: jax.Array) -> jax.Array:
+    """f32 full-precision view of a quantized page pool (oracle path).
+
+    pool: (NP, PS, HK, D) int8/fp8 codes; scales: (NP, HK) f32 steps.
+    The expression is exactly the in-kernel dequant (``codes * step`` in
+    f32, elementwise per (page, kv head)), so gathering before or after
+    dequantization yields identical values — every XLA oracle below can
+    therefore take the dequantized pool through its existing math and
+    stay bitwise consistent across gather/grouped/fused disciplines.
+    """
+    return pool.astype(jnp.float32) * scales[:, None, :, None]
+
+
 def gather_paged_kv(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     """Materialize the dense per-sequence view of a paged KV pool.
 
@@ -418,6 +431,8 @@ def attention_chunk_paged_fused_ref(
     *,
     phi: float | None = None,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,  # (NP, HK) quantized-pool steps
+    v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Page-blocked oracle for the fused chunk kernel
     (:mod:`repro.kernels.chunk_attention`): accumulates one order-
@@ -425,7 +440,9 @@ def attention_chunk_paged_fused_ref(
     grid walk — the T1 unified-max scheme when ``phi`` is set, the
     two-pass safe scheme (global max first, then the page walk) when
     ``phi`` is None. Returns ``(out, stat)``; ``stat: (B, HK)`` is the max
-    centered logit (zeros for the safe scheme).
+    centered logit (zeros for the safe scheme). With ``k_scale`` /
+    ``v_scale`` the pools hold quantized codes and each page dequantizes
+    inside the walk — the oracle twin of the kernel's in-VMEM dequant.
     """
     b, c, hq, d = q.shape
     num_pages, ps, hk, _ = k_pool.shape
@@ -434,6 +451,13 @@ def attention_chunk_paged_fused_ref(
     scale = scale if scale is not None else d ** -0.5
     bt = jnp.minimum(block_tables, num_pages - 1)
     qg = q.reshape(b, c, hk, groups, d).astype(jnp.float32) * scale
+
+    def page(pool, steps, i):
+        pg = jnp.take(pool, bt[:, i], axis=0).astype(jnp.float32)
+        if steps is None:
+            return pg                                       # (B, PS, HK, D)
+        st = jnp.take(steps, bt[:, i], axis=0)              # (B, HK)
+        return pg * st[:, None, :, None]
 
     qpos = lengths[:, None] + jnp.arange(c)[None, :]        # (B, C)
     num = jnp.zeros((b, c, hk, groups, d), jnp.float32)
@@ -444,9 +468,8 @@ def attention_chunk_paged_fused_ref(
         # safe scheme: one extra pass for the global row max
         m = jnp.full((b, hk, groups, c), -jnp.inf, jnp.float32)
         for i in range(nb):
-            kpg = jnp.take(k_pool, bt[:, i], axis=0)        # (B, PS, HK, D)
-            s = jnp.einsum("bchgd,bkhd->bhgck", qg,
-                           kpg.astype(jnp.float32))
+            kpg = page(k_pool, k_scale, i)                  # (B, PS, HK, D)
+            s = jnp.einsum("bchgd,bkhd->bhgck", qg, kpg)
             kpos = i * ps + jnp.arange(ps)
             valid = (kpos[None, None, None, None, :]
                      <= qpos[:, None, None, :, None])
@@ -457,9 +480,9 @@ def attention_chunk_paged_fused_ref(
         center = phi
 
     for i in range(nb):
-        kpg = jnp.take(k_pool, bt[:, i], axis=0)            # (B, PS, HK, D)
-        vpg = jnp.take(v_pool, bt[:, i], axis=0)
-        s = jnp.einsum("bchgd,bkhd->bhgck", qg, kpg.astype(jnp.float32))
+        kpg = page(k_pool, k_scale, i)                      # (B, PS, HK, D)
+        vpg = page(v_pool, v_scale, i)
+        s = jnp.einsum("bchgd,bkhd->bhgck", qg, kpg)
         kpos = i * ps + jnp.arange(ps)
         valid = (kpos[None, None, None, None, :]
                  <= qpos[:, None, None, :, None])           # (B,1,1,C,PS)

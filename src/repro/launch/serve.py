@@ -35,6 +35,15 @@ pages instead of discarding them, and the summary grows
 demoted/promoted/session-hit counters. ``--rounds R`` resubmits the same
 prompts R times (returning-conversation workload — the second round hits
 the session cache instead of re-prefilling).
+
+``--kv-dtype int8|fp8`` stores KV pages quantized (paged cache only):
+each page carries per-(page, head) symmetric scales in a parallel f32
+pool and the decode/chunk kernels dequantize in-registers, so the
+full-precision slab never exists in HBM. int8 halves KV bytes per decode
+step and doubles resident-page capacity at greedy-equivalent accuracy;
+fp8 (e4m3) matches the footprint with cheaper dequant but coarser
+mantissa. The summary reports bytes/page and total decode-read KV bytes
+so the savings are directly visible against a ``bf16`` run.
 """
 import argparse
 import sys
@@ -97,6 +106,12 @@ def _parse():
                     help="retain finished conversations' KV pages in the "
                          "tiered session cache (implied by --host-pages; "
                          "alone it enables tier-0 retention only)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8", "fp8"],
+                    default=None,
+                    help="KV-cache page storage dtype (paged cache only): "
+                         "int8/fp8 pages carry per-(page, head) scales and "
+                         "are dequantized inside the attention kernels; "
+                         "default: the plan's paged.kv_dtype")
     ap.add_argument("--rounds", type=int, default=1,
                     help="resubmit every prompt this many times — round "
                          ">= 2 models returning conversations hitting the "
@@ -166,6 +181,7 @@ def main() -> int:
                  prefix_sharing=args.prefix_sharing,
                  host_pages=args.host_pages,
                  session_cache=args.session_cache or None,
+                 kv_dtype=args.kv_dtype,
                  seed=args.seed)
     rng = np.random.default_rng(args.seed)
     sp = SamplingParams(max_new_tokens=args.max_new,
@@ -194,6 +210,9 @@ def main() -> int:
         util = eng.stats.peak_pages_used / eng.pool.num_pages
         line += (f", peak pages {eng.stats.peak_pages_used}"
                  f"/{eng.pool.num_pages} = {util:.0%}")
+        line += (f", kv={eng.kv_dtype} "
+                 f"({eng.stats.kv_page_bytes} B/page, "
+                 f"{eng.stats.kv_bytes_decode_read} decode KV bytes read)")
     if args.prefix_sharing:
         line += (f", {eng.stats.shared_prefix_pages} shared pages, "
                  f"{eng.stats.saved_prefill_tokens} prefill tokens saved, "

@@ -65,10 +65,16 @@ class DenseLayout:
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
     """Block-paged KV storage: a shared pool of fixed-size pages addressed
-    through per-sequence block tables."""
+    through per-sequence block tables.
+
+    ``kv_dtype`` is the page storage precision (``plan.KV_DTYPES``):
+    ``"bf16"`` stores full-precision pages; ``"int8"`` / ``"fp8"`` store
+    quantized codes plus parallel per-(page, kv head) f32 scale pools as
+    extra cache leaves (see :mod:`repro.serving.kvquant`)."""
 
     num_pages: int
     page_size: int
+    kv_dtype: str = "bf16"
 
     kind = "paged"
     is_paged = True
@@ -77,6 +83,11 @@ class PagedLayout:
                  head_dim: int) -> Tuple[int, int, int, int, int]:
         return (num_layers, self.num_pages, self.page_size, kv_heads,
                 head_dim)
+
+    def scale_shape(self, num_layers: int,
+                    kv_heads: int) -> Tuple[int, int, int]:
+        """Shape of one scale pool leaf (quantized layouts only)."""
+        return (num_layers, self.num_pages, kv_heads)
 
     def pages_for(self, positions: int) -> int:
         return pages_for(positions, self.page_size)

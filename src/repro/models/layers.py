@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, SoftmaxPhiConfig
 from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
-from repro.kernels import ops
+from repro.kernels import ops, quant
 
 Params = dict
 ShardFn = Callable[[jax.Array, str], jax.Array]  # (x, logical role) -> x
@@ -290,7 +290,9 @@ def attention_decode_block_paged(
     ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
     pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
     lengths: jax.Array, *, use_rope: bool = True, decode_groups=None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None,
+           jax.Array | None]:
     """One-token decode against a block-paged KV cache.
 
     x: (B, 1, D); pool_k/v: (NP, PS, HK, Dh) shared page pools;
@@ -299,6 +301,11 @@ def attention_decode_block_paged(
     sentinel, so the scatter drops them. ``decode_groups`` (a
     :class:`~repro.kernels.group_attention.DecodeGroups`) activates the
     prefix-shared grouped attention path.
+
+    With ``k_scale``/``v_scale`` (the (NP, HK) f32 step pools of a
+    quantized layout) the new token is appended through the quantized
+    scatter and attention dequantizes in place; returns the updated scale
+    pools alongside the code pools (``None``/``None`` when bf16).
     """
     cfg = ctx.cfg
     b = x.shape[0]
@@ -306,8 +313,17 @@ def attention_decode_block_paged(
         ctx, p, x, position[:, None], use_rope=use_rope
     )
     ones = jnp.ones_like(lengths)
-    pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths, ones)
-    pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths, ones)
+    if k_scale is not None:
+        from repro.serving import kvquant  # deferred: serving imports models
+
+        spec = quant.spec_for_dtype(pool_k.dtype)
+        pool_k, k_scale = kvquant.scatter_chunk_quantized(
+            pool_k, k_scale, k, block_tables, lengths, ones, spec)
+        pool_v, v_scale = kvquant.scatter_chunk_quantized(
+            pool_v, v_scale, v, block_tables, lengths, ones, spec)
+    else:
+        pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths, ones)
+        pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths, ones)
     new_len = lengths + 1
     o = ops.attention_decode_paged(
         q[:, 0], pool_k, pool_v, block_tables, new_len,
@@ -316,9 +332,10 @@ def attention_decode_block_paged(
         plan=ctx.plan,
         shard=ctx.shard,
         groups=decode_groups,
+        k_scale=k_scale, v_scale=v_scale,
     )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
-    return ctx.matmul(o, p["wo"]), pool_k, pool_v
+    return ctx.matmul(o, p["wo"]), pool_k, pool_v, k_scale, v_scale
 
 
 def attention_chunk_block(
@@ -352,25 +369,40 @@ def attention_chunk_block_paged(
     ctx: LayerCtx, p: Params, x: jax.Array,
     pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
     lengths: jax.Array, chunk_lens: jax.Array, *, use_rope: bool = True,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None,
+           jax.Array | None]:
     """Chunked-prefill step against the block-paged pool (paged twin of
-    :func:`attention_chunk_block`)."""
+    :func:`attention_chunk_block`). Quantized layouts (``k_scale``/
+    ``v_scale`` step pools) write the chunk through the quantized scatter
+    — quantization happens in the chunk epilogue, so the full-precision
+    slab never lands in HBM — and return the updated scale pools."""
     cfg = ctx.cfg
     b, c, _ = x.shape
     positions = lengths[:, None] + jnp.arange(c)[None, :]
     q, k, v = attention_qkv(ctx, p, x, positions, use_rope=use_rope)
-    pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths,
-                                  chunk_lens)
-    pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths,
-                                  chunk_lens)
+    if k_scale is not None:
+        from repro.serving import kvquant  # deferred: serving imports models
+
+        spec = quant.spec_for_dtype(pool_k.dtype)
+        pool_k, k_scale = kvquant.scatter_chunk_quantized(
+            pool_k, k_scale, k, block_tables, lengths, chunk_lens, spec)
+        pool_v, v_scale = kvquant.scatter_chunk_quantized(
+            pool_v, v_scale, v, block_tables, lengths, chunk_lens, spec)
+    else:
+        pool_k = _paged_scatter_chunk(pool_k, k, block_tables, lengths,
+                                      chunk_lens)
+        pool_v = _paged_scatter_chunk(pool_v, v, block_tables, lengths,
+                                      chunk_lens)
     o = ops.attention_chunk_paged(
         q, pool_k, pool_v, block_tables, lengths,
         phi_cfg=ctx.phi_cfg if cfg.has_softmax_attention else
         SoftmaxPhiConfig(enabled=False),
         plan=ctx.plan,
+        k_scale=k_scale, v_scale=v_scale,
     )
     o = ctx.shard(o.reshape(b, c, cfg.q_dim), "act_attn_out")
-    return ctx.matmul(o, p["wo"]), pool_k, pool_v
+    return ctx.matmul(o, p["wo"]), pool_k, pool_v, k_scale, v_scale
 
 
 # ---------------------------------------------------------------------------

@@ -314,16 +314,23 @@ def make_decode_block(groups: int = 0):
                 ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
                 lengths
             )
+            new_cache = {"k": ck, "v": cv}
         else:
-            a, ck, cv = L.attention_decode_block_paged(
+            a, ck, cv, ks, vs = L.attention_decode_block_paged(
                 ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
                 block_tables, lengths, decode_groups=decode_groups,
+                k_scale=cache_i.get("k_scale"),
+                v_scale=cache_i.get("v_scale"),
             )
+            new_cache = {"k": ck, "v": cv}
+            if ks is not None:
+                new_cache["k_scale"] = ks
+                new_cache["v_scale"] = vs
         x = x + a
         h = L.norm(cfg, p["mlp_norm"], x)
         y, _ = moe_block(ctx, p["moe"], h, groups=groups or ctx.moe_groups,
                          zero_drop=True)
-        return ctx.shard(x + y, "act_resid"), {"k": ck, "v": cv}
+        return ctx.shard(x + y, "act_resid"), new_cache
 
     return decode_block
 
@@ -349,15 +356,22 @@ def make_chunk_block(groups: int = 0):
                 ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths,
                 chunk_lens,
             )
+            new_cache = {"k": ck, "v": cv}
         else:
-            a, ck, cv = L.attention_chunk_block_paged(
+            a, ck, cv, ks, vs = L.attention_chunk_block_paged(
                 ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
                 lengths, chunk_lens,
+                k_scale=cache_i.get("k_scale"),
+                v_scale=cache_i.get("v_scale"),
             )
+            new_cache = {"k": ck, "v": cv}
+            if ks is not None:
+                new_cache["k_scale"] = ks
+                new_cache["v_scale"] = vs
         x = x + a
         h = L.norm(cfg, p["mlp_norm"], x)
         x = ctx.shard(x + _moe_chunk_mlp(ctx, p, h, groups), "act_resid")
-        return x, {"k": ck, "v": cv}
+        return x, new_cache
 
     return chunk_block
 

@@ -87,15 +87,21 @@ def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
         a, ck, cv = L.attention_decode_block(
             ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
         )
+        new_cache = {"k": ck, "v": cv}
     else:
-        a, ck, cv = L.attention_decode_block_paged(
+        a, ck, cv, ks, vs = L.attention_decode_block_paged(
             ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
             block_tables, lengths, decode_groups=decode_groups,
+            k_scale=cache_i.get("k_scale"), v_scale=cache_i.get("v_scale"),
         )
+        new_cache = {"k": ck, "v": cv}
+        if ks is not None:   # quantized layout: scale pools ride along
+            new_cache["k_scale"] = ks
+            new_cache["v_scale"] = vs
     x = x + a
     h = L.norm(cfg, p["mlp_norm"], x)
     x = x + L.mlp_block(ctx, p["mlp"], h)
-    return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
+    return ctx.shard(x, "act_resid"), new_cache
 
 
 def chunk_block(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
@@ -109,15 +115,21 @@ def chunk_block(ctx: LayerCtx, p: Params, x: jax.Array, cache_i: dict,
             ctx, p["attn"], h, cache_i["k"], cache_i["v"], lengths,
             chunk_lens
         )
+        new_cache = {"k": ck, "v": cv}
     else:
-        a, ck, cv = L.attention_chunk_block_paged(
+        a, ck, cv, ks, vs = L.attention_chunk_block_paged(
             ctx, p["attn"], h, cache_i["k"], cache_i["v"], block_tables,
             lengths, chunk_lens,
+            k_scale=cache_i.get("k_scale"), v_scale=cache_i.get("v_scale"),
         )
+        new_cache = {"k": ck, "v": cv}
+        if ks is not None:
+            new_cache["k_scale"] = ks
+            new_cache["v_scale"] = vs
     x = x + a
     h = L.norm(cfg, p["mlp_norm"], x)
     x = x + L.mlp_block(ctx, p["mlp"], h)
-    return ctx.shard(x, "act_resid"), {"k": ck, "v": cv}
+    return ctx.shard(x, "act_resid"), new_cache
 
 
 def prefill_block(ctx: LayerCtx, p: Params, x: jax.Array,
@@ -194,21 +206,45 @@ def train_loss(
 # ---------------------------------------------------------------------------
 
 
+def _cache_shapes(cfg: ModelConfig, layout: KVLayout, dtype=None):
+    """(pool shape, pool dtype, scale shape or None) for a layout.
+
+    Quantized paged layouts (``layout.kv_dtype`` != bf16) store code pools
+    in the spec's code dtype plus per-(layer, page, kv head) f32 step
+    pools as extra ``k_scale``/``v_scale`` leaves."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = layout.kv_shape(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim)
+    kv_dtype = getattr(layout, "kv_dtype", "bf16")
+    if kv_dtype == "bf16":
+        return shape, dtype, None
+    from repro.kernels import quant
+    spec = quant.spec_for(kv_dtype)
+    sshape = layout.scale_shape(cfg.num_layers, cfg.num_kv_heads)
+    return shape, spec.code_dtype, sshape
+
+
 def init_cache(cfg: ModelConfig, layout: KVLayout, dtype=None):
     """KV storage for any :class:`~repro.models.kvlayout.KVLayout` — the
     dense (L, B, S, HK, Dh) slot cache or the block-paged (L, NP, PS, HK,
     Dh) pool (per-sequence addressing then lives in the engine's block
-    tables — see :mod:`repro.serving.blockpool`)."""
-    dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = layout.kv_shape(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    tables — see :mod:`repro.serving.blockpool`). Quantized paged layouts
+    add ``k_scale``/``v_scale`` step-pool leaves."""
+    shape, dtype, sshape = _cache_shapes(cfg, layout, dtype)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if sshape is not None:
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return cache
 
 
 def cache_spec(cfg: ModelConfig, layout: KVLayout, dtype=None):
-    dtype = dtype or jnp.dtype(cfg.activation_dtype)
-    shape = layout.kv_shape(cfg.num_layers, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+    shape, dtype, sshape = _cache_shapes(cfg, layout, dtype)
+    spec = {"k": jax.ShapeDtypeStruct(shape, dtype),
             "v": jax.ShapeDtypeStruct(shape, dtype)}
+    if sshape is not None:
+        spec["k_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+        spec["v_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+    return spec
 
 
 def prefill(

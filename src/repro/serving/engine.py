@@ -95,7 +95,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core.plan import DEFAULT_PLAN, ExecutionPlan
+from repro.core.plan import DEFAULT_PLAN, KV_DTYPES, ExecutionPlan
+from repro.kernels import quant
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
     pages_for, pow2_bucket
@@ -147,6 +148,13 @@ class EngineStats:
     #                                  refcount bump or promotion)
     host_evicted_pages: int = 0      # pages that fell off the bottom tier
     #                                  (KV lost; those spans re-prefill)
+    # quantized KV pages (zero / bf16-sized unless kv_dtype != "bf16")
+    kv_page_bytes: int = 0           # one page's K+V slab across all layers
+    #                                  (code pools + scale rows as stored)
+    kv_bytes_decode_read: int = 0    # cumulative KV bytes decode ticks
+    #                                  streamed (resident pages x slab
+    #                                  bytes) — the paper's decode
+    #                                  bandwidth term, at stored width
 
 
 class Engine:
@@ -163,6 +171,7 @@ class Engine:
         prefill_chunk: Optional[int] = DEFAULT_PREFILL_CHUNK,
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
+        kv_dtype: Optional[str] = None,
         prefix_sharing: bool = False,
         host_pages: Optional[int] = None,
         session_cache: Optional[bool] = None,
@@ -185,6 +194,27 @@ class Engine:
             prefill_chunk = self.plan.paged.chunk_block
         self.prefill_chunk = (
             prefill_chunk if self.api.supports_chunked_prefill else 0)
+
+        # KV page storage precision: explicit arg wins, else the plan's
+        # tuned kv_dtype (paged engines only — a dense engine never reads
+        # plan.paged). Quantized pools need the paged layout: the
+        # per-(page, head) scale rows are page-pool leaves.
+        if kv_dtype is None:
+            kv_dtype = (getattr(self.plan.paged, "kv_dtype", "bf16")
+                        if cache_kind == "paged" else "bf16")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
+        if kv_dtype != "bf16":
+            if cache_kind != "paged":
+                raise ValueError(
+                    "kv_dtype quantization stores per-page scales in the "
+                    "block pool; use cache_kind='paged'")
+            if kv_dtype == "fp8" and not quant.fp8_supported():
+                raise ValueError(
+                    "kv_dtype='fp8' needs ml_dtypes float8_e4m3fn; "
+                    "use 'int8' on this runtime")
+        self.kv_dtype = kv_dtype
 
         # tiered KV store: any of the knobs turns the hierarchy on
         tiered = (host_pages is not None or disk_pages > 0
@@ -233,7 +263,7 @@ class Engine:
                 else num_slots * pages_for(max_seq, page_size),
                 page_size,
             )
-            self.layout = PagedLayout(pool.num_pages, page_size)
+            self.layout = PagedLayout(pool.num_pages, page_size, kv_dtype)
             if prefix_sharing:
                 self.prefix = PrefixIndex(page_size)
             if tiered:
@@ -318,6 +348,7 @@ class Engine:
         self._kv_bytes_per_page = (
             sum(a.nbytes for a in jax.tree.leaves(self.cache))
             // self.pool.num_pages) if cache_kind == "paged" else 0
+        self.stats.kv_page_bytes = self._kv_bytes_per_page
         self._prefill_cache = {}  # bucketed P -> jitted batched prefill
         # last-uploaded device copies of the small int operands the chunk
         # loop would otherwise re-upload every step (chunk_lens is usually
@@ -838,6 +869,13 @@ class Engine:
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(tokens), self.cache,
                 self.slots.block_tables(), lengths)
+        if self.pool is not None:
+            # decode streams every resident page once per tick, at the
+            # stored width — the term kv_dtype shrinks
+            pages_read = sum(len(self.slots.slots[i].pages)
+                             for i in self.by_slot)
+            self.stats.kv_bytes_decode_read += (
+                pages_read * self._kv_bytes_per_page)
         events = []
         for idx in list(self.by_slot):
             state = self.by_slot[idx]

@@ -356,7 +356,8 @@ def test_chunk_bench_smoke(tmp_path, monkeypatch):
     monkeypatch.setattr(chunk_prefill, "OUT_PATH",
                         str(tmp_path / "BENCH_chunk.json"))
     result = chunk_prefill.run(quick=True)
-    assert (tmp_path / "BENCH_chunk.json").exists()
+    assert (tmp_path / "BENCH_chunk.quick.json").exists()
+    assert not (tmp_path / "BENCH_chunk.json").exists()
     assert result["rows"]
     by_mode = {}
     for row in result["rows"]:

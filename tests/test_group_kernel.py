@@ -430,7 +430,8 @@ def test_group_bench_smoke(tmp_path, monkeypatch):
     monkeypatch.setattr(group_decode, "OUT_PATH",
                         str(tmp_path / "BENCH_group.json"))
     result = group_decode.run(quick=True)
-    assert (tmp_path / "BENCH_group.json").exists()
+    assert (tmp_path / "BENCH_group.quick.json").exists()
+    assert not (tmp_path / "BENCH_group.json").exists()
     assert result["rows"]
     for row in result["rows"]:
         assert {"group_n", "prefix_len", "decode_tick_s_off",

@@ -243,7 +243,11 @@ def test_dispatch_bench_smoke(tmp_path, monkeypatch):
     monkeypatch.setattr(dispatch_table, "OUT_PATH",
                         str(tmp_path / "BENCH_dispatch.json"))
     result = dispatch_table.run(quick=True)
-    assert (tmp_path / "BENCH_dispatch.json").exists()
+    # quick mode lands in the .quick.json sidecar and never clobbers the
+    # committed full-mode artifact
+    assert (tmp_path / "BENCH_dispatch.quick.json").exists()
+    assert not (tmp_path / "BENCH_dispatch.json").exists()
+    assert result["mode"] == "quick"
     assert result["config"]["measure"] == "analytical"
     assert result["rows"], "inflection rows must be emitted"
     for row in result["rows"]:

@@ -518,7 +518,8 @@ def test_prefix_bench_smoke(tmp_path, monkeypatch):
     monkeypatch.setattr(prefix_sharing, "OUT_PATH",
                         str(tmp_path / "BENCH_prefix.json"))
     result = prefix_sharing.run(quick=True)
-    assert (tmp_path / "BENCH_prefix.json").exists()
+    assert (tmp_path / "BENCH_prefix.quick.json").exists()
+    assert not (tmp_path / "BENCH_prefix.json").exists()
     assert result["rows"], "sweep cells must be emitted"
     for row in result["rows"]:
         assert {"prefix_len", "batch", "pages_off", "pages_on",

@@ -223,4 +223,6 @@ def test_scheduler_sweep_smoke(tmp_path, monkeypatch):
         assert r["tokens"] > 0 and r["tok_s"] > 0
         assert r["ttft_p50_ms"] <= r["ttft_p99_ms"]
         assert 0 < r["page_utilization"] <= 1.0
-    assert (tmp_path / "BENCH_sched.json").exists()
+    assert (tmp_path / "BENCH_sched.quick.json").exists()
+    assert not (tmp_path / "BENCH_sched.json").exists()
+    assert result["mode"] == "quick"

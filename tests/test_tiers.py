@@ -83,6 +83,27 @@ def test_disk_tier_round_trips_exact_bytes(tmp_path):
     tp.check()
 
 
+def test_quantized_slab_disk_round_trip_bitwise(tmp_path):
+    """Quantized pages demote as (codes, codes, scales, scales) tuples;
+    the disk tier must return every leaf bit-exact with dtypes intact —
+    int8 codes may not silently widen, f32 scale rows may not re-round."""
+    def qslab(seed):
+        r = np.random.default_rng(seed)
+        return (r.integers(-127, 128, size=(2, 4, 2, 8)).astype(np.int8),
+                r.integers(-127, 128, size=(2, 4, 2, 8)).astype(np.int8),
+                r.random((2, 2)).astype(np.float32),
+                r.random((2, 2)).astype(np.float32))
+    tp = TieredPool(1, disk_dir=str(tmp_path), disk_pages=2)
+    a = tp.demote(qslab(7))
+    tp.demote(qslab(8))                      # spills a host -> disk
+    assert tp.tier_of(a) == 2
+    got = tp.pop(a)                          # promote off disk
+    for g, w in zip(got, qslab(7)):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(g, w)
+    tp.check()
+
+
 def test_disk_tier_full_evicts_oldest_file(tmp_path):
     tp = TieredPool(1, disk_dir=str(tmp_path), disk_pages=1)
     a = tp.demote(_slab(1))
@@ -425,6 +446,49 @@ def test_disk_tier_resume_identical(smoke_model, tmp_path):
     eng.slots.check()
 
 
+def test_quantized_pages_demote_promote_bitwise(smoke_model, tmp_path):
+    """int8 KV pages flushed through the host+disk tiers come back with
+    the exact quantized representation: the tiered store moves the codes
+    (int8 slabs) and their f32 scale rows as opaque bytes, so after
+    promotion every prefix page is bitwise identical to its pre-demotion
+    self — and greedy outputs match a never-demoted int8 engine."""
+    cfg, params = smoke_model
+    reqs = _reqs(cfg, n=2, seed=43)
+    base = _engine(cfg, params, kv_dtype="int8")
+    out = _toks(base.run(_rerun(reqs)))
+
+    eng = _engine(cfg, params, kv_dtype="int8", host_pages=2,
+                  disk_dir=str(tmp_path), disk_pages=16)
+    assert _toks(eng.run(_rerun(reqs))) == out
+
+    def snapshot():
+        """Resident prefix pages' slabs keyed by their token chunk."""
+        ent = eng.prefix._entries
+        keys = sorted(k for k in ent if ent[k].page is not None)
+        pages = [ent[k].page for k in keys]
+        slabs = eng._gather_pages(pages)
+        return {k: slabs[p] for k, p in zip(keys, pages)}
+
+    before = snapshot()
+    assert before, "run registered no prefix pages"
+    leaves = next(iter(before.values()))
+    assert any(a.dtype == np.int8 for a in leaves), "no quantized codes"
+    assert any(a.dtype == np.float32 for a in leaves), "no scale rows"
+
+    eng.evict_finished(flush=True)
+    assert eng.tiers.stats.disk_demotions > 0
+
+    assert _toks(eng.run(_rerun(reqs))) == out   # promotes the span back
+    assert eng.stats.promoted_pages > 0
+    after = snapshot()
+    assert sorted(after) == sorted(before)
+    for k in before:
+        for g, w in zip(after[k], before[k]):
+            assert g.dtype == w.dtype
+            np.testing.assert_array_equal(g, w)
+    eng.slots.check()
+
+
 def test_eviction_fallback_reprefills_identically(smoke_model):
     """A hierarchy with almost no capacity truly evicts: the purged keys
     stop matching and the rerun silently pays full re-prefill — same
@@ -478,7 +542,8 @@ def test_tiers_bench_smoke(tmp_path, monkeypatch):
     monkeypatch.setattr(kv_tiers, "OUT_PATH",
                         str(tmp_path / "BENCH_tiers.json"))
     result = kv_tiers.run(quick=True)
-    assert (tmp_path / "BENCH_tiers.json").exists()
+    assert (tmp_path / "BENCH_tiers.quick.json").exists()
+    assert not (tmp_path / "BENCH_tiers.json").exists()
     for row in result["ttft"]:
         assert row["speedup"] > 1.0, "session cache must beat re-prefill"
         assert row["promoted_pages"] > 0
