@@ -1,0 +1,195 @@
+"""Decode-fusion granularity benchmark (DecodeFusionPlan, kernel looping).
+
+Two channels, split vs fused vs looped on the decode hot path:
+
+  * **Host-visible dispatch count** (structural, deterministic): the
+    number of op dispatches one decode tick issues, counted on the
+    Pallas-backend plan's jaxpr via :func:`count_dispatches`. Each
+    jaxpr equation that materializes a result is one dispatch; a
+    ``scan`` body is weighted by its trip count (the runtime re-issues
+    the body per layer even though the host dispatches the loop once —
+    this is deliberately *conservative* toward the looped mode: its
+    real host-visible count is the loop itself). Pure layout/metadata
+    ops (``reshape``, ``broadcast_in_dim``, ``convert_element_type``,
+    ``squeeze``, ``transpose``, ``slice``) are excluded — they move no
+    data through a kernel of their own under XLA; everything else,
+    including the masking/padding glue around the attention kernels,
+    is counted. Counting happens at trace time (``jax.make_jaxpr``),
+    so the full model depth is measured without executing
+    interpret-mode kernels.
+  * **Per-tick decode latency** (wall clock): the jitted decode step
+    on the XLA backend at batch {1, 4, 8}. On XLA the fused stages
+    dispatch bit-identical oracle compositions, so this channel checks
+    the refactor costs nothing where the fused kernels cannot run
+    (split and looped trace identical scan bodies; fused python-unrolls
+    the depth).
+
+The committed ``BENCH_fusion.json`` is the acceptance artifact: the
+fused/looped granularities must cut the batch-1 dispatch count >= 2x
+vs split, with per-tick latency no worse at every measured batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, write_artifact
+from repro import configs
+from repro.core.plan import make_plan
+from repro.models.api import get_model
+from repro.models.kvlayout import DenseLayout
+from repro.models.layers import LayerCtx
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fusion.json")
+
+GRANULARITIES = ("split", "fused", "looped")
+
+# metadata-only primitives: no kernel of their own under XLA (layout
+# changes and dtype reinterpretation fuse into their consumers)
+_LAYOUT_OPS = frozenset({
+    "reshape", "broadcast_in_dim", "convert_element_type", "squeeze",
+    "transpose", "slice", "stop_gradient", "copy",
+})
+
+# call-like primitives to recurse through (inlined at compile time)
+_INLINE_OPS = frozenset({
+    "pjit", "closed_call", "remat", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr",
+})
+
+
+def _count(jaxpr, weight: int = 1) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            n += _count(eqn.params["jaxpr"].jaxpr,
+                        weight * eqn.params.get("length", 1))
+        elif prim in _INLINE_OPS:
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if hasattr(inner, "jaxpr"):
+                inner = inner.jaxpr
+            n += _count(inner, weight)
+        elif prim == "cond":
+            n += max(_count(br.jaxpr, weight)
+                     for br in eqn.params["branches"])
+        elif prim in _LAYOUT_OPS:
+            pass
+        else:
+            n += weight
+    return n
+
+
+def count_dispatches(cfg, granularity: str, batch: int = 1) -> int:
+    """Op dispatches in one decode tick on the Pallas-backend plan."""
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    layout = DenseLayout(num_slots=batch, max_seq=32)
+    tokens = jnp.zeros((batch,), jnp.int32)
+    lengths = jnp.ones((batch,), jnp.int32)
+    plan = make_plan(backend="pallas", decode_fusion=granularity,
+                     fallback=False)
+    ctx = LayerCtx(cfg=cfg, plan=plan)
+    cache = api.init_cache(layout)
+    jaxpr = jax.make_jaxpr(
+        lambda p, t, c, le, po: api.decode_step(ctx, p, t, c, le,
+                                                positions=po)
+    )(params, tokens, cache, lengths, lengths)
+    return _count(jaxpr.jaxpr)
+
+
+def time_ticks(cfg, batch: int, *, warmup: int, iters: int) -> dict:
+    """Min wall seconds per jitted decode tick (XLA backend), all
+    granularities at once.
+
+    The three step functions are timed *interleaved* (round-robin, one
+    tick each per iteration) and reduced with min-of-N: on XLA the
+    split and looped granularities compile the *same* program
+    (identical scan bodies — the bit-identity guarantee), so any
+    sequential-measurement spread between them is host scheduler /
+    clock drift, which interleaving cancels and the minimum discards.
+    """
+    import time as _time
+
+    import numpy as np
+
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    s = 64
+    layout = DenseLayout(num_slots=batch, max_seq=s)
+    tokens = jnp.arange(batch, dtype=jnp.int32) + 1
+    lengths = jnp.full((batch,), s // 2, jnp.int32)
+
+    ticks = {}
+    for g in GRANULARITIES:
+        plan = make_plan(decode_fusion=g, fallback=False)
+        ctx = LayerCtx(cfg=cfg, plan=plan)
+        step = jax.jit(
+            lambda p, t, c, le, po, _api=api, _ctx=ctx: _api.decode_step(
+                _ctx, p, t, c, le, positions=po),
+            donate_argnums=(2,))
+        ticks[g] = (lambda _step=step: _step(
+            params, tokens, api.init_cache(layout), lengths, lengths))
+
+    for _ in range(warmup):
+        for tick in ticks.values():
+            out = tick()
+    jax.block_until_ready(out)
+    times = {g: [] for g in GRANULARITIES}
+    for _ in range(iters):
+        for g, tick in ticks.items():
+            t0 = _time.perf_counter()
+            out = tick()
+            jax.block_until_ready(out)
+            times[g].append(_time.perf_counter() - t0)
+    return {g: float(np.min(ts)) for g, ts in times.items()}
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== decode_fusion: dispatch count + per-tick latency, "
+          "split vs fused vs looped ==")
+    arch = "qwen2-0.5b"
+    smoke = configs.smoke(configs.get(arch))
+    # dispatch counting is trace-only, so it can afford the real depth
+    # (the smoke config keeps widths tiny); quick trims it
+    depth = 8 if quick else configs.get(arch).num_layers
+    deep = dataclasses.replace(smoke, num_layers=depth)
+
+    counts = {g: count_dispatches(deep, g, batch=1) for g in GRANULARITIES}
+    ratio = {g: counts["split"] / counts[g] for g in GRANULARITIES}
+    print(fmt_row("granularity", "dispatches/tick", "vs split",
+                  widths=[13, 17, 10]))
+    for g in GRANULARITIES:
+        print(fmt_row(g, counts[g], f"{ratio[g]:.2f}x",
+                      widths=[13, 17, 10]))
+
+    batches = [1, 4] if quick else [1, 4, 8]
+    warmup, iters = (1, 5) if quick else (5, 100)
+    lat = []
+    print(fmt_row("batch", *GRANULARITIES, "looped/split",
+                  widths=[7, 12, 12, 12, 13]))
+    for b in batches:
+        t = time_ticks(smoke, b, warmup=warmup, iters=iters)
+        lat.append(dict(batch=b,
+                        **{f"{g}_us": t[g] * 1e6 for g in GRANULARITIES},
+                        looped_over_split=t["looped"] / t["split"]))
+        print(fmt_row(b, *(f"{t[g]*1e6:.0f}us" for g in GRANULARITIES),
+                      f"{t['looped']/t['split']:.2f}",
+                      widths=[7, 12, 12, 12, 13]))
+
+    result = dict(
+        arch=arch, depth=depth, batch=1,
+        dispatches_per_tick=counts,
+        dispatch_reduction_vs_split={g: ratio[g] for g in GRANULARITIES},
+        latency=lat,
+    )
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"wrote {os.path.relpath(path)}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

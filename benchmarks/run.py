@@ -31,9 +31,10 @@ def main() -> int:
                         args.quick)
 
     from benchmarks import (attention_softmax, chunk_prefill, decode_engine,
-                            dispatch_table, flat_gemm_sweep, group_decode,
-                            kv_quant, kv_tiers, paged_decode, prefill_engine,
-                            prefix_sharing, roofline_report, scheduler_sweep)
+                            decode_fusion, dispatch_table, flat_gemm_sweep,
+                            group_decode, kv_quant, kv_tiers, paged_decode,
+                            prefill_engine, prefix_sharing, roofline_report,
+                            scheduler_sweep)
 
     results = {}
     for name, mod in [
@@ -41,6 +42,7 @@ def main() -> int:
         ("flat_gemm_sweep", flat_gemm_sweep),
         ("dispatch_table", dispatch_table),
         ("decode_engine", decode_engine),
+        ("decode_fusion", decode_fusion),
         ("paged_decode", paged_decode),
         ("chunk_prefill", chunk_prefill),
         ("scheduler_sweep", scheduler_sweep),

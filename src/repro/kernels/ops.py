@@ -111,6 +111,103 @@ def fused_ffn(
     return out.reshape(*lead, n)
 
 
+def decode_ingest(
+    x: jax.Array,             # (B, 1, D) residual-stream input
+    norm_scale: jax.Array,    # (D,)
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    positions: jax.Array,     # (B,) int32
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+    eps: float = 1e-6,
+    use_rope: bool = True,
+    bq: jax.Array | None = None,
+    bk: jax.Array | None = None,
+    bv: jax.Array | None = None,
+    plan: Optional[ExecutionPlan] = None,
+):
+    """Fused decode-ingest stage: rmsnorm → QKV → bias → rope in one
+    seam (kernels/decode_fuse.py on the Pallas backend, the bit-exact
+    split-chain composition in ``ref.py`` otherwise). Returns
+    q (B,1,HQ,Dh), k/v (B,1,HK,Dh)."""
+    fp = (plan or DEFAULT_PLAN).decode_fusion
+    if fp.backend == "pallas":
+        from repro.kernels.decode_fuse import decode_ingest_fused
+        b, s, d = x.shape
+        q, k, v = decode_ingest_fused(
+            x.reshape(b * s, d), norm_scale, wq, wk, wv, positions,
+            num_heads=num_heads, num_kv_heads=num_kv_heads,
+            head_dim=head_dim, rope_theta=rope_theta, eps=eps,
+            use_rope=use_rope, bq=bq, bk_bias=bk, bv=bv,
+            interpret=_INTERPRET,
+        )
+        return (q.reshape(b, s, num_heads, head_dim),
+                k.reshape(b, s, num_kv_heads, head_dim),
+                v.reshape(b, s, num_kv_heads, head_dim))
+    return ref.decode_ingest_ref(
+        x, norm_scale, wq, wk, wv, positions,
+        num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
+        rope_theta=rope_theta, eps=eps, use_rope=use_rope,
+        bq=bq, bk=bk, bv=bv,
+    )
+
+
+def oproj_residual(
+    o: jax.Array,       # (B, 1, HQ*Dh) attention outputs
+    wo: jax.Array,      # (HQ*Dh, D)
+    resid: jax.Array,   # (B, 1, D)
+    *,
+    plan: Optional[ExecutionPlan] = None,
+) -> jax.Array:
+    """Fused attention epilogue ``resid + o @ wo`` (the o_proj GEMM with
+    the residual add riding its epilogue on the Pallas backend; the
+    bit-exact split composition otherwise)."""
+    fp = (plan or DEFAULT_PLAN).decode_fusion
+    if fp.backend == "pallas":
+        from repro.kernels.decode_fuse import oproj_residual_fused
+        b, s, qd = o.shape
+        out = oproj_residual_fused(
+            o.reshape(b * s, qd), wo, resid.reshape(b * s, -1),
+            interpret=_INTERPRET,
+        )
+        return out.reshape(resid.shape)
+    return ref.oproj_residual_ref(o, wo, resid)
+
+
+def ffn_norm(
+    x: jax.Array,           # (B, 1, D) residual-stream input (un-normed)
+    norm_scale: jax.Array,  # (D,)
+    w_gate: jax.Array,      # (D, F)
+    w_up: jax.Array,        # (D, F)
+    *,
+    activation: str = "swiglu",
+    eps: float = 1e-6,
+    plan: Optional[ExecutionPlan] = None,
+) -> jax.Array:
+    """Fused mlp-ingest stage: rmsnorm → gate/up GEMMs → act(g)*u in one
+    seam (kernels/decode_fuse.py on the Pallas backend; on XLA the
+    oracle composes whichever split chain the plan's ``fused_ffn`` knob
+    selects, so the fused granularities stay bitwise). Returns (B, 1, F)
+    — feed to :func:`oproj_residual` with ``w_down`` for the full seam."""
+    p = plan or DEFAULT_PLAN
+    fp = p.decode_fusion
+    if fp.backend == "pallas":
+        from repro.kernels.decode_fuse import ffn_norm_fused
+        b, s, d = x.shape
+        out = ffn_norm_fused(
+            x.reshape(b * s, d), norm_scale, w_gate, w_up,
+            activation=activation, eps=eps, interpret=_INTERPRET,
+        )
+        return out.reshape(b, s, -1)
+    return ref.ffn_norm_ref(x, norm_scale, w_gate, w_up,
+                            activation=activation, eps=eps,
+                            fused=p.fused_ffn.fused)
+
+
 # ---------------------------------------------------------------------------
 # Attention front doors (T1)
 # ---------------------------------------------------------------------------

@@ -590,3 +590,121 @@ def fused_ffn_up_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
     act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
     return (act * u).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode-fusion stage oracles (kernels/decode_fuse.py)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    """Expression-for-expression copy of ``models.layers.rmsnorm`` (the
+    kernels layer cannot import models); the fused-ingest oracle composes
+    it so the XLA ``fused``/``looped`` granularities stay bit-identical
+    to the split chain."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_ref(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Expression-for-expression copy of ``models.layers.rope``."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def decode_ingest_ref(
+    x: jax.Array,             # (B, 1, D) residual-stream input
+    norm_scale: jax.Array,    # (D,)
+    wq: jax.Array,            # (D, HQ*Dh)
+    wk: jax.Array,            # (D, HK*Dh)
+    wv: jax.Array,
+    positions: jax.Array,     # (B,) int32 absolute positions
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+    eps: float = 1e-6,
+    use_rope: bool = True,
+    bq: jax.Array | None = None,
+    bk: jax.Array | None = None,
+    bv: jax.Array | None = None,
+):
+    """Oracle for the fused decode-ingest stage: rmsnorm → QKV → bias →
+    rope in one seam. Composes exactly the split chain's expressions in
+    the same order (norm, three f32-accumulated GEMMs, bias add, head
+    reshape, rope on q/k), so on the XLA backend the fused granularities
+    are bitwise equal to split. Returns q (B,1,HQ,Dh), k/v (B,1,HK,Dh).
+    """
+    b, s, d = x.shape
+    h = rmsnorm_ref(x, norm_scale, eps)
+    h2 = h.reshape(b * s, d)
+    q = flat_gemm_ref(h2, wq).reshape(b, s, wq.shape[-1])
+    k = flat_gemm_ref(h2, wk).reshape(b, s, wk.shape[-1])
+    v = flat_gemm_ref(h2, wv).reshape(b, s, wv.shape[-1])
+    if bq is not None:
+        q, k, v = q + bq, k + bk, v + bv
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    if use_rope:
+        pos = positions[:, None]
+        q = rope_ref(q, pos, rope_theta)
+        k = rope_ref(k, pos, rope_theta)
+    return q, k, v
+
+
+def oproj_residual_ref(o: jax.Array, wo: jax.Array,
+                       resid: jax.Array) -> jax.Array:
+    """Oracle for the fused attention epilogue: ``resid + o @ wo`` — the
+    split chain's o_proj GEMM and residual add, same f32 accumulation and
+    operand order. o: (B, 1, HQ*Dh); wo: (HQ*Dh, D); resid: (B, 1, D)."""
+    b, s, qd = o.shape
+    out = flat_gemm_ref(o.reshape(b * s, qd), wo).reshape(b, s, wo.shape[-1])
+    return resid + out
+
+
+def ffn_norm_ref(
+    x: jax.Array,           # (B, 1, D) residual-stream input (un-normed)
+    norm_scale: jax.Array,  # (D,)
+    w_gate: jax.Array,      # (D, F)
+    w_up: jax.Array,        # (D, F)
+    *,
+    activation: str = "swiglu",
+    eps: float = 1e-6,
+    fused: bool = True,
+) -> jax.Array:
+    """Oracle for the fused mlp-ingest stage: rmsnorm → gate/up GEMMs →
+    act(g)*u. ``fused`` selects which split composition to mirror —
+    the plan's ``fused_ffn`` knob decides whether the split chain runs
+    ``fused_ffn_up_ref`` (f32 epilogue) or two dispatched GEMMs rounded
+    to the activation dtype before the activation; the fused seam must
+    compose the *same* expressions — with the same reshape placement,
+    since the split/looped scan bodies must trace to identical jaxprs
+    for XLA to round identically — to stay bitwise."""
+    b, s, d = x.shape
+    f = w_gate.shape[-1]
+    h = rmsnorm_ref(x, norm_scale, eps)
+    if fused:
+        # mirror ops.fused_ffn: flatten, fused epilogue, reshape back
+        return fused_ffn_up_ref(
+            h.reshape(b * s, d), w_gate, w_up, activation=activation,
+        ).reshape(b, s, f)
+    # mirror the unfused mlp_block: each GEMM flattens and reshapes back
+    # (ops.matmul's XLA path), activation applied on the 3-D tensors
+    g = flat_gemm_ref(h.reshape(b * s, d), w_gate).reshape(b, s, f)
+    u = flat_gemm_ref(h.reshape(b * s, d), w_up).reshape(b, s, f)
+    act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+    return act * u

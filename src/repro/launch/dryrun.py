@@ -402,6 +402,12 @@ def main() -> int:
                     help="tune a fresh plan per arch before lowering "
                          "(analytical backend; backend/fallback are still "
                          "forced to xla/off for cost-analysis hygiene)")
+    ap.add_argument("--decode-fusion",
+                    choices=["split", "fused", "looped"], default=None,
+                    help="override the plan's decode-layer stage "
+                         "granularity for the decode cells (the xla "
+                         "backend override keeps the granularity; fused "
+                         "stages dispatch their jnp oracles)")
     args = ap.parse_args()
     if args.plan and not args.arch:
         ap.error("--plan requires --arch (plan provenance pins one config)")
@@ -419,7 +425,7 @@ def main() -> int:
     plans: dict[str, plan_mod.ExecutionPlan] = {}
 
     def plan_for(arch: str) -> Optional[plan_mod.ExecutionPlan]:
-        if not (args.tune or args.plan):
+        if not (args.tune or args.plan or args.decode_fusion):
             return None
         if arch not in plans:
             cfg = configs.get(arch)
@@ -427,9 +433,17 @@ def main() -> int:
                 tuned = plan_mod.tune(cfg)
                 if args.plan:   # serve.py semantics: tune + save to --plan
                     tuned.save(args.plan)
-                plans[arch] = tuned
+                base = tuned
+            elif args.plan:
+                base = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
             else:
-                plans[arch] = plan_mod.ExecutionPlan.load(args.plan, cfg=cfg)
+                base = plan_mod.make_plan()
+            if args.decode_fusion is not None:
+                base = dataclasses.replace(
+                    base, decode_fusion=dataclasses.replace(
+                        base.decode_fusion,
+                        granularity=args.decode_fusion))
+            plans[arch] = base
         return plans[arch]
 
     failures = 0

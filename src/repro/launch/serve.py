@@ -44,6 +44,12 @@ step and doubles resident-page capacity at greedy-equivalent accuracy;
 fp8 (e4m3) matches the footprint with cheaper dequant but coarser
 mantissa. The summary reports bytes/page and total decode-read KV bytes
 so the savings are directly visible against a ``bf16`` run.
+
+``--decode-fusion split|fused|looped`` overrides the plan's decode-layer
+stage granularity (``DecodeFusionPlan``): ``fused`` collapses
+norm→QKV→rope and o_proj→residual into the fused stage kernels,
+``looped`` additionally runs the whole depth under one ``lax.scan``. The
+summary line reports the effective granularity as ``fusion=...``.
 """
 import argparse
 import sys
@@ -112,6 +118,13 @@ def _parse():
                          "int8/fp8 pages carry per-(page, head) scales and "
                          "are dequantized inside the attention kernels; "
                          "default: the plan's paged.kv_dtype")
+    ap.add_argument("--decode-fusion", choices=["split", "fused", "looped"],
+                    default=None,
+                    help="decode-layer stage granularity: split = the "
+                         "per-op chain, fused = fused ingest/epilogue "
+                         "stage kernels per layer, looped = fused stages "
+                         "under one depth scan; default: the plan's "
+                         "decode_fusion.granularity")
     ap.add_argument("--rounds", type=int, default=1,
                     help="resubmit every prompt this many times — round "
                          ">= 2 models returning conversations hitting the "
@@ -182,6 +195,7 @@ def main() -> int:
                  host_pages=args.host_pages,
                  session_cache=args.session_cache or None,
                  kv_dtype=args.kv_dtype,
+                 decode_fusion=args.decode_fusion,
                  seed=args.seed)
     rng = np.random.default_rng(args.seed)
     sp = SamplingParams(max_new_tokens=args.max_new,
@@ -205,6 +219,7 @@ def main() -> int:
     line = (f"served {len(out)} requests, {total_tokens} tokens in {dt:.2f}s "
             f"({total_tokens / dt:.1f} tok/s, {eng.ticks} decode ticks, "
             f"{eng.scheduler.name} scheduler, "
+            f"fusion={eng.decode_fusion}, "
             f"{eng.stats.preemptions} preemptions")
     if eng.pool is not None:
         util = eng.stats.peak_pages_used / eng.pool.num_pages

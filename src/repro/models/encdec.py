@@ -223,7 +223,9 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                block_tables=None, unroll: bool = False):
+                block_tables=None, positions=None, unroll: bool = False):
+    # `positions` is accepted for the uniform engine operand; the decoder
+    # write position always equals `lengths`, so the operand is unused
     assert block_tables is None, "enc-dec cross/self cache has no paged layout"
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])

@@ -204,21 +204,59 @@ def attention_block(
     return ctx.matmul(o, p["wo"])
 
 
-def attention_decode_block(
-    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
-    cache_k: jax.Array, cache_v: jax.Array, lengths: jax.Array,
-    *, use_rope: bool = True,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One-token decode with KV cache.
+# --- decode-layer stage boundaries -----------------------------------------
+#
+# One decode layer is four explicit stages a fusion backend can claim
+# (DecodeFusionPlan.granularity, see repro.core.plan):
+#
+#   A. ingest   — norm → QKV → bias → rope          (decode_ingest)
+#   B. attend   — KV scatter → decode attention      (decode_attend[_paged])
+#   C. epilogue — o_proj → residual add              (decode_epilogue)
+#   D. mlp      — norm → gate/up → act → down → res  (decode_mlp)
+#
+# `split` composes each stage from today's op chain; `fused`/`looped`
+# dispatch the A, C and D seams through ops.decode_ingest /
+# ops.oproj_residual / ops.ffn_norm (one kernel per seam on the Pallas
+# backend, the bit-identical oracle composition on XLA). Stage B keeps
+# its own plan-governed dispatch (attention scheme/paging/quantization
+# are orthogonal axes).
 
-    x: (B, 1, D); cache_k/v: (B, S, HK, Dh); lengths: (B,) current lengths.
-    Returns (out (B,1,D), new_cache_k, new_cache_v).
+
+def decode_ingest(
+    ctx: LayerCtx, norm_p: Params, p: Params, x: jax.Array,
+    position: jax.Array, *, use_rope: bool = True,
+):
+    """Stage A: pre-attention ingest on the residual stream.
+
+    x: (B, 1, D) un-normed; position: (B,). Returns q (B,1,HQ,Dh),
+    k/v (B,1,HK,Dh). The fused seam claims rmsnorm models only —
+    layernorm families keep the split composition (documented fallback).
     """
     cfg = ctx.cfg
-    b = x.shape[0]
-    q, k, v = attention_qkv(
-        ctx, p, x, position[:, None], use_rope=use_rope
-    )  # q: (B,1,HQ,Dh), k/v: (B,1,HK,Dh)
+    if (ctx.plan.decode_fusion.granularity != "split"
+            and cfg.norm == "rmsnorm"):
+        q, k, v = ops.decode_ingest(
+            x, norm_p["scale"], p["wq"], p["wk"], p["wv"], position,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            use_rope=use_rope,
+            bq=p.get("bq"), bk=p.get("bk"), bv=p.get("bv"),
+            plan=ctx.plan,
+        )
+        return (ctx.shard(q, "act_qkv"), ctx.shard(k, "act_kv"),
+                ctx.shard(v, "act_kv"))
+    h = norm(cfg, norm_p, x)
+    return attention_qkv(ctx, p, h, position[:, None], use_rope=use_rope)
+
+
+def decode_attend(
+    ctx: LayerCtx, q: jax.Array, k: jax.Array, v: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array, lengths: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage B (dense layout): append this token's KV at each row's
+    length, attend over the cache. Returns (o (B,1,HQ*Dh), new caches)."""
+    cfg = ctx.cfg
+    b = q.shape[0]
     # single-token q/k/v are tiny: replicate over `model` (the sharded
     # resource is the cache sequence — T1's split-KV layout)
     k_new = ctx.shard(k[:, 0], "act_decode_rep")
@@ -241,6 +279,56 @@ def attention_decode_block(
             shard=ctx.shard,
         )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
+    return o, cache_k, cache_v
+
+
+def decode_epilogue(ctx: LayerCtx, p: Params, o: jax.Array,
+                    resid: jax.Array) -> jax.Array:
+    """Stage C: ``resid + o @ wo`` — one fused dispatch when claimed."""
+    if ctx.plan.decode_fusion.granularity != "split":
+        return ops.oproj_residual(o, p["wo"], resid, plan=ctx.plan)
+    return resid + ctx.matmul(o, p["wo"])
+
+
+def decode_mlp(ctx: LayerCtx, norm_p: Params, p: Params,
+               x: jax.Array) -> jax.Array:
+    """Stage D: the full MLP half — mlp_norm → gate/up → activation →
+    down-projection → residual add.
+
+    When claimed, two fused dispatches: ``ops.ffn_norm`` (norm pulled
+    inside the gate/up pair) and ``ops.oproj_residual`` reused for
+    ``x + h @ w_down`` (the same GEMM-into-residual shape as stage C).
+    The seam claims rmsnorm + glu families only — others keep the split
+    composition (same documented fallback as stage A).
+    """
+    cfg = ctx.cfg
+    if (ctx.plan.decode_fusion.granularity != "split"
+            and cfg.norm == "rmsnorm"
+            and cfg.activation in ("swiglu", "geglu")):
+        h = ops.ffn_norm(x, norm_p["scale"], p["w_gate"], p["w_up"],
+                         activation=cfg.activation, plan=ctx.plan)
+        h = ctx.shard(h, "act_ffn")
+        return ops.oproj_residual(h, p["w_down"], x, plan=ctx.plan)
+    h = norm(cfg, norm_p, x)
+    return x + mlp_block(ctx, p, h)
+
+
+def attention_decode_block(
+    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array, lengths: jax.Array,
+    *, use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with KV cache (split stage composition — callers
+    that norm outside and own the residual, e.g. encdec, use this).
+
+    x: (B, 1, D); cache_k/v: (B, S, HK, Dh); lengths: (B,) current lengths.
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    q, k, v = attention_qkv(
+        ctx, p, x, position[:, None], use_rope=use_rope
+    )  # q: (B,1,HQ,Dh), k/v: (B,1,HK,Dh)
+    o, cache_k, cache_v = decode_attend(ctx, q, k, v, cache_k, cache_v,
+                                        lengths)
     return ctx.matmul(o, p["wo"]), cache_k, cache_v
 
 
@@ -286,32 +374,18 @@ def _paged_scatter_chunk(pool: jax.Array, new: jax.Array,
     return pool.at[phys, pos % ps].set(new.astype(pool.dtype), mode="drop")
 
 
-def attention_decode_block_paged(
-    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+def decode_attend_paged(
+    ctx: LayerCtx, q: jax.Array, k: jax.Array, v: jax.Array,
     pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
-    lengths: jax.Array, *, use_rope: bool = True, decode_groups=None,
+    lengths: jax.Array, *, decode_groups=None,
     k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None,
            jax.Array | None]:
-    """One-token decode against a block-paged KV cache.
-
-    x: (B, 1, D); pool_k/v: (NP, PS, HK, Dh) shared page pools;
-    block_tables: (B, NB) int32. Empty slots in a partially occupied batch
-    write nothing — their block-table entries are the out-of-bounds
-    sentinel, so the scatter drops them. ``decode_groups`` (a
-    :class:`~repro.kernels.group_attention.DecodeGroups`) activates the
-    prefix-shared grouped attention path.
-
-    With ``k_scale``/``v_scale`` (the (NP, HK) f32 step pools of a
-    quantized layout) the new token is appended through the quantized
-    scatter and attention dequantizes in place; returns the updated scale
-    pools alongside the code pools (``None``/``None`` when bf16).
-    """
+    """Stage B (paged layout): append this token's KV through the block
+    tables (quantized scatter when scale pools ride along), attend over
+    the page pool. Returns (o (B,1,HQ*Dh), pools, scale pools)."""
     cfg = ctx.cfg
-    b = x.shape[0]
-    q, k, v = attention_qkv(
-        ctx, p, x, position[:, None], use_rope=use_rope
-    )
+    b = q.shape[0]
     ones = jnp.ones_like(lengths)
     if k_scale is not None:
         from repro.serving import kvquant  # deferred: serving imports models
@@ -335,6 +409,38 @@ def attention_decode_block_paged(
         k_scale=k_scale, v_scale=v_scale,
     )
     o = ctx.shard(o.reshape(b, 1, cfg.q_dim), "act_attn_out")
+    return o, pool_k, pool_v, k_scale, v_scale
+
+
+def attention_decode_block_paged(
+    ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
+    pool_k: jax.Array, pool_v: jax.Array, block_tables: jax.Array,
+    lengths: jax.Array, *, use_rope: bool = True, decode_groups=None,
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None,
+           jax.Array | None]:
+    """One-token decode against a block-paged KV cache (split stage
+    composition).
+
+    x: (B, 1, D); pool_k/v: (NP, PS, HK, Dh) shared page pools;
+    block_tables: (B, NB) int32. Empty slots in a partially occupied batch
+    write nothing — their block-table entries are the out-of-bounds
+    sentinel, so the scatter drops them. ``decode_groups`` (a
+    :class:`~repro.kernels.group_attention.DecodeGroups`) activates the
+    prefix-shared grouped attention path.
+
+    With ``k_scale``/``v_scale`` (the (NP, HK) f32 step pools of a
+    quantized layout) the new token is appended through the quantized
+    scatter and attention dequantizes in place; returns the updated scale
+    pools alongside the code pools (``None``/``None`` when bf16).
+    """
+    q, k, v = attention_qkv(
+        ctx, p, x, position[:, None], use_rope=use_rope
+    )
+    o, pool_k, pool_v, k_scale, v_scale = decode_attend_paged(
+        ctx, q, k, v, pool_k, pool_v, block_tables, lengths,
+        decode_groups=decode_groups, k_scale=k_scale, v_scale=v_scale,
+    )
     return ctx.matmul(o, p["wo"]), pool_k, pool_v, k_scale, v_scale
 
 

@@ -307,17 +307,21 @@ def make_block(groups: int = 0, capacity_factor: float = 1.25):
 def make_decode_block(groups: int = 0):
     def decode_block(ctx: LayerCtx, p: Params, x, position, cache_i, lengths,
                      block_tables=None, decode_groups=None):
+        # same ingest → attend → epilogue stage boundaries as the dense
+        # family (repro.models.layers); only the FFN half differs — the
+        # routed expert dispatch is not a fusable seam, so the MoE block
+        # shares the attention-side fused stages and keeps its own tail
         cfg = ctx.cfg
-        h = L.norm(cfg, p["attn_norm"], x)
+        q, k, v = L.decode_ingest(ctx, p["attn_norm"], p["attn"], x,
+                                  position)
         if block_tables is None:
-            a, ck, cv = L.attention_decode_block(
-                ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
-                lengths
+            o, ck, cv = L.decode_attend(
+                ctx, q, k, v, cache_i["k"], cache_i["v"], lengths
             )
             new_cache = {"k": ck, "v": cv}
         else:
-            a, ck, cv, ks, vs = L.attention_decode_block_paged(
-                ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+            o, ck, cv, ks, vs = L.decode_attend_paged(
+                ctx, q, k, v, cache_i["k"], cache_i["v"],
                 block_tables, lengths, decode_groups=decode_groups,
                 k_scale=cache_i.get("k_scale"),
                 v_scale=cache_i.get("v_scale"),
@@ -326,7 +330,7 @@ def make_decode_block(groups: int = 0):
             if ks is not None:
                 new_cache["k_scale"] = ks
                 new_cache["v_scale"] = vs
-        x = x + a
+        x = L.decode_epilogue(ctx, p["attn"], o, x)
         h = L.norm(cfg, p["mlp_norm"], x)
         y, _ = moe_block(ctx, p["moe"], h, groups=groups or ctx.moe_groups,
                          zero_drop=True)
@@ -437,11 +441,11 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                block_tables=None, decode_groups=None, unroll: bool = False,
-                groups: int = 0):
+                block_tables=None, decode_groups=None, positions=None,
+                unroll=None, groups: int = 0):
     return tfm.decode_step(
         ctx, params, tokens, cache, lengths, block_tables=block_tables,
-        decode_groups=decode_groups, unroll=unroll,
+        decode_groups=decode_groups, positions=positions, unroll=unroll,
         decode_block_fn=make_decode_block(groups=groups),
     )
 

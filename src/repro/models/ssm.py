@@ -343,7 +343,9 @@ def prefill(ctx: LayerCtx, params: Params, tokens, lengths, cache, *,
 
 
 def decode_step(ctx: LayerCtx, params: Params, tokens, cache, lengths, *,
-                block_tables=None, unroll: bool = False):
+                block_tables=None, positions=None, unroll: bool = False):
+    # `positions` is accepted for the uniform engine operand; recurrent
+    # state has no rope, the operand is unused
     assert block_tables is None, "ssm state cache has no paged layout"
     cfg = ctx.cfg
     x = L.embed(ctx, params, tokens[:, None])[:, 0]  # (B, D)

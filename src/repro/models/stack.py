@@ -23,12 +23,28 @@ def num_layers_of(layers_params) -> int:
     return jax.tree_util.tree_leaves(layers_params)[0].shape[0]
 
 
+def unstack(tree):
+    """Stacked-L pytree -> list of L per-layer pytrees.
+
+    ``a[i]`` slicing only — no copy under jit, bitwise round-trip with
+    :func:`restack` (the decode-fusion unrolled path relies on this:
+    per-layer slabs must hold exactly the scanned values).
+    """
+    return [jax.tree.map(lambda a: a[i], tree)
+            for i in range(num_layers_of(tree))]
+
+
+def restack(trees):
+    """List of L per-layer pytrees -> stacked-L pytree (``jnp.stack``
+    per leaf). Inverse of :func:`unstack`, bitwise."""
+    return jax.tree.map(lambda *a: jnp.stack(a), *trees)
+
+
 def run_stack(layers_params, x, block_fn: Callable, *, unroll: bool = False):
     """Returns (x, total_aux)."""
     if unroll:
         aux = jnp.zeros((), jnp.float32)
-        for i in range(num_layers_of(layers_params)):
-            p_i = jax.tree.map(lambda a: a[i], layers_params)
+        for p_i in unstack(layers_params):
             x, a = block_fn(p_i, x)
             aux = aux + a
         return x, aux
@@ -50,12 +66,10 @@ def run_stack_collect(layers_params, x, block_fn: Callable,
     per-layer outputs are stacked (used by prefill to build the KV cache)."""
     if unroll:
         outs = []
-        for i in range(num_layers_of(layers_params)):
-            p_i = jax.tree.map(lambda a: a[i], layers_params)
+        for p_i in unstack(layers_params):
             x, o = block_fn(p_i, x)
             outs.append(o)
-        stacked = jax.tree.map(lambda *a: jnp.stack(a), *outs)
-        return x, stacked
+        return x, restack(outs)
 
     def layer_scan_body(carry, p_i):
         x, o = block_fn(p_i, carry)
@@ -69,13 +83,10 @@ def run_stack_cached(layers_params, x, cache, block_fn: Callable,
     """Returns (x, new_cache) — cache leaves have leading L axis."""
     if unroll:
         news = []
-        for i in range(num_layers_of(layers_params)):
-            p_i = jax.tree.map(lambda a: a[i], layers_params)
-            c_i = jax.tree.map(lambda a: a[i], cache)
+        for p_i, c_i in zip(unstack(layers_params), unstack(cache)):
             x, c_new = block_fn(p_i, x, c_i)
             news.append(c_new)
-        stacked = jax.tree.map(lambda *a: jnp.stack(a), *news)
-        return x, stacked
+        return x, restack(news)
 
     def layer_scan_body(carry, xs):
         p_i, c_i = xs

@@ -80,17 +80,21 @@ def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
     The discriminator is resolved at trace time — each engine layout
     compiles exactly one path. ``decode_groups`` (paged only) switches to
     the prefix-shared grouped attention path.
+
+    The layer runs as three explicit stage boundaries (ingest → attend →
+    epilogue, see :mod:`repro.models.layers`); the plan's
+    ``decode_fusion`` granularity decides whether the ingest and
+    epilogue seams are fused dispatches or the split op chain.
     """
-    cfg = ctx.cfg
-    h = L.norm(cfg, p["attn_norm"], x)
+    q, k, v = L.decode_ingest(ctx, p["attn_norm"], p["attn"], x, position)
     if block_tables is None:
-        a, ck, cv = L.attention_decode_block(
-            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"], lengths
+        o, ck, cv = L.decode_attend(
+            ctx, q, k, v, cache_i["k"], cache_i["v"], lengths
         )
         new_cache = {"k": ck, "v": cv}
     else:
-        a, ck, cv, ks, vs = L.attention_decode_block_paged(
-            ctx, p["attn"], h, position, cache_i["k"], cache_i["v"],
+        o, ck, cv, ks, vs = L.decode_attend_paged(
+            ctx, q, k, v, cache_i["k"], cache_i["v"],
             block_tables, lengths, decode_groups=decode_groups,
             k_scale=cache_i.get("k_scale"), v_scale=cache_i.get("v_scale"),
         )
@@ -98,9 +102,8 @@ def decode_block(ctx: LayerCtx, p: Params, x: jax.Array, position: jax.Array,
         if ks is not None:   # quantized layout: scale pools ride along
             new_cache["k_scale"] = ks
             new_cache["v_scale"] = vs
-    x = x + a
-    h = L.norm(cfg, p["mlp_norm"], x)
-    x = x + L.mlp_block(ctx, p["mlp"], h)
+    x = L.decode_epilogue(ctx, p["attn"], o, x)
+    x = L.decode_mlp(ctx, p["mlp_norm"], p["mlp"], x)
     return ctx.shard(x, "act_resid"), new_cache
 
 
@@ -279,7 +282,8 @@ def prefill(
 def decode_step(
     ctx: LayerCtx, params: Params, tokens: jax.Array, cache: dict,
     lengths: jax.Array, *, block_tables: Optional[jax.Array] = None,
-    decode_groups=None, unroll: bool = False,
+    decode_groups=None, positions: Optional[jax.Array] = None,
+    unroll: Optional[bool] = None,
     decode_block_fn: Callable = decode_block,
 ):
     """One decode step. tokens: (B,) -> logits (B, V_padded), new cache.
@@ -290,10 +294,22 @@ def decode_step(
     scan carries the pool, the table rides in closure). ``decode_groups``
     rides along the same way and activates prefix-shared grouped attention
     on the paged layout.
+
+    ``positions`` is the per-row absolute position operand (defaults to
+    ``lengths``; the engine passes its device-cached copy). ``unroll=None``
+    lets the plan's ``decode_fusion`` granularity pick the depth-loop
+    strategy: ``fused`` python-unrolls into L traced layer bodies;
+    ``split``/``looped`` run the stacked depth under one ``lax.scan``
+    (an explicit bool overrides the plan). Scan and unroll apply the same
+    per-layer math to the same leading-axis slabs, so the choice never
+    changes outputs — bit-identity across granularities is tier-1
+    enforced.
     """
     cfg = ctx.cfg
+    if unroll is None:
+        unroll = ctx.plan.decode_fusion.granularity == "fused"
     x = L.embed(ctx, params, tokens[:, None])  # (B, 1, D)
-    position = lengths
+    position = lengths if positions is None else positions
 
     x, new_cache = stack.run_stack_cached(
         params["layers"], x, cache,

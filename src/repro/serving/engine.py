@@ -95,7 +95,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.core.plan import DEFAULT_PLAN, KV_DTYPES, ExecutionPlan
+from repro.core.plan import (DEFAULT_PLAN, FUSION_MODES, KV_DTYPES,
+                             ExecutionPlan)
 from repro.kernels import quant
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
@@ -172,6 +173,7 @@ class Engine:
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
         kv_dtype: Optional[str] = None,
+        decode_fusion: Optional[str] = None,
         prefix_sharing: bool = False,
         host_pages: Optional[int] = None,
         session_cache: Optional[bool] = None,
@@ -182,6 +184,19 @@ class Engine:
         self.cfg = cfg
         self.api = get_model(cfg)
         self.plan = plan if plan is not None else DEFAULT_PLAN
+        # decode-stage fusion granularity: explicit arg wins, else the
+        # plan's tuned knob rides along untouched (same precedence as
+        # kv_dtype). The override lands *in the plan* because the model
+        # stages read ctx.plan.decode_fusion at trace time.
+        if decode_fusion is not None:
+            if decode_fusion not in FUSION_MODES:
+                raise ValueError(
+                    f"decode_fusion {decode_fusion!r} not in {FUSION_MODES}")
+            self.plan = dataclasses.replace(
+                self.plan,
+                decode_fusion=dataclasses.replace(
+                    self.plan.decode_fusion, granularity=decode_fusion))
+        self.decode_fusion = self.plan.decode_fusion.granularity
         self.ctx = LayerCtx(cfg=cfg, plan=self.plan)
         self.params = params
         self.num_slots = num_slots
@@ -302,8 +317,8 @@ class Engine:
         # for dense) is just another argument, so dense and paged engines
         # trace the same lambdas
         self._decode = jax.jit(
-            lambda p, t, c, bt, le: self.api.decode_step(
-                self.ctx, p, t, c, le, block_tables=bt),
+            lambda p, t, c, bt, le, po: self.api.decode_step(
+                self.ctx, p, t, c, le, block_tables=bt, positions=po),
             donate_argnums=(2,),
         )
         self._chunk = jax.jit(
@@ -339,8 +354,9 @@ class Engine:
             cache_kind == "paged" and prefix_sharing
             and self.plan.paged.decode_group == "grouped")
         self._decode_grouped = jax.jit(
-            lambda p, t, c, bt, le, gr: self.api.decode_step(
-                self.ctx, p, t, c, le, block_tables=bt, decode_groups=gr),
+            lambda p, t, c, bt, le, gr, po: self.api.decode_step(
+                self.ctx, p, t, c, le, block_tables=bt, decode_groups=gr,
+                positions=po),
             donate_argnums=(2,),
         ) if self._group_decode else None
         # one page's K+V slab across all layers — the unit of both the
@@ -853,6 +869,7 @@ class Engine:
         if not self.by_slot:
             return []
         lengths = self.slots.lengths_device()
+        positions = self.slots.positions_device()
         tokens = np.zeros((self.num_slots,), np.int32)
         for idx, state in self.by_slot.items():
             tokens[idx] = state.tokens[-1]
@@ -861,14 +878,15 @@ class Engine:
         if gplan is not None:
             logits, self.cache = self._decode_grouped(
                 self.params, jnp.asarray(tokens), self.cache,
-                self.slots.block_tables(), lengths, gplan.operands())
+                self.slots.block_tables(), lengths, gplan.operands(),
+                positions)
             self.stats.grouped_requests += gplan.n_grouped
             self.stats.prefix_kv_bytes_saved += (
                 gplan.pages_deduped * self._kv_bytes_per_page)
         else:
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(tokens), self.cache,
-                self.slots.block_tables(), lengths)
+                self.slots.block_tables(), lengths, positions)
         if self.pool is not None:
             # decode streams every resident page once per tick, at the
             # stored width — the term kv_dtype shrinks

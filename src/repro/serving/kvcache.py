@@ -45,6 +45,12 @@ class SlotManager:
         # the device-resident buffer instead of re-uploading it
         self._len_dev = None
         self._len_dirty = True
+        # the rope-position operand gets its own buffer under the same
+        # discipline: today positions == lengths for every family, but
+        # the decode step takes it as an explicit operand (the fused
+        # ingest kernel consumes it directly), so it is cached separately
+        self._pos_dev = None
+        self._pos_dirty = True
 
     # hooks overridden by the paged manager (blockpool.PagedSlotManager)
     def _empty_slot(self) -> Slot:
@@ -73,12 +79,14 @@ class SlotManager:
                     return None
                 self.slots[i] = new
                 self._len_dirty = True
+                self._pos_dirty = True
                 return i
         return None
 
     def release(self, idx: int) -> None:
         self.slots[idx] = self._empty_slot()
         self._len_dirty = True
+        self._pos_dirty = True
 
     def ensure(self, idx: int, positions: int) -> bool:
         """Grow backing storage for slot ``idx`` to ``positions`` KV
@@ -118,6 +126,25 @@ class SlotManager:
             self._len_dirty = False
         return self._len_dev
 
+    def positions_device(self):
+        """The (num_slots,) int32 rope-position operand as a cached
+        device array, same invalidation discipline as
+        :meth:`lengths_device`. The next decode token lands at position
+        ``length`` for every family, so the values equal the lengths —
+        but the decode step takes positions as an explicit operand (the
+        fused ingest stage consumes it directly), so the buffer is
+        cached and uploaded independently."""
+        if self._pos_dirty or self._pos_dev is None:
+            import jax.numpy as jnp
+            self._pos_dev = jnp.asarray(self.positions())
+            self._pos_dirty = False
+        return self._pos_dev
+
+    def positions(self) -> np.ndarray:
+        """Host-side rope positions for the next decode token (== the
+        slot lengths; free slots report 0)."""
+        return np.array([s.length for s in self.slots], np.int32)
+
     def active(self) -> np.ndarray:
         return np.array([not s.free for s in self.slots], np.bool_)
 
@@ -129,4 +156,5 @@ class SlotManager:
         if wrote_kv:
             s.length += 1
             self._len_dirty = True
+            self._pos_dirty = True
         s.generated += 1

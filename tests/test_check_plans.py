@@ -89,6 +89,20 @@ def test_catches_invalid_knob_value(tmp_path):
     assert findings and any("schema" in f for f in findings)
 
 
+def test_catches_missing_decode_fusion(tmp_path):
+    def m(doc):
+        del doc["ops"]["decode_fusion"]
+    findings = check_plans.check_plan(_mutate(tmp_path, m))
+    assert any("decode_fusion" in f for f in findings)
+
+
+def test_catches_invalid_fusion_granularity(tmp_path):
+    def m(doc):
+        doc["ops"]["decode_fusion"]["granularity"] = "megakernel"
+    findings = check_plans.check_plan(_mutate(tmp_path, m))
+    assert findings and any("schema" in f for f in findings)
+
+
 def test_catches_missing_provenance(tmp_path):
     def m(doc):
         del doc["provenance"]

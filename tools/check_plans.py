@@ -20,6 +20,9 @@ linter runs the same checks ahead of time, over every committed plan:
   * the paged op records an explicit ``kv_dtype`` (pre-quantization
     documents default to bf16 on load, but committed artifacts must say
     what they tuned for);
+  * the ``decode_fusion`` op records an explicit ``granularity`` in
+    ``FUSION_MODES`` (pre-fusion documents default to split on load —
+    same rule: committed artifacts must say what they tuned);
   * the filename matches ``default_plan_path`` for its provenance.
 
 Exit status 0 = every plan clean, 1 = at least one finding (one line per
@@ -41,7 +44,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 from repro import configs, hardware  # noqa: E402
 from repro.core import plan as plan_mod  # noqa: E402
 from repro.core.plan import (  # noqa: E402
-    KV_DTYPES, PLAN_VERSION, ExecutionPlan, PlanError,
+    FUSION_MODES, KV_DTYPES, PLAN_VERSION, ExecutionPlan, PlanError,
 )
 
 
@@ -81,6 +84,15 @@ def check_plan(path: str) -> list:
     elif paged_doc["kv_dtype"] not in KV_DTYPES:
         findings.append(f"kv_dtype {paged_doc['kv_dtype']!r} "
                         f"not in {KV_DTYPES}")
+
+    fusion_doc = doc.get("ops", {}).get("decode_fusion", {})
+    if "granularity" not in fusion_doc:
+        findings.append("decode_fusion op missing explicit granularity "
+                        "(legacy document — retune)")
+    elif fusion_doc["granularity"] not in FUSION_MODES:
+        findings.append(f"decode_fusion granularity "
+                        f"{fusion_doc['granularity']!r} "
+                        f"not in {FUSION_MODES}")
 
     prov = plan.provenance
     if prov is None:
