@@ -34,7 +34,7 @@ def main() -> int:
                             decode_fusion, dispatch_table, flat_gemm_sweep,
                             group_decode, kv_quant, kv_tiers, paged_decode,
                             prefill_engine, prefix_sharing, roofline_report,
-                            scheduler_sweep)
+                            scheduler_sweep, weight_quant)
 
     results = {}
     for name, mod in [
@@ -50,6 +50,7 @@ def main() -> int:
         ("group_decode", group_decode),
         ("kv_tiers", kv_tiers),
         ("kv_quant", kv_quant),
+        ("weight_quant", weight_quant),
         ("prefill_engine", prefill_engine),
         ("roofline_report", roofline_report),
     ]:

@@ -1,0 +1,217 @@
+"""Quantized GEMM weights: bytes per decode tick, footprint, accuracy.
+
+After paging, grouping, tiering, and KV quantization, the decode tick's
+dominant HBM stream is the layer weight slab — read once per tick at
+M = batch <= ~8, squarely in the paper's memory-bound flat-GEMM regime.
+This benchmark measures the three claims behind
+``MatmulPlan.weight_dtype``:
+
+  * **weight bytes per decode tick** — the same greedy workload served
+    by engines that differ only in ``weight_dtype``;
+    ``EngineStats.weight_bytes_decode_read`` counts the true stored
+    bytes (int8/fp8 codes *plus* the per-output-channel f32 scales)
+    behind every tick's GEMM reads, so the int8-vs-bf16 ratio is the
+    measured, not theoretical, bandwidth saving. Asserted >= 1.9x.
+  * **resident param footprint at a fixed HBM budget** — for full-size
+    configs, :func:`repro.core.dispatch.param_bytes` (scale-inclusive)
+    per precision, and the KV pages the shrink frees under a fixed
+    device budget. Asserted >= 1.9x smaller for int8.
+  * **accuracy under the guard** — max |Δlogits| vs the bf16 baseline
+    over a teacher-forced greedy decode, asserted under the
+    dtype-derived tolerance from
+    :func:`repro.kernels.quant.logits_guard_tol` (the same guard the
+    kv_dtype axis enforces).
+
+Writes ``BENCH_wquant.json`` at the repo root (schema:
+{"bytes": [...], "footprint": [...], "accuracy": [...],
+ "weight_bytes_per_tick": {...}, "byte_reduction": {...},
+ "footprint_reduction": {...}, "max_abs_dlogits": {...},
+ "guard_atol": {...}, "config": {...}, "mode": ...}).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, write_artifact
+from repro import configs
+from repro.core import dispatch
+from repro.core.plan import make_plan
+from repro.kernels import quant
+from repro.models.api import get_model
+from repro.serving.engine import Engine
+from repro.serving.request import SamplingParams
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_wquant.json")
+
+MAX_NEW = 8
+
+
+def _dtypes() -> list:
+    out = ["bf16", "int8"]
+    if quant.fp8_supported():
+        out.append("fp8")
+    return out
+
+
+def _bytes_sweep(cfg, params, dtypes) -> list:
+    """Same workload, engines differing only in weight_dtype: measured
+    GEMM weight bytes behind the decode ticks."""
+    rng = np.random.default_rng(3)
+    sp = SamplingParams(max_new_tokens=MAX_NEW)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=40).astype(np.int32), sp)
+            for _ in range(4)]
+
+    widths = [8, 12, 16, 10]
+    print(fmt_row("w", "B/tick", "decode_W_B", "bytes_x", widths=widths))
+    rows, base = [], None
+    for wd in dtypes:
+        eng = Engine(cfg, params, num_slots=4, max_seq=256,
+                     plan=make_plan("xla"), weight_dtype=wd, seed=0)
+        eng.run([(p.copy(), s) for p, s in reqs])
+        row = dict(weight_dtype=wd,
+                   weight_bytes_per_tick=eng._weight_bytes_per_tick,
+                   weight_bytes_decode_read=(
+                       eng.stats.weight_bytes_decode_read),
+                   decode_ticks=eng.ticks)
+        if wd == "bf16":
+            base = row
+        row["bytes_per_tick_ratio"] = (base["weight_bytes_decode_read"]
+                                       / row["weight_bytes_decode_read"])
+        assert row["decode_ticks"] == base["decode_ticks"], \
+            "weight_dtype changed the tick count — workloads not comparable"
+        rows.append(row)
+        print(fmt_row(wd, row["weight_bytes_per_tick"],
+                      row["weight_bytes_decode_read"],
+                      f"{row['bytes_per_tick_ratio']:.2f}x", widths=widths))
+    for row in rows:
+        if row["weight_dtype"] != "bf16":
+            assert row["bytes_per_tick_ratio"] >= 1.9, row
+    return rows
+
+
+def _footprint(arch_names, dtypes, budget_bytes) -> list:
+    """Scale-inclusive resident param bytes per precision, and the KV
+    pages the shrink frees under a fixed device budget."""
+    widths = [12, 6, 14, 10, 12]
+    print(fmt_row("arch", "w", "param_B", "params_x", "freed_kv_pages",
+                  widths=widths))
+    rows = []
+    for name in arch_names:
+        cfg = configs.get(name)
+        kv_pb = dispatch.kv_page_bytes(cfg, page_size=64, kv_dtype="bf16")
+        base = None
+        for wd in dtypes:
+            pb = dispatch.param_bytes(cfg, wd)
+            if wd == "bf16":
+                base = pb
+            freed_pages = max(budget_bytes - pb, 0) // kv_pb \
+                - max(budget_bytes - base, 0) // kv_pb
+            row = dict(arch=name, weight_dtype=wd, param_bytes=pb,
+                       footprint_ratio=base / pb,
+                       freed_kv_pages=int(freed_pages))
+            rows.append(row)
+            print(fmt_row(name, wd, pb, f"{row['footprint_ratio']:.2f}x",
+                          row["freed_kv_pages"], widths=widths))
+            if wd == "int8":
+                assert row["footprint_ratio"] >= 1.9, row
+    return rows
+
+
+def _accuracy(cfg, params, dtypes, steps) -> list:
+    """Teacher-forced decode: max |Δlogits| vs bf16 under the guard.
+
+    Every engine sees the identical token stream (no sampling feedback),
+    so the logit deltas isolate the weight representation."""
+    api = get_model(cfg)
+    num_slots = 2
+    rng = np.random.default_rng(5)
+    toks = rng.integers(1, cfg.vocab_size,
+                        size=(steps, num_slots)).astype(np.int32)
+
+    from repro.models.layers import LayerCtx
+
+    per_dtype = {}
+    for wd in dtypes:
+        eng = Engine(cfg, params, num_slots=num_slots,
+                     max_seq=steps + 8, plan=make_plan("xla"),
+                     weight_dtype=wd, seed=0)
+        ctx = LayerCtx(cfg=cfg, plan=eng.plan)
+        cache = eng.cache
+        lengths = jnp.zeros((num_slots,), jnp.int32)
+        trace = []
+        for t in range(steps):
+            logits, cache = api.decode_step(
+                ctx, eng.params, jnp.asarray(toks[t]), cache, lengths)
+            lengths = lengths + 1
+            trace.append(np.asarray(logits, np.float32))
+        per_dtype[wd] = np.stack(trace)
+
+    scale = float(np.abs(per_dtype["bf16"]).max())
+    widths = [8, 14, 14, 8]
+    print(fmt_row("w", "max_dlogits", "guard_atol", "pass", widths=widths))
+    rows = []
+    for wd in dtypes:
+        if wd == "bf16":
+            continue
+        dl = float(np.abs(per_dtype[wd] - per_dtype["bf16"]).max())
+        atol = quant.logits_guard_tol(quant.spec_for(wd)) * max(scale, 1.0)
+        ok = dl <= atol
+        rows.append(dict(weight_dtype=wd, max_dlogits=dl, guard_atol=atol,
+                         logit_scale=scale, within_guard=ok))
+        print(fmt_row(wd, f"{dl:.4f}", f"{atol:.4f}", ok, widths=widths))
+        assert ok, f"{wd} decode logits exceed the accuracy guard"
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    print("\n== weight_quant: weight bytes / footprint / accuracy "
+          "per weight_dtype ==")
+    cfg = configs.smoke(configs.get("qwen2-0.5b"))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+
+    dtypes = _dtypes()
+    archs = ("qwen2-0.5b",) if quick else ("qwen2-0.5b", "llama2-7b")
+    steps = 8 if quick else 16
+    budget = 4 << 30   # 4 GiB device budget (params + KV pages)
+
+    rows_bytes = _bytes_sweep(cfg, params, dtypes)
+    rows_fp = _footprint(archs, dtypes, budget)
+    rows_acc = _accuracy(cfg, params, dtypes, steps)
+
+    result = {
+        "config": dict(arch=cfg.name, max_new=MAX_NEW, dtypes=dtypes,
+                       budget_bytes=budget, teacher_forced_steps=steps,
+                       fp8_supported=quant.fp8_supported()),
+        "bytes": rows_bytes,
+        "footprint": rows_fp,
+        "accuracy": rows_acc,
+        # flat summaries, keyed by dtype (the acceptance-criteria view)
+        "weight_bytes_per_tick": {
+            r["weight_dtype"]: r["weight_bytes_per_tick"]
+            for r in rows_bytes},
+        "byte_reduction": {r["weight_dtype"]: r["bytes_per_tick_ratio"]
+                           for r in rows_bytes},
+        "footprint_reduction": {r["weight_dtype"]: r["footprint_ratio"]
+                                for r in rows_fp
+                                if r["arch"] == archs[0]},
+        "max_abs_dlogits": {r["weight_dtype"]: r["max_dlogits"]
+                            for r in rows_acc},
+        "guard_atol": {r["weight_dtype"]: r["guard_atol"]
+                       for r in rows_acc},
+    }
+    path = write_artifact(OUT_PATH, result, quick)
+    print(f"  [weight_quant -> {os.path.normpath(path)}]")
+    return result
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    run()
+    print(f"[{time.time()-t0:.1f}s]")

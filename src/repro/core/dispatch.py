@@ -93,6 +93,24 @@ _PIPELINE_FILL_S = 2e-6
 # them in as negligible (4 bytes vs page_size*head_dim codes).
 KV_DTYPE_BYTES = {"bf16": 2.0, "int8": 1.0, "fp8": 1.0}
 
+# bytes per stored GEMM weight element by ``MatmulPlan.weight_dtype`` —
+# the weight-stream twin of :data:`KV_DTYPE_BYTES`. Decode-phase GEMMs
+# are flat (M = batch) and memory-bound on the K×N weight read, so this
+# factor scales the dominant term of every decode roofline; quantized
+# weights also carry one f32 scale per output channel, which
+# :func:`param_bytes` and :func:`predict_flat_gemm_time` account exactly.
+WEIGHT_DTYPE_BYTES = {"bf16": 2.0, "int8": 1.0, "fp8": 1.0}
+
+# dtype-derived logits-closeness tolerance per weight_dtype — the
+# plain-number mirror of ``repro.kernels.quant.logits_guard_tol`` over
+# ``quant.spec_for`` (this module stays jax-free; a tier-1 test asserts
+# the two stay in sync). ``"bf16"`` is the bitwise path: zero budget.
+WEIGHT_GUARD_TOL = {
+    "bf16": 0.0,
+    "int8": 64 * (0.5 / 127.0),
+    "fp8": 64 * 2.0 ** -4,
+}
+
 
 def _mem_time(m_eff: int, k: int, n: int, dtype_bytes: int,
               spec: hardware.HardwareSpec) -> float:
@@ -136,6 +154,33 @@ def predict_time(
         compute = 2.0 * m_pad * k * n / spec.peak_flops_bf16
         return max(mem, compute) + 1e-6   # mature-library epilogue edge
     raise ValueError(impl)
+
+
+def predict_flat_gemm_time(
+    m: int, k: int, n: int, *,
+    weight_dtype: str = "bf16",
+    dtype_bytes: int = 2,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+) -> float:
+    """ImplB roofline with the weight stream priced at its stored width.
+
+    Equal to ``predict_time(Impl.FLAT_GEMM, ...)`` at
+    ``weight_dtype="bf16"``. Quantized dtypes shrink only the K×N weight
+    term (:data:`WEIGHT_DTYPE_BYTES`) and add the (N,) f32
+    per-output-channel scale read — exactly the operands the quantized
+    kernel streams; the activation read and output write keep
+    ``dtype_bytes``. The compute term is unchanged: dequant rides the
+    existing f32 accumulator epilogue and the codes feed the MXU at the
+    activation dtype.
+    """
+    wb = WEIGHT_DTYPE_BYTES[weight_dtype]
+    m_pad = max(8, -(-m // 8) * 8)
+    scale_bytes = 0 if weight_dtype == "bf16" else n * 4
+    bytes_moved = ((m_pad * k + m_pad * n) * dtype_bytes
+                   + k * n * wb + scale_bytes)
+    mem = bytes_moved / spec.hbm_bw
+    compute = 2.0 * m_pad * k * n / spec.peak_flops_bf16
+    return max(mem, compute) + _PIPELINE_FILL_S
 
 
 MeasureFn = Callable[[Impl, int, int, int], float]
@@ -548,6 +593,32 @@ def kv_page_bytes(cfg: ModelConfig, *, page_size: int = 64,
                * (page_size * cfg.kv_dim * kvb + scale))
 
 
+def param_bytes(cfg: ModelConfig, weight_dtype: str = "bf16", *,
+                dtype_bytes: int = 2) -> int:
+    """Resident bytes of the model's per-layer GEMM weight stream at a
+    storage precision — the weight-side analog of :func:`kv_page_bytes`.
+
+    Sums every per-layer [K, N] shape across the layer stack: codes at
+    stored width (:data:`WEIGHT_DTYPE_BYTES`) plus the (N,) f32
+    per-output-channel scales when quantized. ``lm_head`` (and the tied
+    embedding) is excluded — it is not a per-layer stream and never
+    quantizes — so this is both the resident GEMM weight footprint and
+    the exact bytes one decode tick reads (every granularity streams each
+    layer's weights once per tick).
+    """
+    wb = WEIGHT_DTYPE_BYTES[weight_dtype]
+    total = 0.0
+    for gs in model_gemm_shapes(cfg):
+        if gs.name == "lm_head":
+            continue
+        if weight_dtype == "bf16":
+            per = gs.k * gs.n * dtype_bytes
+        else:
+            per = gs.k * gs.n * wb + gs.n * 4
+        total += per * gs.count
+    return int(total * cfg.num_layers)
+
+
 def predict_swap_time(
     pages: int, page_bytes: int, *,
     spec: hardware.HardwareSpec = hardware.DEFAULT,
@@ -564,6 +635,7 @@ def predict_reprefill_time(
     page_size: int = 64,
     dtype_bytes: int = 2,
     kv_dtype: str = "bf16",
+    weight_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> float:
     """Roofline time to *recompute* ``positions`` KV positions through
@@ -575,13 +647,22 @@ def predict_reprefill_time(
     attention KV streaming per layer and the per-step dispatch bubble —
     the same per-term constants every other flow in this module uses, so
     the swap decision is commensurable with the chunk/group decisions.
+    Under a quantized ``weight_dtype`` the per-layer GEMMs stream the
+    smaller stored-width weights (:func:`predict_flat_gemm_time`; the
+    lm_head stays bf16), so recompute gets cheaper and swapping needs a
+    longer span to win.
     """
     steps = max(-(-positions // chunk), 1)
     gemm_step = 0.0
     for gs in model_gemm_shapes(cfg):
-        t = min(predict_time(impl, chunk, gs.k, gs.n,
-                             dtype_bytes=dtype_bytes, spec=spec)
-                for impl in Impl)
+        if weight_dtype != "bf16" and gs.name != "lm_head":
+            t = predict_flat_gemm_time(
+                chunk, gs.k, gs.n, weight_dtype=weight_dtype,
+                dtype_bytes=dtype_bytes, spec=spec)
+        else:
+            t = min(predict_time(impl, chunk, gs.k, gs.n,
+                                 dtype_bytes=dtype_bytes, spec=spec)
+                    for impl in Impl)
         layers = 1 if gs.name == "lm_head" else cfg.num_layers
         gemm_step += t * gs.count * layers
     kv = 0.0
@@ -601,6 +682,7 @@ def find_swap_threshold(
     page_size: int = 64,
     max_pages: int = 64,
     kv_dtype: str = "bf16",
+    weight_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> int:
     """Smallest demoted-span page count at which promoting (bulk
@@ -613,13 +695,15 @@ def find_swap_threshold(
     wins inside the sweep (tiny models on a fat link the other way).
     Quantized ``kv_dtype`` moves *both* sides (smaller slabs over the
     link, cheaper KV re-streaming) but the link side scales fully while
-    re-prefill keeps its bf16 GEMM term, so swapping wins earlier."""
+    re-prefill keeps its bf16 GEMM term, so swapping wins earlier; a
+    quantized ``weight_dtype`` pushes the other way (recompute streams
+    the smaller weight slab, so re-prefill gets cheaper)."""
     page_bytes = kv_page_bytes(cfg, page_size=page_size, kv_dtype=kv_dtype)
     for pages in range(1, max_pages + 1):
         t_swap = predict_swap_time(pages, page_bytes, spec=spec)
         t_pre = predict_reprefill_time(
             cfg, pages * page_size, chunk=chunk, page_size=page_size,
-            kv_dtype=kv_dtype, spec=spec)
+            kv_dtype=kv_dtype, weight_dtype=weight_dtype, spec=spec)
         if t_swap < t_pre:
             return pages
     return max_pages + 1
@@ -654,27 +738,27 @@ def predict_fusion_time(
     cfg: ModelConfig, granularity: str, *,
     m: int = 1,
     dtype_bytes: int = 2,
+    weight_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> float:
     """Roofline time for one decode tick at a fusion granularity.
 
     Decode at small batch is memory-bound: every tick streams each
-    layer's weights once regardless of granularity, so the weight term
-    is common and the granularities differ only in *boundary* cost —
-    stage-dispatch bubbles per layer (:data:`_DECODE_STAGES`, priced at
-    the shared :data:`_PIPELINE_FILL_S` launch constant), plus the
-    host-side term: ``fused`` python-unrolls the depth (L × stages
+    layer's weights once regardless of granularity
+    (:func:`param_bytes` at the plan's ``weight_dtype`` — quantized
+    weights shrink the common term, so the fixed boundary costs weigh
+    relatively more), and the granularities differ only in *boundary*
+    cost — stage-dispatch bubbles per layer (:data:`_DECODE_STAGES`,
+    priced at the shared :data:`_PIPELINE_FILL_S` launch constant), plus
+    the host-side term: ``fused`` python-unrolls the depth (L × stages
     host-visible dispatches), while ``split``/``looped`` run the whole
     depth under one ``lax.scan`` (one looped dispatch + a fixed
     :data:`_LOOP_SETUP_S`).
     """
     if granularity not in _DECODE_STAGES:
         raise ValueError(f"unknown fusion granularity {granularity!r}")
-    weight_bytes = 0.0
-    for gs in model_gemm_shapes(cfg):
-        if gs.name == "lm_head":
-            continue
-        weight_bytes += gs.k * gs.n * gs.count * dtype_bytes
+    weight_bytes = param_bytes(
+        cfg, weight_dtype, dtype_bytes=dtype_bytes) / cfg.num_layers
     stages = _DECODE_STAGES[granularity]
     t_layer = weight_bytes / spec.hbm_bw + stages * _PIPELINE_FILL_S
     if granularity == "fused":
@@ -685,11 +769,58 @@ def predict_fusion_time(
 def find_decode_fusion(
     cfg: ModelConfig, *,
     m: int = 1,
+    weight_dtype: str = "bf16",
     spec: hardware.HardwareSpec = hardware.DEFAULT,
 ) -> str:
     """Cheapest decode-tick granularity for this model (ties break toward
     the earlier, simpler mode in ``FUSION_MODES`` order: split < fused <
     looped)."""
     modes = ("split", "fused", "looped")
-    times = {g: predict_fusion_time(cfg, g, m=m, spec=spec) for g in modes}
+    times = {g: predict_fusion_time(cfg, g, m=m, weight_dtype=weight_dtype,
+                                    spec=spec) for g in modes}
     return min(modes, key=lambda g: times[g])
+
+
+# ---------------------------------------------------------------------------
+# Weight-precision decision flow (MatmulPlan.weight_dtype)
+# ---------------------------------------------------------------------------
+
+WEIGHT_DTYPE_CANDIDATES = ("bf16", "int8", "fp8")
+
+
+def find_weight_dtype(
+    cfg: ModelConfig, *,
+    m: int = 1,
+    tol_budget: float | None = None,
+    spec: hardware.HardwareSpec = hardware.DEFAULT,
+    candidates: Iterable[str] = WEIGHT_DTYPE_CANDIDATES,
+) -> str:
+    """Fastest GEMM weight storage precision under the accuracy guard.
+
+    Candidates whose dtype-derived logits tolerance
+    (:data:`WEIGHT_GUARD_TOL`) exceeds ``tol_budget`` are excluded
+    (``None`` = any tolerance; ``0.0`` admits only the bitwise bf16
+    path). Survivors are ranked by one decode tick's flat-GEMM roofline
+    summed over the model's [K, N] shapes at decode M
+    (:func:`predict_flat_gemm_time`; the lm_head prices at bf16 — it
+    never quantizes). Decode is weight-bandwidth-bound, so the smaller
+    stream wins whenever it is admissible; the strict ``<`` keeps int8
+    ahead of fp8 on their byte-for-byte tie (same stored width, tighter
+    analytic round-trip bound).
+    """
+    best, best_t = "bf16", None
+    for wd in candidates:
+        if wd not in WEIGHT_DTYPE_BYTES:
+            raise ValueError(f"unknown weight_dtype {wd!r}")
+        if tol_budget is not None and WEIGHT_GUARD_TOL[wd] > tol_budget:
+            continue
+        t = 0.0
+        for gs in model_gemm_shapes(cfg):
+            shape_wd = "bf16" if gs.name == "lm_head" else wd
+            layers = 1 if gs.name == "lm_head" else cfg.num_layers
+            t += (predict_flat_gemm_time(
+                      m, gs.k, gs.n, weight_dtype=shape_wd, spec=spec)
+                  * gs.count * layers)
+        if best_t is None or t < best_t:
+            best, best_t = wd, t
+    return best

@@ -48,6 +48,7 @@ SCHEMES = ("sync", "unified_max")
 GATHER_MODES = ("dense", "fused")  # chunk-path page access discipline
 GROUP_MODES = ("off", "grouped")   # decode-path shared-prefix discipline
 KV_DTYPES = ("bf16", "int8", "fp8")  # paged KV page storage precision
+WEIGHT_DTYPES = ("bf16", "int8", "fp8")  # GEMM weight storage precision
 FUSION_MODES = ("split", "fused", "looped")  # decode-layer stage granularity
 
 
@@ -80,18 +81,44 @@ def _check_pos(value: int, what: str) -> None:
 class MatmulPlan:
     """GEMM routing: tuned [K, N] inflection entries + the default policy
     for unseen shapes (single source of truth for the static ladder that
-    used to be duplicated in ``DispatchTable.pick`` and ``ops.matmul``)."""
+    used to be duplicated in ``DispatchTable.pick`` and ``ops.matmul``).
+
+    ``weight_dtype`` is the GEMM weight storage precision
+    (:data:`WEIGHT_DTYPES`) — the weight-side twin of
+    ``PagedPlan.kv_dtype``:
+
+      * ``"bf16"`` — full-precision weight slabs, the legacy bitwise
+        path.
+      * ``"int8"`` / ``"fp8"`` — the engine's quantize-at-load pass
+        (:mod:`repro.models.wquant`) converts every GEMM weight leaf to
+        codes plus one f32 step per output channel; the GEMM kernels and
+        their jnp oracles dequantize on the f32 accumulator in-register
+        (``codes * step`` factored out of the K sum), so every decode
+        tick streams ~half the weight bytes and the bf16 slab never
+        materializes in HBM. Bias/norm/embedding/lm-head leaves stay
+        full precision.
+
+    The precision scales the weight-byte term of the dispatch rooflines
+    (:data:`repro.core.dispatch.WEIGHT_DTYPE_BYTES` via
+    :func:`repro.core.dispatch.param_bytes`) and is auto-picked by
+    :func:`repro.core.dispatch.find_weight_dtype` under the dtype-derived
+    logits-closeness guard (``quant.logits_guard_tol`` — the same
+    accuracy contract as the KV axis). Quantization changes logits only
+    within that tolerance; the bf16 path stays bitwise.
+    """
 
     backend: str = "xla"
     # unseen-shape policy: ImplA below m1, ImplB below m2, ImplC above —
     # the conservative static ladder (GEMV only at M<=2, XLA from M=128)
     default_m1: int = 3
     default_m2: int = 128
+    weight_dtype: str = "bf16"
     entries: Dict[Tuple[int, int], dispatch.DispatchEntry] = \
         dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "matmul.backend")
+        _check(self.weight_dtype, WEIGHT_DTYPES, "matmul.weight_dtype")
         _check_pos(self.default_m1, "matmul.default_m1")
         _check_pos(self.default_m2, "matmul.default_m2")
         if self.default_m2 < self.default_m1:
@@ -403,7 +430,10 @@ class ExecutionPlan:
     def describe(self) -> str:
         d, p = self.attention_decode, self.attention_prefill
         return (f"matmul[{len(self.matmul.entries)} entries, "
-                f"{self.matmul.backend}] "
+                f"{self.matmul.backend}"
+                + (f", w={self.matmul.weight_dtype}"
+                   if self.matmul.weight_dtype != "bf16" else "")
+                + "] "
                 f"decode[{d.scheme}, block_k={d.block_k}, "
                 f"fallback={d.fallback}] "
                 f"prefill[{p.scheme}, chunk>={p.chunk_threshold}] "
@@ -428,6 +458,7 @@ class ExecutionPlan:
             "ops": {
                 "matmul": {
                     "backend": self.matmul.backend,
+                    "weight_dtype": self.matmul.weight_dtype,
                     "default": {"m1": self.matmul.default_m1,
                                 "m2": self.matmul.default_m2},
                     "entries": {
@@ -469,6 +500,8 @@ class ExecutionPlan:
                     k=k, n=n, m1=int(d["m1"]), m2=int(d["m2"]))
             matmul = MatmulPlan(
                 backend=mm["backend"],
+                # pre-wquant plans load with the bf16 default
+                weight_dtype=mm.get("weight_dtype", "bf16"),
                 default_m1=int(mm["default"]["m1"]),
                 default_m2=int(mm["default"]["m2"]),
                 entries=entries,
@@ -563,6 +596,7 @@ def make_plan(
     group_threshold: int = 2,
     swap_threshold: int = 1,
     kv_dtype: str = "bf16",
+    weight_dtype: str = "bf16",
     decode_fusion: str = "split",
 ) -> ExecutionPlan:
     """Build an untuned plan with uniform knobs — the hand-rolled
@@ -571,7 +605,7 @@ def make_plan(
     if fused_ffn is None:
         fused_ffn = backend == "pallas"
     return ExecutionPlan(
-        matmul=MatmulPlan(backend=backend),
+        matmul=MatmulPlan(backend=backend, weight_dtype=weight_dtype),
         attention_decode=AttentionDecodePlan(
             backend=backend, scheme=scheme, fallback=fallback,
             block_k=block_k),
@@ -622,6 +656,7 @@ def tune(
     decode_seq: int = 32768,
     page_size: int = 64,
     kv_dtype: str = "bf16",
+    weight_dtype: Optional[str] = "bf16",
 ) -> ExecutionPlan:
     """Profile every op decision offline and emit a provenanced plan.
 
@@ -634,10 +669,19 @@ def tune(
     decisions (``chunk_block`` and the dense-gather vs fused-kernel
     ``fused_threshold`` inflection). ``kv_dtype`` selects the page
     precision and rescales every KV-byte roofline term the paged
-    thresholds come from (see :class:`PagedPlan`).
+    thresholds come from (see :class:`PagedPlan`). ``weight_dtype``
+    selects the GEMM weight storage precision (see :class:`MatmulPlan`);
+    pass ``None`` to let :func:`repro.core.dispatch.find_weight_dtype`
+    pick the fastest candidate whose dtype-derived guard tolerance the
+    run accepts — the resolved value rescales the weight-byte terms of
+    the swap and fusion rooflines via
+    :func:`repro.core.dispatch.param_bytes`.
     """
     _check(backend, BACKENDS, "backend")
     _check(kv_dtype, KV_DTYPES, "kv_dtype")
+    if weight_dtype is None:
+        weight_dtype = dispatch.find_weight_dtype(cfg, spec=spec)
+    _check(weight_dtype, WEIGHT_DTYPES, "weight_dtype")
     gemm_measure, measure_name = _resolve_measure(measure)
 
     entries: Dict[Tuple[int, int], dispatch.DispatchEntry] = {}
@@ -665,12 +709,14 @@ def tune(
         cfg.kv_dim, page_size=page_size, spec=spec, kv_dtype=kv_dtype)
     swap_threshold = dispatch.find_swap_threshold(
         cfg, chunk=chunk_block, page_size=page_size, spec=spec,
-        kv_dtype=kv_dtype)
-    granularity = dispatch.find_decode_fusion(cfg, spec=spec)
+        kv_dtype=kv_dtype, weight_dtype=weight_dtype)
+    granularity = dispatch.find_decode_fusion(cfg, spec=spec,
+                                              weight_dtype=weight_dtype)
 
     plan = ExecutionPlan(
         matmul=MatmulPlan(backend=backend, default_m1=default.m1,
-                          default_m2=default.m2, entries=entries),
+                          default_m2=default.m2, entries=entries,
+                          weight_dtype=weight_dtype),
         attention_decode=AttentionDecodePlan(
             backend=backend, scheme=scheme, block_k=block_k),
         attention_prefill=AttentionPrefillPlan(

@@ -65,12 +65,20 @@ def _rope_pairs(t, cos, sin, n_heads: int, head_dim: int):
 
 
 def _ingest_kernel(x_ref, scale_ref, wq_ref, wk_ref, wv_ref,
-                   bq_ref, bk_ref, bv_ref, pos_ref,
-                   outq_ref, outk_ref, outv_ref,
-                   xn_ref, accq_ref, acck_ref, accv_ref,
-                   *, d_real: int, bk: int, num_heads: int,
+                   bq_ref, bk_ref, bv_ref, pos_ref, *refs,
+                   d_real: int, bk: int, num_heads: int,
                    num_kv_heads: int, head_dim: int, theta: float,
-                   eps: float, use_rope: bool):
+                   eps: float, use_rope: bool, quantized: bool = False):
+    # The quantized variant appends three per-output-channel step operands
+    # ((1, NQ)/(1, NK) f32, full-width like the biases) after ``pos``; the
+    # branches are trace-time, so the bf16 kernel's jaxpr is unchanged.
+    if quantized:
+        (sq_ref, sk_ref, sv_ref,
+         outq_ref, outk_ref, outv_ref,
+         xn_ref, accq_ref, acck_ref, accv_ref) = refs
+    else:
+        (outq_ref, outk_ref, outv_ref,
+         xn_ref, accq_ref, acck_ref, accv_ref) = refs
     ki = pl.program_id(0)
     n_k = pl.num_programs(0)
 
@@ -90,21 +98,30 @@ def _ingest_kernel(x_ref, scale_ref, wq_ref, wk_ref, wv_ref,
 
     xt = xn_ref[:, pl.ds(ki * bk, bk)]
     dims = (((1,), (0,)), ((), ()))
+    wq_t = wq_ref[...].astype(xt.dtype) if quantized else wq_ref[...]
+    wk_t = wk_ref[...].astype(xt.dtype) if quantized else wk_ref[...]
+    wv_t = wv_ref[...].astype(xt.dtype) if quantized else wv_ref[...]
     accq_ref[...] += jax.lax.dot_general(
-        xt, wq_ref[...], dims, preferred_element_type=jnp.float32)
+        xt, wq_t, dims, preferred_element_type=jnp.float32)
     acck_ref[...] += jax.lax.dot_general(
-        xt, wk_ref[...], dims, preferred_element_type=jnp.float32)
+        xt, wk_t, dims, preferred_element_type=jnp.float32)
     accv_ref[...] += jax.lax.dot_general(
-        xt, wv_ref[...], dims, preferred_element_type=jnp.float32)
+        xt, wv_t, dims, preferred_element_type=jnp.float32)
 
     @pl.when(ki == n_k - 1)
     def _fin():
         # round the f32 accumulators to the activation dtype *before* the
         # bias add and rope, mirroring the split chain's rounding points
-        # (matmul output cast, bf16 bias add, rope promoting to f32)
-        q = accq_ref[...].astype(outq_ref.dtype) + bq_ref[...]
-        k = acck_ref[...].astype(outk_ref.dtype) + bk_ref[...]
-        v = accv_ref[...].astype(outv_ref.dtype) + bv_ref[...]
+        # (matmul output cast, bf16 bias add, rope promoting to f32);
+        # weight steps dequantize on the f32 accumulators first
+        accq, acck, accv = accq_ref[...], acck_ref[...], accv_ref[...]
+        if quantized:
+            accq = accq * sq_ref[...]
+            acck = acck * sk_ref[...]
+            accv = accv * sv_ref[...]
+        q = accq.astype(outq_ref.dtype) + bq_ref[...]
+        k = acck.astype(outk_ref.dtype) + bk_ref[...]
+        v = accv.astype(outv_ref.dtype) + bv_ref[...]
         if use_rope:
             half = head_dim // 2
             ih = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)
@@ -135,11 +152,16 @@ def decode_ingest_fused(
     bq: jax.Array | None = None,
     bk_bias: jax.Array | None = None,
     bv: jax.Array | None = None,
+    wq_scale: jax.Array | None = None,   # (HQ*Dh,) f32 -> wq is codes
+    wk_scale: jax.Array | None = None,   # (HK*Dh,) f32 -> wk is codes
+    wv_scale: jax.Array | None = None,
     block_k: int = 0,
     interpret: bool = False,
 ):
     """Fused rmsnorm → QKV → bias → rope. Returns flat q (M, HQ*Dh) and
     k/v (M, HK*Dh) in x.dtype (the caller owns the head reshape)."""
+    assert (wq_scale is None) == (wk_scale is None) == (wv_scale is None), \
+        "qkv weights quantize together"
     m, d = x.shape
     nq, nk = wq.shape[1], wk.shape[1]
     assert nq == num_heads * head_dim and nk == num_kv_heads * head_dim
@@ -188,23 +210,36 @@ def decode_ingest_fused(
         wk = jnp.pad(wk, ((0, kp - d), (0, 0)))
         wv = jnp.pad(wv, ((0, kp - d), (0, 0)))
 
+    quantized = wq_scale is not None
+    operands = [x, norm_scale[None, :], wq, wk, wv,
+                bq[None, :], bk_bias[None, :], bv[None, :], pos]
+    in_specs = [
+        pl.BlockSpec((m_pad, kp), lambda k_: (0, 0)),
+        pl.BlockSpec((1, kp), lambda k_: (0, 0)),
+        pl.BlockSpec((bk, nqp), lambda k_: (k_, 0)),
+        pl.BlockSpec((bk, nkp), lambda k_: (k_, 0)),
+        pl.BlockSpec((bk, nkp), lambda k_: (k_, 0)),
+        pl.BlockSpec((1, nqp), lambda k_: (0, 0)),
+        pl.BlockSpec((1, nkp), lambda k_: (0, 0)),
+        pl.BlockSpec((1, nkp), lambda k_: (0, 0)),
+        pl.BlockSpec((m_pad, 1), lambda k_: (0, 0)),
+    ]
+    if quantized:
+        for s, width in ((wq_scale, nqp), (wk_scale, nkp), (wv_scale, nkp)):
+            s = s.astype(jnp.float32).reshape(1, -1)
+            if s.shape[1] != width:
+                s = jnp.pad(s, ((0, 0), (0, width - s.shape[1])))
+            operands.append(s)
+            in_specs.append(pl.BlockSpec((1, width), lambda k_: (0, 0)))
+
     outq, outk, outv = pl.pallas_call(
         functools.partial(
             _ingest_kernel, d_real=d, bk=bk, num_heads=num_heads,
             num_kv_heads=num_kv_heads, head_dim=head_dim,
-            theta=rope_theta, eps=eps, use_rope=use_rope),
+            theta=rope_theta, eps=eps, use_rope=use_rope,
+            quantized=quantized),
         grid=(kp // bk,),
-        in_specs=[
-            pl.BlockSpec((m_pad, kp), lambda k_: (0, 0)),
-            pl.BlockSpec((1, kp), lambda k_: (0, 0)),
-            pl.BlockSpec((bk, nqp), lambda k_: (k_, 0)),
-            pl.BlockSpec((bk, nkp), lambda k_: (k_, 0)),
-            pl.BlockSpec((bk, nkp), lambda k_: (k_, 0)),
-            pl.BlockSpec((1, nqp), lambda k_: (0, 0)),
-            pl.BlockSpec((1, nkp), lambda k_: (0, 0)),
-            pl.BlockSpec((1, nkp), lambda k_: (0, 0)),
-            pl.BlockSpec((m_pad, 1), lambda k_: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((m_pad, nqp), lambda k_: (0, 0)),
             pl.BlockSpec((m_pad, nkp), lambda k_: (0, 0)),
@@ -225,12 +260,18 @@ def decode_ingest_fused(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
-    )(x, norm_scale[None, :], wq, wk, wv,
-      bq[None, :], bk_bias[None, :], bv[None, :], pos)
+    )(*operands)
     return outq[:m, :nq], outk[:m, :nk], outv[:m, :nk]
 
 
-def _oproj_kernel(o_ref, wo_ref, resid_ref, out_ref, acc_ref):
+def _oproj_kernel(o_ref, wo_ref, resid_ref, *refs,
+                  quantized: bool = False):
+    # quantized appends one (1, B_N) f32 step operand after ``resid``;
+    # trace-time branch, bf16 jaxpr unchanged
+    if quantized:
+        scale_ref, out_ref, acc_ref = refs
+    else:
+        out_ref, acc_ref = refs
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
 
@@ -238,16 +279,21 @@ def _oproj_kernel(o_ref, wo_ref, resid_ref, out_ref, acc_ref):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    wo_t = wo_ref[...].astype(o_ref.dtype) if quantized else wo_ref[...]
     acc_ref[...] += jax.lax.dot_general(
-        o_ref[...], wo_ref[...], (((1,), (0,)), ((), ())),
+        o_ref[...], wo_t, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
 
     @pl.when(ki == n_k - 1)
     def _fin():
         # cast before the add, mirroring the split chain's
-        # `x + matmul(o, wo)` operand dtypes
-        out_ref[...] = resid_ref[...] + acc_ref[...].astype(out_ref.dtype)
+        # `x + matmul(o, wo)` operand dtypes; the weight step dequantizes
+        # on the f32 accumulator first
+        acc = acc_ref[...]
+        if quantized:
+            acc = acc * scale_ref[...]
+        out_ref[...] = resid_ref[...] + acc.astype(out_ref.dtype)
 
 
 def oproj_residual_fused(
@@ -255,6 +301,7 @@ def oproj_residual_fused(
     wo: jax.Array,      # (Q, D)
     resid: jax.Array,   # (M, D) residual stream
     *,
+    w_scale: jax.Array | None = None,   # (D,) f32 -> wo is quantized codes
     block_n: int = 0,
     block_k: int = 0,
     interpret: bool = False,
@@ -283,14 +330,24 @@ def oproj_residual_fused(
         wo = jnp.pad(wo, ((0, pad_k), (0, 0)))
     kp, np_ = o.shape[1], wo.shape[1]
 
+    quantized = w_scale is not None
+    operands = [o, wo, resid]
+    in_specs = [
+        pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+        pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
+    ]
+    if quantized:
+        scale = w_scale.astype(jnp.float32).reshape(1, -1)
+        if np_ != n:
+            scale = jnp.pad(scale, ((0, 0), (0, np_ - n)))
+        operands.append(scale)
+        in_specs.append(pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)))
+
     out = pl.pallas_call(
-        _oproj_kernel,
+        functools.partial(_oproj_kernel, quantized=quantized),
         grid=(np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-            pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
         out_shape=jax.ShapeDtypeStruct((m_pad, np_), resid.dtype),
         scratch_shapes=[pltpu.VMEM((m_pad, bn), jnp.float32)],
@@ -298,13 +355,19 @@ def oproj_residual_fused(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(o, wo, resid)
+    )(*operands)
     return out[:m, :n]
 
 
-def _ffn_norm_kernel(x_ref, scale_ref, wg_ref, wu_ref, out_ref,
-                     xn_ref, accg_ref, accu_ref,
-                     *, d_real: int, bk: int, activation: str, eps: float):
+def _ffn_norm_kernel(x_ref, scale_ref, wg_ref, wu_ref, *refs,
+                     d_real: int, bk: int, activation: str, eps: float,
+                     quantized: bool = False):
+    # quantized appends two (1, B_N) f32 step operands after ``w_up``;
+    # trace-time branch, bf16 jaxpr unchanged
+    if quantized:
+        sg_ref, su_ref, out_ref, xn_ref, accg_ref, accu_ref = refs
+    else:
+        out_ref, xn_ref, accg_ref, accu_ref = refs
     ni = pl.program_id(0)
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
@@ -326,16 +389,22 @@ def _ffn_norm_kernel(x_ref, scale_ref, wg_ref, wu_ref, out_ref,
 
     xt = xn_ref[:, pl.ds(ki * bk, bk)]
     dims = (((1,), (0,)), ((), ()))
+    wg_t = wg_ref[...].astype(xt.dtype) if quantized else wg_ref[...]
+    wu_t = wu_ref[...].astype(xt.dtype) if quantized else wu_ref[...]
     accg_ref[...] += jax.lax.dot_general(
-        xt, wg_ref[...], dims, preferred_element_type=jnp.float32)
+        xt, wg_t, dims, preferred_element_type=jnp.float32)
     accu_ref[...] += jax.lax.dot_general(
-        xt, wu_ref[...], dims, preferred_element_type=jnp.float32)
+        xt, wu_t, dims, preferred_element_type=jnp.float32)
 
     @pl.when(ki == n_k - 1)
     def _fin():
         # activation on the unrounded f32 accumulators, like the fused-FFN
-        # kernel's epilogue (and fused_ffn_up_ref)
+        # kernel's epilogue (and fused_ffn_up_ref); weight steps
+        # dequantize on the accumulators before the nonlinearity
         g, u = accg_ref[...], accu_ref[...]
+        if quantized:
+            g = g * sg_ref[...]
+            u = u * su_ref[...]
         act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
         out_ref[...] = (act * u).astype(out_ref.dtype)
 
@@ -348,6 +417,8 @@ def ffn_norm_fused(
     *,
     activation: str = "swiglu",
     eps: float = 1e-6,
+    wg_scale: jax.Array | None = None,  # (F,) f32 -> w_gate is codes
+    wu_scale: jax.Array | None = None,  # (F,) f32 -> w_up is codes
     block_n: int = 0,
     block_k: int = 0,
     interpret: bool = False,
@@ -355,6 +426,8 @@ def ffn_norm_fused(
     """Fused rmsnorm → gate/up GEMMs → act(g)*u. Returns (M, F) in
     x.dtype — feed it to :func:`oproj_residual_fused` with ``w_down``
     for the full mlp seam."""
+    assert (wg_scale is None) == (wu_scale is None), \
+        "gate/up weights quantize together"
     m, d = x.shape
     d2, f = w_gate.shape
     assert d2 == d and w_up.shape == (d, f), (x.shape, w_gate.shape,
@@ -394,16 +467,28 @@ def ffn_norm_fused(
         w_gate = jnp.pad(w_gate, ((0, kp - d), (0, 0)))
         w_up = jnp.pad(w_up, ((0, kp - d), (0, 0)))
 
+    quantized = wg_scale is not None
+    operands = [x, norm_scale[None, :], w_gate, w_up]
+    in_specs = [
+        pl.BlockSpec((m_pad, kp), lambda n_, k_: (0, 0)),
+        pl.BlockSpec((1, kp), lambda n_, k_: (0, 0)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+    ]
+    if quantized:
+        for s in (wg_scale, wu_scale):
+            s = s.astype(jnp.float32).reshape(1, -1)
+            if fp != f:
+                s = jnp.pad(s, ((0, 0), (0, fp - f)))
+            operands.append(s)
+            in_specs.append(pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)))
+
     out = pl.pallas_call(
         functools.partial(_ffn_norm_kernel, d_real=d, bk=bk,
-                          activation=activation, eps=eps),
+                          activation=activation, eps=eps,
+                          quantized=quantized),
         grid=(fp // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((m_pad, kp), lambda n_, k_: (0, 0)),
-            pl.BlockSpec((1, kp), lambda n_, k_: (0, 0)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
         out_shape=jax.ShapeDtypeStruct((m_pad, fp), x.dtype),
         scratch_shapes=[
@@ -417,5 +502,5 @@ def ffn_norm_fused(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, norm_scale[None, :], w_gate, w_up)
+    )(*operands)
     return out[:m, :f]

@@ -91,10 +91,34 @@ def _flat_gemm_kernel(x_ref, w_ref, out_ref, acc_ref):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _flat_gemm_quant_kernel(x_ref, w_ref, scale_ref, out_ref, acc_ref):
+    """Quantized-weight variant: ``w_ref`` holds int8/fp8 codes streamed
+    at stored width; the per-output-channel step (``scale_ref``, (1, B_N)
+    f32) multiplies the f32 accumulator once in the epilogue — ``codes *
+    step`` factored out of the K sum. The codes cast to the activation
+    dtype for the MXU pass (int8 ±127 / fp8 e4m3 are exact in bf16)."""
+    ki = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...].astype(x_ref.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        out_ref[...] = (acc_ref[...] * scale_ref[...]).astype(out_ref.dtype)
+
+
 def flat_gemm(
     x: jax.Array,   # (M, K)
     w: jax.Array,   # (K, N)
     *,
+    w_scale: jax.Array | None = None,   # (N,) f32 -> w is quantized codes
     block_n: int = 0,
     block_k: int = 0,
     out_dtype=None,
@@ -121,13 +145,24 @@ def flat_gemm(
         w = jnp.pad(w, ((0, bk - k % bk), (0, 0)))
     kp, np_ = x.shape[1], w.shape[1]
 
+    kernel = _flat_gemm_kernel
+    operands = [x, w]
+    in_specs = [
+        pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+    ]
+    if w_scale is not None:
+        scale = w_scale.astype(jnp.float32).reshape(1, -1)
+        if np_ != n:
+            scale = jnp.pad(scale, ((0, 0), (0, np_ - n)))
+        kernel = _flat_gemm_quant_kernel
+        operands.append(scale)
+        in_specs.append(pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)))
+
     out = pl.pallas_call(
-        _flat_gemm_kernel,
+        kernel,
         grid=(np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
         out_shape=jax.ShapeDtypeStruct((m_pad, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((m_pad, bn), jnp.float32)],
@@ -135,5 +170,5 @@ def flat_gemm(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w)
+    )(*operands)
     return out[:m, :n]

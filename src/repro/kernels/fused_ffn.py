@@ -34,8 +34,16 @@ from repro.kernels import pltpu_compat  # noqa: F401  (pltpu.CompilerParams alia
 from repro.kernels.flat_gemm import pick_bk, pick_bn, round_up
 
 
-def _fused_ffn_kernel(x_ref, wg_ref, wu_ref, out_ref, accg_ref, accu_ref,
-                      *, activation: str):
+def _fused_ffn_kernel(x_ref, wg_ref, wu_ref, *refs,
+                      activation: str, quantized: bool = False):
+    # Quantized variant appends two per-output-channel step operands
+    # ((1, B_N) f32) after the weights; the branches are trace-time, so
+    # the bf16 kernel's jaxpr is unchanged. Steps apply on the f32
+    # accumulators *before* the activation (dequant-then-nonlinearity).
+    if quantized:
+        sg_ref, su_ref, out_ref, accg_ref, accu_ref = refs
+    else:
+        out_ref, accg_ref, accu_ref = refs
     ki = pl.program_id(1)
     n_k = pl.num_programs(1)
 
@@ -45,20 +53,26 @@ def _fused_ffn_kernel(x_ref, wg_ref, wu_ref, out_ref, accg_ref, accu_ref,
         accu_ref[...] = jnp.zeros_like(accu_ref)
 
     x = x_ref[...]
+    wg = wg_ref[...].astype(x.dtype) if quantized else wg_ref[...]
+    wu = wu_ref[...].astype(x.dtype) if quantized else wu_ref[...]
     accg_ref[...] += jax.lax.dot_general(
-        x, wg_ref[...], (((1,), (0,)), ((), ())),
+        x, wg, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     accu_ref[...] += jax.lax.dot_general(
-        x, wu_ref[...], (((1,), (0,)), ((), ())),
+        x, wu, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
 
     @pl.when(ki == n_k - 1)
     def _fin():
         g = accg_ref[...]
+        u = accu_ref[...]
+        if quantized:
+            g = g * sg_ref[...]
+            u = u * su_ref[...]
         act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
-        out_ref[...] = (act * accu_ref[...]).astype(out_ref.dtype)
+        out_ref[...] = (act * u).astype(out_ref.dtype)
 
 
 def fused_ffn_up(
@@ -67,12 +81,16 @@ def fused_ffn_up(
     w_up: jax.Array,     # (K, N)
     *,
     activation: str = "swiglu",
+    wg_scale: jax.Array | None = None,  # (N,) f32 -> w_gate is codes
+    wu_scale: jax.Array | None = None,  # (N,) f32 -> w_up is codes
     block_n: int = 0,
     block_k: int = 0,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
     """h = act(x @ w_gate) * (x @ w_up), epilogue fused in VMEM."""
+    assert (wg_scale is None) == (wu_scale is None), \
+        "gate/up weights quantize together"
     m, k = x.shape
     k2, n = w_gate.shape
     assert (k2, n) == w_up.shape == (k, n), (x.shape, w_gate.shape,
@@ -106,14 +124,26 @@ def fused_ffn_up(
         w_up = jnp.pad(w_up, ((0, pad_k), (0, 0)))
     kp, np_ = x.shape[1], w_gate.shape[1]
 
+    quantized = wg_scale is not None
+    operands = [x, w_gate, w_up]
+    in_specs = [
+        pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+    ]
+    if quantized:
+        for s in (wg_scale, wu_scale):
+            s = s.astype(jnp.float32).reshape(1, -1)
+            if np_ != n:
+                s = jnp.pad(s, ((0, 0), (0, np_ - n)))
+            operands.append(s)
+            in_specs.append(pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)))
+
     out = pl.pallas_call(
-        functools.partial(_fused_ffn_kernel, activation=activation),
+        functools.partial(_fused_ffn_kernel, activation=activation,
+                          quantized=quantized),
         grid=(np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((m_pad, bk), lambda n_, k_: (0, k_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m_pad, bn), lambda n_, k_: (0, n_)),
         out_shape=jax.ShapeDtypeStruct((m_pad, np_), out_dtype),
         scratch_shapes=[
@@ -124,5 +154,5 @@ def fused_ffn_up(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w_gate, w_up)
+    )(*operands)
     return out[:m, :n]

@@ -38,10 +38,31 @@ def _gemv_kernel(x_ref, w_ref, out_ref, acc_ref):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _gemv_quant_kernel(x_ref, w_ref, scale_ref, out_ref, acc_ref):
+    """Quantized-weight variant: the body already lifts W to f32 for the
+    VPU — codes lift the same way — and the per-output-channel step
+    ((1, B_N) f32) multiplies the f32 accumulator in the epilogue."""
+    ki = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)       # (M, BK)
+    w = w_ref[...].astype(jnp.float32)       # (BK, BN) codes
+    acc_ref[...] += jnp.sum(x[:, :, None] * w[None, :, :], axis=1)
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        out_ref[...] = (acc_ref[...] * scale_ref[...]).astype(out_ref.dtype)
+
+
 def gemv(
     x: jax.Array,   # (M, K), M <= 4 typical
     w: jax.Array,   # (K, N)
     *,
+    w_scale: jax.Array | None = None,   # (N,) f32 -> w is quantized codes
     block_n: int = DEFAULT_BLOCK_N,
     block_k: int = DEFAULT_BLOCK_K,
     out_dtype=None,
@@ -59,13 +80,24 @@ def gemv(
         w = jnp.pad(w, ((0, bk - k % bk), (0, 0)))
     kp, np_ = x.shape[1], w.shape[1]
 
+    kernel = _gemv_kernel
+    operands = [x, w]
+    in_specs = [
+        pl.BlockSpec((m, bk), lambda n_, k_: (0, k_)),
+        pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
+    ]
+    if w_scale is not None:
+        scale = w_scale.astype(jnp.float32).reshape(1, -1)
+        if np_ != n:
+            scale = jnp.pad(scale, ((0, 0), (0, np_ - n)))
+        kernel = _gemv_quant_kernel
+        operands.append(scale)
+        in_specs.append(pl.BlockSpec((1, bn), lambda n_, k_: (0, n_)))
+
     out = pl.pallas_call(
-        _gemv_kernel,
+        kernel,
         grid=(np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((m, bk), lambda n_, k_: (0, k_)),
-            pl.BlockSpec((bk, bn), lambda n_, k_: (k_, n_)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m, bn), lambda n_, k_: (0, n_)),
         out_shape=jax.ShapeDtypeStruct((m, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
@@ -73,5 +105,5 @@ def gemv(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w)
+    )(*operands)
     return out[:, :n]

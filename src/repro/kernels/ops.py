@@ -52,6 +52,20 @@ def _unified(phi_cfg: SoftmaxPhiConfig, scheme: str) -> bool:
     return phi_cfg.active and scheme == "unified_max"
 
 
+def _wparts(w):
+    """Split a GEMM weight operand into ``(array, per-output-channel
+    scale-or-None)``. Quantized weights arrive as the ``{"codes",
+    "scale"}`` dict the engine's quantize-at-load pass produces
+    (models/wquant.py); full-precision weights are plain arrays. The
+    dict form is the single structural signal that threads dequant
+    scales into the kernels — model call sites never change, and the
+    plain-array path stays expression-identical (the bitwise bf16
+    contract)."""
+    if isinstance(w, dict):
+        return w["codes"], w["scale"]
+    return w, None
+
+
 # ---------------------------------------------------------------------------
 # GEMM front door (T3)
 # ---------------------------------------------------------------------------
@@ -64,8 +78,10 @@ def matmul(
     plan: Optional[ExecutionPlan] = None,
     impl: Optional[Impl] = None,
 ) -> jax.Array:
-    """Plan-dispatched GEMM. x: (..., K), w: (K, N)."""
+    """Plan-dispatched GEMM. x: (..., K), w: (K, N) array or quantized
+    ``{"codes", "scale"}`` leaf."""
     mp = (plan or DEFAULT_PLAN).matmul
+    w, w_scale = _wparts(w)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
@@ -78,11 +94,11 @@ def matmul(
         impl = mp.pick(m, k, n)
 
     if mp.backend != "pallas" or impl is Impl.XLA_DOT:
-        out = ref.flat_gemm_ref(x2, w)
+        out = ref.flat_gemm_ref(x2, w, w_scale=w_scale)
     elif impl is Impl.GEMV:
-        out = gemv(x2, w, interpret=_INTERPRET)
+        out = gemv(x2, w, w_scale=w_scale, interpret=_INTERPRET)
     else:
-        out = flat_gemm(x2, w, interpret=_INTERPRET)
+        out = flat_gemm(x2, w, w_scale=w_scale, interpret=_INTERPRET)
     return out.reshape(*lead, n)
 
 
@@ -98,6 +114,8 @@ def fused_ffn(
     when the plan's ``fused_ffn`` entry says ``fused`` on the Pallas
     backend (kernels/fused_ffn.py), oracle math otherwise."""
     fp = (plan or DEFAULT_PLAN).fused_ffn
+    w_gate, wg_scale = _wparts(w_gate)
+    w_up, wu_scale = _wparts(w_up)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w_gate.shape[-1]
@@ -105,9 +123,11 @@ def fused_ffn(
     if fp.fused and fp.backend == "pallas":
         from repro.kernels.fused_ffn import fused_ffn_up
         out = fused_ffn_up(x2, w_gate, w_up, activation=activation,
+                           wg_scale=wg_scale, wu_scale=wu_scale,
                            interpret=_INTERPRET)
     else:
-        out = ref.fused_ffn_up_ref(x2, w_gate, w_up, activation=activation)
+        out = ref.fused_ffn_up_ref(x2, w_gate, w_up, activation=activation,
+                                   wg_scale=wg_scale, wu_scale=wu_scale)
     return out.reshape(*lead, n)
 
 
@@ -135,6 +155,9 @@ def decode_ingest(
     split-chain composition in ``ref.py`` otherwise). Returns
     q (B,1,HQ,Dh), k/v (B,1,HK,Dh)."""
     fp = (plan or DEFAULT_PLAN).decode_fusion
+    wq, wq_scale = _wparts(wq)
+    wk, wk_scale = _wparts(wk)
+    wv, wv_scale = _wparts(wv)
     if fp.backend == "pallas":
         from repro.kernels.decode_fuse import decode_ingest_fused
         b, s, d = x.shape
@@ -143,6 +166,7 @@ def decode_ingest(
             num_heads=num_heads, num_kv_heads=num_kv_heads,
             head_dim=head_dim, rope_theta=rope_theta, eps=eps,
             use_rope=use_rope, bq=bq, bk_bias=bk, bv=bv,
+            wq_scale=wq_scale, wk_scale=wk_scale, wv_scale=wv_scale,
             interpret=_INTERPRET,
         )
         return (q.reshape(b, s, num_heads, head_dim),
@@ -153,6 +177,7 @@ def decode_ingest(
         num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
         rope_theta=rope_theta, eps=eps, use_rope=use_rope,
         bq=bq, bk=bk, bv=bv,
+        wq_scale=wq_scale, wk_scale=wk_scale, wv_scale=wv_scale,
     )
 
 
@@ -167,15 +192,16 @@ def oproj_residual(
     the residual add riding its epilogue on the Pallas backend; the
     bit-exact split composition otherwise)."""
     fp = (plan or DEFAULT_PLAN).decode_fusion
+    wo, wo_scale = _wparts(wo)
     if fp.backend == "pallas":
         from repro.kernels.decode_fuse import oproj_residual_fused
         b, s, qd = o.shape
         out = oproj_residual_fused(
             o.reshape(b * s, qd), wo, resid.reshape(b * s, -1),
-            interpret=_INTERPRET,
+            w_scale=wo_scale, interpret=_INTERPRET,
         )
         return out.reshape(resid.shape)
-    return ref.oproj_residual_ref(o, wo, resid)
+    return ref.oproj_residual_ref(o, wo, resid, w_scale=wo_scale)
 
 
 def ffn_norm(
@@ -195,17 +221,21 @@ def ffn_norm(
     — feed to :func:`oproj_residual` with ``w_down`` for the full seam."""
     p = plan or DEFAULT_PLAN
     fp = p.decode_fusion
+    w_gate, wg_scale = _wparts(w_gate)
+    w_up, wu_scale = _wparts(w_up)
     if fp.backend == "pallas":
         from repro.kernels.decode_fuse import ffn_norm_fused
         b, s, d = x.shape
         out = ffn_norm_fused(
             x.reshape(b * s, d), norm_scale, w_gate, w_up,
-            activation=activation, eps=eps, interpret=_INTERPRET,
+            activation=activation, eps=eps,
+            wg_scale=wg_scale, wu_scale=wu_scale, interpret=_INTERPRET,
         )
         return out.reshape(b, s, -1)
     return ref.ffn_norm_ref(x, norm_scale, w_gate, w_up,
                             activation=activation, eps=eps,
-                            fused=p.fused_ffn.fused)
+                            fused=p.fused_ffn.fused,
+                            wg_scale=wg_scale, wu_scale=wu_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -571,23 +571,50 @@ def attention_prefill_chunked(
 # ---------------------------------------------------------------------------
 
 
-def flat_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """(M, K) @ (K, N), fp32 accumulation, result in x.dtype."""
-    return jnp.dot(
-        x, w, preferred_element_type=jnp.float32
-    ).astype(x.dtype)
+def flat_gemm_ref(x: jax.Array, w: jax.Array,
+                  *, w_scale: jax.Array | None = None) -> jax.Array:
+    """(M, K) @ (K, N), fp32 accumulation, result in x.dtype.
+
+    ``w_scale`` ((N,) f32 per-output-channel steps, models/wquant.py)
+    marks ``w`` as int8/fp8 codes: the dot runs on the codes cast to
+    x.dtype (int8 ±127 and fp8 e4m3 values are exact in bf16) and the
+    step multiplies the f32 accumulator — ``codes * step`` factored out
+    of the K sum, the one dequant expression the kernel epilogues also
+    use. ``w_scale=None`` is the unchanged full-precision expression
+    (the bitwise contract)."""
+    if w_scale is None:
+        return jnp.dot(
+            x, w, preferred_element_type=jnp.float32
+        ).astype(x.dtype)
+    acc = jnp.dot(
+        x, w.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    return (acc * w_scale.astype(jnp.float32)[None, :]).astype(x.dtype)
 
 
-def gemv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+def gemv_ref(x: jax.Array, w: jax.Array,
+             *, w_scale: jax.Array | None = None) -> jax.Array:
     """Same math as flat_gemm_ref; kept separate as the ImplA oracle."""
-    return flat_gemm_ref(x, w)
+    return flat_gemm_ref(x, w, w_scale=w_scale)
 
 
 def fused_ffn_up_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
-                     *, activation: str = "swiglu") -> jax.Array:
-    """Oracle for kernels/fused_ffn.py: act(x@w_gate) * (x@w_up), f32."""
-    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
-    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+                     *, activation: str = "swiglu",
+                     wg_scale: jax.Array | None = None,
+                     wu_scale: jax.Array | None = None) -> jax.Array:
+    """Oracle for kernels/fused_ffn.py: act(x@w_gate) * (x@w_up), f32.
+
+    Per-output-channel weight steps (``wg_scale``/``wu_scale``) apply on
+    the f32 accumulators *before* the activation — the same order as the
+    kernel epilogue, so the nonlinearity sees dequantized values."""
+    g = jnp.dot(x, w_gate if wg_scale is None else w_gate.astype(x.dtype),
+                preferred_element_type=jnp.float32)
+    if wg_scale is not None:
+        g = g * wg_scale.astype(jnp.float32)[None, :]
+    u = jnp.dot(x, w_up if wu_scale is None else w_up.astype(x.dtype),
+                preferred_element_type=jnp.float32)
+    if wu_scale is not None:
+        u = u * wu_scale.astype(jnp.float32)[None, :]
     act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
     return (act * u).astype(x.dtype)
 
@@ -641,19 +668,24 @@ def decode_ingest_ref(
     bq: jax.Array | None = None,
     bk: jax.Array | None = None,
     bv: jax.Array | None = None,
+    wq_scale: jax.Array | None = None,
+    wk_scale: jax.Array | None = None,
+    wv_scale: jax.Array | None = None,
 ):
     """Oracle for the fused decode-ingest stage: rmsnorm → QKV → bias →
     rope in one seam. Composes exactly the split chain's expressions in
     the same order (norm, three f32-accumulated GEMMs, bias add, head
     reshape, rope on q/k), so on the XLA backend the fused granularities
     are bitwise equal to split. Returns q (B,1,HQ,Dh), k/v (B,1,HK,Dh).
+    Weight steps (``w*_scale``) dequantize on the f32 accumulators before
+    the bias add, matching the kernel epilogue order.
     """
     b, s, d = x.shape
     h = rmsnorm_ref(x, norm_scale, eps)
     h2 = h.reshape(b * s, d)
-    q = flat_gemm_ref(h2, wq).reshape(b, s, wq.shape[-1])
-    k = flat_gemm_ref(h2, wk).reshape(b, s, wk.shape[-1])
-    v = flat_gemm_ref(h2, wv).reshape(b, s, wv.shape[-1])
+    q = flat_gemm_ref(h2, wq, w_scale=wq_scale).reshape(b, s, wq.shape[-1])
+    k = flat_gemm_ref(h2, wk, w_scale=wk_scale).reshape(b, s, wk.shape[-1])
+    v = flat_gemm_ref(h2, wv, w_scale=wv_scale).reshape(b, s, wv.shape[-1])
     if bq is not None:
         q, k, v = q + bq, k + bk, v + bv
     q = q.reshape(b, s, num_heads, head_dim)
@@ -666,13 +698,17 @@ def decode_ingest_ref(
     return q, k, v
 
 
-def oproj_residual_ref(o: jax.Array, wo: jax.Array,
-                       resid: jax.Array) -> jax.Array:
+def oproj_residual_ref(o: jax.Array, wo: jax.Array, resid: jax.Array,
+                       *, w_scale: jax.Array | None = None) -> jax.Array:
     """Oracle for the fused attention epilogue: ``resid + o @ wo`` — the
     split chain's o_proj GEMM and residual add, same f32 accumulation and
-    operand order. o: (B, 1, HQ*Dh); wo: (HQ*Dh, D); resid: (B, 1, D)."""
+    operand order. o: (B, 1, HQ*Dh); wo: (HQ*Dh, D); resid: (B, 1, D).
+    ``w_scale`` dequantizes on the f32 accumulator before the residual
+    add (kernel epilogue order)."""
     b, s, qd = o.shape
-    out = flat_gemm_ref(o.reshape(b * s, qd), wo).reshape(b, s, wo.shape[-1])
+    out = flat_gemm_ref(
+        o.reshape(b * s, qd), wo, w_scale=w_scale
+    ).reshape(b, s, wo.shape[-1])
     return resid + out
 
 
@@ -685,6 +721,8 @@ def ffn_norm_ref(
     activation: str = "swiglu",
     eps: float = 1e-6,
     fused: bool = True,
+    wg_scale: jax.Array | None = None,
+    wu_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Oracle for the fused mlp-ingest stage: rmsnorm → gate/up GEMMs →
     act(g)*u. ``fused`` selects which split composition to mirror —
@@ -701,10 +739,13 @@ def ffn_norm_ref(
         # mirror ops.fused_ffn: flatten, fused epilogue, reshape back
         return fused_ffn_up_ref(
             h.reshape(b * s, d), w_gate, w_up, activation=activation,
+            wg_scale=wg_scale, wu_scale=wu_scale,
         ).reshape(b, s, f)
     # mirror the unfused mlp_block: each GEMM flattens and reshapes back
     # (ops.matmul's XLA path), activation applied on the 3-D tensors
-    g = flat_gemm_ref(h.reshape(b * s, d), w_gate).reshape(b, s, f)
-    u = flat_gemm_ref(h.reshape(b * s, d), w_up).reshape(b, s, f)
+    g = flat_gemm_ref(
+        h.reshape(b * s, d), w_gate, w_scale=wg_scale).reshape(b, s, f)
+    u = flat_gemm_ref(
+        h.reshape(b * s, d), w_up, w_scale=wu_scale).reshape(b, s, f)
     act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
     return act * u

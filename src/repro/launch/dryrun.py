@@ -408,6 +408,12 @@ def main() -> int:
                          "granularity for the decode cells (the xla "
                          "backend override keeps the granularity; fused "
                          "stages dispatch their jnp oracles)")
+    ap.add_argument("--weight-dtype",
+                    choices=["bf16", "int8", "fp8"], default=None,
+                    help="override the plan's GEMM weight storage dtype "
+                         "(matmul.weight_dtype) for cost analysis — the "
+                         "lowered cells carry the knob so the roofline "
+                         "sees the quantized weight stream")
     args = ap.parse_args()
     if args.plan and not args.arch:
         ap.error("--plan requires --arch (plan provenance pins one config)")
@@ -425,7 +431,8 @@ def main() -> int:
     plans: dict[str, plan_mod.ExecutionPlan] = {}
 
     def plan_for(arch: str) -> Optional[plan_mod.ExecutionPlan]:
-        if not (args.tune or args.plan or args.decode_fusion):
+        if not (args.tune or args.plan or args.decode_fusion
+                or args.weight_dtype):
             return None
         if arch not in plans:
             cfg = configs.get(arch)
@@ -443,6 +450,10 @@ def main() -> int:
                     base, decode_fusion=dataclasses.replace(
                         base.decode_fusion,
                         granularity=args.decode_fusion))
+            if args.weight_dtype is not None:
+                base = dataclasses.replace(
+                    base, matmul=dataclasses.replace(
+                        base.matmul, weight_dtype=args.weight_dtype))
             plans[arch] = base
         return plans[arch]
 

@@ -45,6 +45,15 @@ fp8 (e4m3) matches the footprint with cheaper dequant but coarser
 mantissa. The summary reports bytes/page and total decode-read KV bytes
 so the savings are directly visible against a ``bf16`` run.
 
+``--weight-dtype int8|fp8`` is the weight-side twin: GEMM weight leaves
+are quantized once at load to int8/fp8 codes plus one f32 scale per
+output channel, and every GEMM kernel dequantizes on the f32 accumulator
+in-register, so the bf16 weight slab never exists in HBM. At decode's
+tiny M the weight stream dominates the tick, so int8 halves it (the
+summary's ``weights=`` segment reports stored bytes per tick and total
+decode-read weight bytes against a ``bf16`` run); accuracy is held to
+the same dtype-derived logits guard as ``--kv-dtype``.
+
 ``--decode-fusion split|fused|looped`` overrides the plan's decode-layer
 stage granularity (``DecodeFusionPlan``): ``fused`` collapses
 norm→QKV→rope and o_proj→residual into the fused stage kernels,
@@ -118,6 +127,13 @@ def _parse():
                          "int8/fp8 pages carry per-(page, head) scales and "
                          "are dequantized inside the attention kernels; "
                          "default: the plan's paged.kv_dtype")
+    ap.add_argument("--weight-dtype", choices=["bf16", "int8", "fp8"],
+                    default=None,
+                    help="GEMM weight storage dtype: int8/fp8 weights are "
+                         "quantized at load to codes + per-output-channel "
+                         "f32 scales and dequantized on the kernels' f32 "
+                         "accumulators; default: the plan's "
+                         "matmul.weight_dtype")
     ap.add_argument("--decode-fusion", choices=["split", "fused", "looped"],
                     default=None,
                     help="decode-layer stage granularity: split = the "
@@ -195,6 +211,7 @@ def main() -> int:
                  host_pages=args.host_pages,
                  session_cache=args.session_cache or None,
                  kv_dtype=args.kv_dtype,
+                 weight_dtype=args.weight_dtype,
                  decode_fusion=args.decode_fusion,
                  seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -220,6 +237,10 @@ def main() -> int:
             f"({total_tokens / dt:.1f} tok/s, {eng.ticks} decode ticks, "
             f"{eng.scheduler.name} scheduler, "
             f"fusion={eng.decode_fusion}, "
+            f"weights={eng.weight_dtype} "
+            f"({eng._weight_bytes_per_tick} B/tick, "
+            f"{eng.stats.weight_bytes_decode_read} decode weight bytes "
+            f"read), "
             f"{eng.stats.preemptions} preemptions")
     if eng.pool is not None:
         util = eng.stats.peak_pages_used / eng.pool.num_pages

@@ -10,6 +10,13 @@ Uniform block interfaces:
 ``unroll=False`` uses ``lax.scan`` over the stacked-L params (compact HLO —
 the only while-loop in the whole program, with a known trip count);
 ``unroll=True`` emits a flat python loop for the cost-analysis probes.
+
+Everything here is generic ``jax.tree`` plumbing, which is what lets the
+quantized-weight representation ride through untouched: a GEMM leaf that
+``models/wquant.py`` turned into a ``{"codes", "scale"}`` dict is just
+two stacked leaves ``(L, K, N)`` / ``(L, N)`` to stack/unstack/scan, so
+the looped decode granularity traces the identical scan-body jaxpr
+whether the params are bf16 arrays or (codes, scale) pairs.
 """
 from __future__ import annotations
 

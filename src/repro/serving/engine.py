@@ -96,8 +96,9 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.plan import (DEFAULT_PLAN, FUSION_MODES, KV_DTYPES,
-                             ExecutionPlan)
+                             WEIGHT_DTYPES, ExecutionPlan)
 from repro.kernels import quant
+from repro.models import wquant
 from repro.models.api import get_model
 from repro.models.kvlayout import DenseLayout, KVLayout, PagedLayout, \
     pages_for, pow2_bucket
@@ -156,6 +157,13 @@ class EngineStats:
     #                                  streamed (resident pages x slab
     #                                  bytes) — the paper's decode
     #                                  bandwidth term, at stored width
+    # quantized GEMM weights (bf16-sized unless weight_dtype != "bf16")
+    weight_bytes_decode_read: int = 0  # cumulative GEMM weight bytes
+    #                                  decode ticks streamed: every layer's
+    #                                  projection leaves once per tick,
+    #                                  codes + scales at stored width
+    #                                  (embedding/lm_head excluded — not
+    #                                  per-layer streams)
 
 
 class Engine:
@@ -173,6 +181,7 @@ class Engine:
         scheduler: Union[str, Scheduler] = "fcfs",
         plan: Optional[ExecutionPlan] = None,
         kv_dtype: Optional[str] = None,
+        weight_dtype: Optional[str] = None,
         decode_fusion: Optional[str] = None,
         prefix_sharing: bool = False,
         host_pages: Optional[int] = None,
@@ -197,8 +206,40 @@ class Engine:
                 decode_fusion=dataclasses.replace(
                     self.plan.decode_fusion, granularity=decode_fusion))
         self.decode_fusion = self.plan.decode_fusion.granularity
+        # GEMM weight storage precision: explicit arg wins, else the
+        # plan's tuned matmul.weight_dtype rides along (same precedence
+        # as kv_dtype/decode_fusion). The resolved value lands in the
+        # plan before LayerCtx so describe()/downstream readers agree;
+        # the kernels themselves key off the (codes, scale) leaf
+        # structure, not the knob.
+        if weight_dtype is None:
+            weight_dtype = getattr(self.plan.matmul, "weight_dtype", "bf16")
+        if weight_dtype not in WEIGHT_DTYPES:
+            raise ValueError(
+                f"weight_dtype {weight_dtype!r} not in {WEIGHT_DTYPES}")
+        if weight_dtype == "fp8" and not quant.fp8_supported():
+            raise ValueError(
+                "weight_dtype='fp8' needs ml_dtypes float8_e4m3fn; "
+                "use 'int8' on this runtime")
+        if weight_dtype != self.plan.matmul.weight_dtype:
+            self.plan = dataclasses.replace(
+                self.plan,
+                matmul=dataclasses.replace(self.plan.matmul,
+                                           weight_dtype=weight_dtype))
+        self.weight_dtype = weight_dtype
         self.ctx = LayerCtx(cfg=cfg, plan=self.plan)
+        # quantize-at-load: convert each GEMM weight leaf to a
+        # (codes, scale) pair once, before any trace sees the params.
+        # bf16 leaves the pytree untouched (the bitwise path).
+        if weight_dtype != "bf16":
+            params = wquant.quantize_params(
+                params, quant.spec_for(weight_dtype))
         self.params = params
+        # one decode tick's GEMM weight stream, at stored width (codes +
+        # scales; embedding/lm_head excluded — not per-layer streams)
+        self._weight_bytes_per_tick = (
+            wquant.gemm_weight_bytes(params)
+            if isinstance(params, dict) else 0)
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.scheduler = get_scheduler(scheduler)
@@ -894,6 +935,9 @@ class Engine:
                              for i in self.by_slot)
             self.stats.kv_bytes_decode_read += (
                 pages_read * self._kv_bytes_per_page)
+        # every decode tick streams the full per-layer GEMM weight stack
+        # once, at stored width — the term weight_dtype shrinks
+        self.stats.weight_bytes_decode_read += self._weight_bytes_per_tick
         events = []
         for idx in list(self.by_slot):
             state = self.by_slot[idx]

@@ -89,6 +89,20 @@ def test_catches_invalid_knob_value(tmp_path):
     assert findings and any("schema" in f for f in findings)
 
 
+def test_catches_missing_weight_dtype(tmp_path):
+    def m(doc):
+        del doc["ops"]["matmul"]["weight_dtype"]
+    findings = check_plans.check_plan(_mutate(tmp_path, m))
+    assert any("weight_dtype" in f for f in findings)
+
+
+def test_catches_invalid_weight_dtype(tmp_path):
+    def m(doc):
+        doc["ops"]["matmul"]["weight_dtype"] = "int3"
+    findings = check_plans.check_plan(_mutate(tmp_path, m))
+    assert findings and any("schema" in f for f in findings)
+
+
 def test_catches_missing_decode_fusion(tmp_path):
     def m(doc):
         del doc["ops"]["decode_fusion"]

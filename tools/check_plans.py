@@ -23,6 +23,9 @@ linter runs the same checks ahead of time, over every committed plan:
   * the ``decode_fusion`` op records an explicit ``granularity`` in
     ``FUSION_MODES`` (pre-fusion documents default to split on load —
     same rule: committed artifacts must say what they tuned);
+  * the ``matmul`` op records an explicit ``weight_dtype`` in
+    ``WEIGHT_DTYPES`` (pre-weight-quant documents default to bf16 on
+    load — committed artifacts must say what they tuned);
   * the filename matches ``default_plan_path`` for its provenance.
 
 Exit status 0 = every plan clean, 1 = at least one finding (one line per
@@ -44,7 +47,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 from repro import configs, hardware  # noqa: E402
 from repro.core import plan as plan_mod  # noqa: E402
 from repro.core.plan import (  # noqa: E402
-    FUSION_MODES, KV_DTYPES, PLAN_VERSION, ExecutionPlan, PlanError,
+    FUSION_MODES, KV_DTYPES, PLAN_VERSION, WEIGHT_DTYPES, ExecutionPlan,
+    PlanError,
 )
 
 
@@ -84,6 +88,14 @@ def check_plan(path: str) -> list:
     elif paged_doc["kv_dtype"] not in KV_DTYPES:
         findings.append(f"kv_dtype {paged_doc['kv_dtype']!r} "
                         f"not in {KV_DTYPES}")
+
+    matmul_doc = doc.get("ops", {}).get("matmul", {})
+    if "weight_dtype" not in matmul_doc:
+        findings.append("matmul op missing explicit weight_dtype "
+                        "(legacy document — retune)")
+    elif matmul_doc["weight_dtype"] not in WEIGHT_DTYPES:
+        findings.append(f"weight_dtype {matmul_doc['weight_dtype']!r} "
+                        f"not in {WEIGHT_DTYPES}")
 
     fusion_doc = doc.get("ops", {}).get("decode_fusion", {})
     if "granularity" not in fusion_doc:
